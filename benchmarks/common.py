@@ -1,0 +1,28 @@
+"""Shared harness bits for the per-paper-table benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def save(name: str, payload: Any) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def banner(title: str) -> None:
+    print(f"\n=== {title} {'=' * max(0, 66 - len(title))}")
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,52 @@
+"""Paper Fig. 5: absorption of the three hardware-characterization benchmarks
+(STREAM, lat_mem_rd, HACCmk) under fp / l1 / memory noise, measured on the
+host — the differential signatures that validate the method:
+
+  STREAM      absorbs fp & l1 noise, NOT memory noise  (bandwidth-bound)
+  lat_mem_rd  absorbs substantial memory noise          (latency-bound)
+  HACCmk      absorbs l1 noise, NOT fp noise            (compute-bound)
+"""
+from __future__ import annotations
+
+from benchmarks.common import banner, save
+from repro.bench.kernels import haccmk_region, lat_mem_rd_region, stream_region
+from repro.core import Controller, classify
+
+
+def run(quick: bool = True) -> dict:
+    banner("Fig 5 — STREAM / lat_mem_rd / HACCmk absorption signatures")
+    scale = 1 if quick else 2
+    regions = {
+        "stream": stream_region(n=(1 << 22) * scale),
+        # chase table must exceed the LLC so every hop is a genuine DRAM
+        # miss — that slack is what memory noise gets absorbed into
+        "lat_mem_rd": lat_mem_rd_region(table_len=(1 << 22) * scale,
+                                        n_iter=1024 * scale),
+        "haccmk": haccmk_region(n_iter=60_000 * scale),
+    }
+    ctl = Controller(reps=3 if quick else 5, verify_payload=False)
+    rows = {}
+    for name, region in regions.items():
+        rep = ctl.characterize(region, modes=("fp_add", "l1_ld", "mem_ld"))
+        rows[name] = {"abs": rep.absorptions(),
+                      "abs_rel": rep.absorptions(relative=True),
+                      "bottleneck": rep.bottleneck.label,
+                      "confidence": rep.bottleneck.confidence}
+        print(rep.summary())
+
+    sig = {
+        "stream_is_bandwidth": rows["stream"]["bottleneck"] == "bandwidth",
+        "latmem_absorbs_memory": rows["lat_mem_rd"]["abs"]["mem_ld"]
+        > rows["stream"]["abs"]["mem_ld"],
+        "haccmk_fp_lowest": rows["haccmk"]["abs"]["fp_add"]
+        <= min(rows["haccmk"]["abs"]["l1_ld"],
+               rows["stream"]["abs"]["fp_add"]),
+    }
+    print("signatures:", sig)
+    out = {"rows": rows, "signatures": sig}
+    save("fig5_hwchar", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,48 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5,fig7]
+
+Writes per-table JSON to experiments/bench/ and prints the summary tables.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="larger sizes / more reps (slower, steadier)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset, e.g. fig5,table3")
+    args = ap.parse_args()
+
+    from benchmarks import (fig4_matmul, fig5_hwchar, fig6_overlap,
+                            fig7_spmxv, table1_systems, table3_decan,
+                            table4_memsys)
+
+    suite = {
+        "fig4": fig4_matmul.run,
+        "fig5": fig5_hwchar.run,
+        "table1": table1_systems.run,
+        "table3": table3_decan.run,
+        "fig6": fig6_overlap.run,
+        "fig7": fig7_spmxv.run,
+        "table4": table4_memsys.run,
+    }
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    t_all = time.time()
+    results = {}
+    for name, fn in suite.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        results[name] = fn(quick=not args.full)
+        print(f"[{name} done in {time.time()-t0:.1f}s]")
+    print(f"\nall benchmarks done in {time.time()-t_all:.1f}s "
+          f"-> experiments/bench/*.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Paper Table 3: the four FP/LS overlap scenarios, analyzed by BOTH methods
+— DECAN-style decremental variants (Sat = T(VAR)/T(REF)) and incremental
+noise injection (absorption).
+
+Scenario kernels (separable FP / LS parts):
+
+  1) compute-bound    deep nonlinear FMA chains + token L1 loads
+  2) data-bound       STREAM-triad loads + shallow chains (chains fully
+                      hidden under the DRAM stream)
+  3) full-overlap     triad + chains balanced to equal stand-alone times
+  4) limited-overlap  scattered-miss loads seeding the chains (serialized)
+
+Microarchitectural caveat (measured, documented): on this container's
+narrow core, the balanced case-3 kernel *behaves* like case 4 — once the FP
+stream saturates the issue width nothing else co-issues, so REF ~= FP + LS
+instead of max(FP, LS). The noise+DECAN combination diagnoses exactly that:
+absorption ~0 in both modes + DECAN ruling out full overlap -> shared
+upstream (issue-width/frontend) bottleneck — the same resolution the paper
+demonstrates in Fig. 6. On wide server cores (the paper's hardware) the FP
+ports saturate before issue width and genuine case-3 appears.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import banner, save
+from repro.core import (Controller, DecanTarget, classify,
+                        cross_check_with_decan, loop_region, run_decan)
+
+N = 1 << 22
+CHUNK = 512
+N_CH = 4
+
+
+def _chains(xs, depth):
+    out = list(xs)
+    for j in range(N_CH):
+        y = out[j]
+        for _ in range(depth):
+            y = y + y * y * 1e-9    # nonlinear: XLA cannot fold the chain
+        out[j] = y
+    return out
+
+
+def _kernel(kind: str, depth: int, ls: bool, fp: bool, n_iter: int,
+            noise=None, k: int = 0):
+    """kind: token (2 L1 loads) | stream (triad chunk) | scatter (4 misses,
+    'dep' variant seeds the chains with loaded values)."""
+    dependent = kind == "scatter_dep"
+
+    def fn(a, b, c, x0, *nc):
+        def body(i, st):
+            cb, accs, xs = st[0], list(st[1]), list(st[2])
+            ncs = st[3:]
+            if ls:
+                if kind == "stream":
+                    off = (i * CHUNK) % (N - CHUNK)
+                    av = jax.lax.dynamic_slice(a, (off,), (CHUNK,))
+                    bv = jax.lax.dynamic_slice(b, (off,), (CHUNK,))
+                    cb = jax.lax.dynamic_update_slice(cb, av + 3.0 * bv, (off,))
+                elif kind == "token":
+                    for j in range(2):
+                        off = ((i * 2 + j) * 16) % 4096   # L1-resident window
+                        accs[j] = accs[j] + jax.lax.dynamic_slice(a, (off,), (8,))
+                else:  # scatter / scatter_dep
+                    for j in range(4):
+                        off = ((i * 4 + j) * 40_503) % (N - 8)
+                        accs[j % N_CH] = accs[j % N_CH] + \
+                            jax.lax.dynamic_slice(a, (off,), (8,))
+            if fp:
+                seed = [accs[j] * 1e-12 + xs[j] if (dependent and ls) else xs[j]
+                        for j in range(N_CH)]
+                xs = _chains(seed, depth)
+            if noise is not None:
+                ncs = (noise.emit(ncs[0], k, i),)
+            return (cb, tuple(accs), tuple(xs), *ncs)
+
+        accs0 = tuple(jnp.zeros((8,), jnp.float32) for _ in range(N_CH))
+        xs0 = tuple(x0 + j for j in range(N_CH))
+        st = jax.lax.fori_loop(0, n_iter, body, (c, accs0, xs0, *nc))
+        out = jnp.sum(st[0][:8]) + sum(jnp.sum(v) for v in st[1]) \
+            + sum(jnp.sum(v) for v in st[2])
+        if noise is not None:
+            return out, noise.finalize(st[3])
+        return out
+
+    return jax.jit(fn)
+
+
+SCENARIOS = {
+    # name: (kind, chain_depth, n_iter)
+    "compute-bound": ("token", 24, 25_000),
+    "data-bound": ("stream", 4, N // CHUNK),
+    "full-overlap": ("stream", 192, N // CHUNK),
+    "limited-overlap": ("scatter_dep", 24, 20_000),
+}
+
+EXPECTED = {  # paper Table 3 readouts (noise column), on this host
+    "compute-bound": "fp low / l1 high",
+    "data-bound": "mem low / fp high",
+    "full-overlap": "both ~0 (degrades to case 4 on a narrow core)",
+    "limited-overlap": "moderate/ambiguous",
+}
+
+
+def run(quick: bool = True) -> dict:
+    banner("Table 3 — DECAN (decremental) vs noise injection (incremental)")
+    a = jnp.ones((N,), jnp.float32)
+    b = jnp.full((N,), 2.0, jnp.float32)
+    c = jnp.zeros((N,), jnp.float32)
+    x0 = jnp.linspace(0.1, 0.9, 8, dtype=jnp.float32)
+    ctl = Controller(reps=3 if quick else 5, verify_payload=False)
+    rows = {}
+    for name, (kind, depth, n_iter) in SCENARIOS.items():
+        n_it = n_iter if quick else n_iter * 2
+
+        def build(fp, ls, kind=kind, depth=depth, n_it=n_it):
+            return _kernel(kind, depth, ls, fp, n_it)
+
+        dec = run_decan(DecanTarget(name, build, lambda: (a, b, c, x0)),
+                        reps=3 if quick else 5)
+
+        def make(noise, k, kind=kind, depth=depth, n_it=n_it):
+            return _kernel(kind, depth, True, True, n_it, noise=noise, k=k)
+
+        region = loop_region(f"t3_{name}", make, lambda: (a, b, c, x0))
+        rep = ctl.characterize(region, modes=("fp_add", "l1_ld"))
+        noise_label = classify(rep.absorptions())
+        combined = cross_check_with_decan(noise_label, dec.sat_fp, dec.sat_ls)
+        rows[name] = {
+            "sat_fp": dec.sat_fp, "sat_ls": dec.sat_ls,
+            "decan_scenario": dec.scenario(),
+            "abs_fp": rep.results["fp_add"].fit.k1,
+            "abs_l1": rep.results["l1_ld"].fit.k1,
+            "noise_label": noise_label.label,
+            "combined_label": combined.label,
+            "expected": EXPECTED[name],
+        }
+        r = rows[name]
+        print(f"  {name:16s} DECAN: Sat_FP={r['sat_fp']:.2f} "
+              f"Sat_LS={r['sat_ls']:.2f} -> {r['decan_scenario']:16s} | "
+              f"noise: Abs_FP={r['abs_fp']:5.1f} Abs_L1={r['abs_l1']:5.1f} "
+              f"-> {r['noise_label']:9s} | combined: {r['combined_label']}")
+    save("table3_decan", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,30 @@
+"""Quickstart: the paper's technique in 30 lines.
+
+Characterize two kernels with noise injection — a memory-bound STREAM triad
+and a compute-bound HACCmk force kernel — and watch the absorption metric
+separate them (paper Fig. 5 in miniature).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.bench.kernels import haccmk_region, stream_region
+from repro.core import Controller
+
+ctl = Controller(reps=3)
+
+print("memory-bound kernel (STREAM triad):")
+rep = ctl.characterize(stream_region(n=1 << 22),
+                       modes=("fp_add", "l1_ld", "mem_ld"))
+print(rep.summary())
+
+print("\ncompute-bound kernel (HACCmk):")
+rep = ctl.characterize(haccmk_region(n_iter=60_000),
+                       modes=("fp_add", "l1_ld", "mem_ld"))
+print(rep.summary())
+
+print("""
+Reading the signatures (paper §3.2):
+  - the triad absorbs dozens of fp/l1 patterns but no memory-stream noise
+    -> its bottleneck is memory bandwidth; buying FLOPS won't help.
+  - HACCmk absorbs data-access noise but fp noise costs immediately
+    -> compute-bound; vectorize or reduce flops.
+""")

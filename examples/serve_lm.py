@@ -1,0 +1,37 @@
+"""Serving example: batched generation with continuous batching on a small
+dense LM — prefill builds the KV cache in one pass, finished slots are
+refilled from the queue without stalling the decode batch.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.model import build
+from repro.serve import ServeEngine
+
+cfg = get_smoke_config("deepseek_coder_33b")
+api = build(cfg)
+params = api.init(jax.random.PRNGKey(0))
+
+engine = ServeEngine(api, params, n_slots=4, max_seq=128, temperature=0.0)
+
+rng = np.random.RandomState(7)
+requests = []
+for i in range(10):
+    plen = int(rng.randint(2, 16))
+    prompt = rng.randint(0, cfg.vocab_size, size=plen).tolist()
+    requests.append(engine.submit(prompt, max_new=24))
+
+t0 = time.perf_counter()
+engine.run()
+dt = time.perf_counter() - t0
+total = sum(len(r.out) for r in requests)
+print(f"served {len(requests)} requests on 4 slots: {total} tokens "
+      f"in {dt:.2f}s ({total/dt:.1f} tok/s, continuous batching)")
+for r in requests[:3]:
+    print(f"  req{r.uid}: prompt[:4]={r.prompt[:4]} -> out[:8]={r.out[:8]}")
+assert all(r.done for r in requests)

@@ -1,0 +1,7 @@
+from repro.bench.kernels import (  # noqa: F401
+    haccmk_region,
+    lat_mem_rd_region,
+    matmul_region,
+    spmxv_region,
+    stream_region,
+)

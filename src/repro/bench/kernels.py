@@ -1,0 +1,222 @@
+"""Host ports of the paper's validation kernels (§4), each written as a
+``fori_loop`` with a loop-body noise slot so measured absorption reflects the
+host CPU's real out-of-order overlap (core.loopnoise).
+
+  stream_region     STREAM triad       — memory-bandwidth-bound
+  lat_mem_rd_region LMBench lat_mem_rd — memory-latency-bound (pointer chase)
+  haccmk_region     Coral HACCmk       — FMA-throughput-bound force kernel
+  spmxv_region      EPI SPMXV (CSR->ELL) with swap probability q (§6)
+  matmul_region     Fig. 4 dense matmul, naive ("-O0": gather/scalar-heavy)
+                    or fused ("-O3": one jnp.dot)
+
+Every region returns a core.controller.RegionTarget ready for
+Controller.characterize().
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import RegionTarget, loop_region
+from repro.kernels.spmv_ell.ref import make_band_ell
+
+# ---------------------------------------------------------------------------
+# STREAM triad: c[i] = a[i] + s*b[i] over buffers >> LLC
+# ---------------------------------------------------------------------------
+
+
+def stream_region(n: int = 1 << 23, chunk: int = 512) -> RegionTarget:
+    def make(noise, k):
+        def fn(a, b, c, *nc):
+            def body(i, st):
+                cb, *ncs = st
+                off = i * chunk
+                av = jax.lax.dynamic_slice(a, (off,), (chunk,))
+                bv = jax.lax.dynamic_slice(b, (off,), (chunk,))
+                cb = jax.lax.dynamic_update_slice(cb, av + 3.0 * bv, (off,))
+                if noise is not None:
+                    ncs = (noise.emit(ncs[0], k, i),)
+                return (cb, *ncs)
+            st = jax.lax.fori_loop(0, n // chunk, body, (c, *nc))
+            return (st[0], noise.finalize(st[1])) if noise is not None else st[0]
+        return jax.jit(fn)
+
+    a = jnp.ones((n,), jnp.float32)
+    b = jnp.full((n,), 2.0, jnp.float32)
+    c = jnp.zeros((n,), jnp.float32)
+    return loop_region("stream_triad", make, lambda: (a, b, c), body_size=5)
+
+
+# ---------------------------------------------------------------------------
+# lat_mem_rd: serially dependent pointer chase (the kernel IS a latency probe)
+# ---------------------------------------------------------------------------
+
+
+def lat_mem_rd_region(table_len: int = 1 << 21, hops_per_iter: int = 8,
+                      n_iter: int = 4096, seed: int = 1) -> RegionTarget:
+    perm = np.random.RandomState(seed).permutation(table_len).astype(np.int32)
+    tbl = np.empty(table_len, np.int32)
+    tbl[perm[:-1]] = perm[1:]
+    tbl[perm[-1]] = perm[0]
+    table = jnp.asarray(tbl)
+
+    def make(noise, k):
+        def fn(table, idx0, *nc):
+            def body(i, st):
+                idx, *ncs = st
+                for _ in range(hops_per_iter):
+                    idx = jax.lax.dynamic_slice(table, (idx,), (1,))[0]
+                if noise is not None:
+                    ncs = (noise.emit(ncs[0], k, i),)
+                return (idx, *ncs)
+            st = jax.lax.fori_loop(0, n_iter, body, (idx0, *nc))
+            out = st[0].astype(jnp.float32)
+            return (out, noise.finalize(st[1])) if noise is not None else out
+        return jax.jit(fn)
+
+    return loop_region("lat_mem_rd", make,
+                       lambda: (table, jnp.int32(int(perm[0]))),
+                       body_size=hops_per_iter)
+
+
+# ---------------------------------------------------------------------------
+# HACCmk: short-range force kernel — FMA-throughput bound. Four independent
+# accumulator chains of 8-wide vectors saturate the FMA ports (the paper's
+# compute-bound reference).
+# ---------------------------------------------------------------------------
+
+
+def haccmk_region(n_iter: int = 120_000, width: int = 8) -> RegionTarget:
+    N_CH = 6   # 6 chains x 5 ops = 30 ops/iter: FMA-throughput bound (not
+    # latency-bound), so injected fp patterns cost immediately
+
+    def make(noise, k):
+        def fn(x, *nc):
+            def body(i, st):
+                accs = list(st[0])
+                ncs = st[1:]
+                for j in range(N_CH):
+                    a = accs[j]
+                    # f(r) = r*(c1 + r2*(c2 + r2*c3)) — HACC poly kernel
+                    r2 = a * a
+                    f = a * (0.5 + r2 * (0.25 + r2 * 0.125))
+                    accs[j] = a + f * 1e-6
+                if noise is not None:
+                    ncs = (noise.emit(ncs[0], k, i),)
+                return (tuple(accs), *ncs)
+            accs0 = tuple(x + j for j in range(N_CH))
+            st = jax.lax.fori_loop(0, n_iter, body, (accs0, *nc))
+            out = sum(jnp.sum(a) for a in st[0])
+            return (out, noise.finalize(st[1])) if noise is not None else out
+        return jax.jit(fn)
+
+    x = jnp.linspace(0.1, 0.9, width, dtype=jnp.float32)
+    return loop_region("haccmk", make, lambda: (x,), body_size=5 * N_CH)
+
+
+# ---------------------------------------------------------------------------
+# SPMXV (paper §6): ELL spmv, swap probability q controls gather locality
+# ---------------------------------------------------------------------------
+
+
+def spmxv_region(n: int = 1 << 20, nnz_per_row: int = 16, q: float = 0.0,
+                 rows_per_iter: int = 64, seed: int = 0,
+                 name: str = "") -> RegionTarget:
+    vals, cols = make_band_ell(n, nnz_per_row, q, seed=seed)
+    x = jnp.asarray(np.random.RandomState(seed + 1)
+                    .standard_normal(n).astype(np.float32))
+    L = nnz_per_row
+
+    def make(noise, k):
+        def fn(vals, cols, x, y, *nc):
+            def body(i, st):
+                yb, *ncs = st
+                r0 = i * rows_per_iter
+                vb = jax.lax.dynamic_slice(vals, (r0, 0), (rows_per_iter, L))
+                cb = jax.lax.dynamic_slice(cols, (r0, 0), (rows_per_iter, L))
+                g = jnp.take(x, cb, axis=0)          # the q-irregular gather
+                yv = jnp.sum(vb * g, axis=1)
+                yb = jax.lax.dynamic_update_slice(yb, yv, (r0,))
+                if noise is not None:
+                    ncs = (noise.emit(ncs[0], k, i),)
+                return (yb, *ncs)
+            st = jax.lax.fori_loop(0, n // rows_per_iter, body, (y, *nc))
+            return (st[0], noise.finalize(st[1])) if noise is not None else st[0]
+        return jax.jit(fn)
+
+    y = jnp.zeros((n,), jnp.float32)
+    return loop_region(name or f"spmxv_q{q}", make,
+                       lambda: (vals, cols, x, y), body_size=6)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: dense matmul, naive vs fused
+# ---------------------------------------------------------------------------
+
+
+def matmul_region(n: int = 192, optimized: bool = False) -> RegionTarget:
+    a = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+
+    # Both variants run k-step rank-1 updates. "-O0" (no mem2reg): ONE
+    # output row round-trips through memory every k-step — loads/stores
+    # dominate. "-O3" (register blocking): each loaded b-row feeds EIGHT
+    # independent register-resident accumulator rows — FMA-port bound, the
+    # structure a real optimizer emits. Same b traffic per iteration; the
+    # register discipline alone flips the absorption signature (Fig. 4).
+    R = 8
+
+    if optimized:
+        repeats = 16
+
+        def make(noise, k):
+            def fn(a, b, *nc):
+                def body(i, st):
+                    accs = list(st[0])
+                    ncs = st[1:]
+                    kk = i % n
+                    bv = jax.lax.dynamic_slice(b, (kk, 0), (1, n))
+                    for r in range(R):
+                        av = jax.lax.dynamic_slice(a, (r, kk), (1, 1))
+                        accs[r] = accs[r] + av * bv   # 8 independent chains
+                    if noise is not None:
+                        ncs = (noise.emit(ncs[0], k, i),)
+                    return (tuple(accs), *ncs)
+                accs0 = tuple(jnp.zeros((1, n), jnp.float32)
+                              for _ in range(R))
+                st = jax.lax.fori_loop(0, repeats * n, body, (accs0, *nc))
+                o = sum(jnp.sum(acc) for acc in st[0])
+                return (o, noise.finalize(st[1])) if noise is not None else o
+            return jax.jit(fn)
+
+        return loop_region("matmul_O3", make, lambda: (a, b),
+                           body_size=2 * R + 1)
+
+    repeats = 32
+    UNROLL = 8
+
+    def make(noise, k):
+        def fn(a, b, out, *nc):
+            def body(i, st):
+                ob, *ncs = st
+                kk = (i * UNROLL) % n
+                for u in range(UNROLL):
+                    av = jax.lax.dynamic_slice(a, (0, kk + u), (1, 1))
+                    bv = jax.lax.dynamic_slice(b, (kk + u, 0), (1, n))
+                    cur = jax.lax.dynamic_slice(ob, (0, 0), (1, n))  # reload
+                    cur = cur + av * bv
+                    ob = jax.lax.dynamic_update_slice(ob, cur, (0, 0))  # store
+                if noise is not None:
+                    ncs = (noise.emit(ncs[0], k, i),)
+                return (ob, *ncs)
+            st = jax.lax.fori_loop(0, repeats * n // UNROLL, body, (out, *nc))
+            o = jnp.sum(st[0])
+            return (o, noise.finalize(st[1])) if noise is not None else o
+        return jax.jit(fn)
+
+    out = jnp.zeros((1, n), jnp.float32)
+    return loop_region("matmul_O0", make, lambda: (a, b, out),
+                       body_size=5 * UNROLL)

@@ -1,0 +1,32 @@
+"""The paper's contribution: noise injection for bottleneck analysis, in JAX.
+
+Two injection sites (DESIGN.md §2):
+  - loop-level  (core.loopnoise + core.controller.loop_region): patterns
+    emitted inside the target loop body — the LLVM-pass analogue; measured
+    absorption on the host is genuine OoO absorption.
+  - graph-level (core.noise + core.injector): patterns injected around a whole
+    jitted train/serve step — used with payload verification and the analytic
+    saturation model for the TPU dry-run target.
+"""
+from repro.core.absorption import (  # noqa: F401
+    AbsorptionCurve,
+    AbsorptionFit,
+    absorption,
+    cluster_times,
+    fit_three_phase,
+    measure,
+    sweep,
+)
+from repro.core.analytic import (  # noqa: F401
+    StepTerms,
+    compare_memory_systems,
+    predict_absorption,
+    predict_curve,
+)
+from repro.core.classifier import BottleneckReport, classify, cross_check_with_decan  # noqa: F401
+from repro.core.controller import Controller, RegionReport, RegionTarget, loop_region  # noqa: F401
+from repro.core.decan import DecanResult, DecanTarget, run_decan  # noqa: F401
+from repro.core.injector import inject, init_state, probe_step, verify_semantics  # noqa: F401
+from repro.core.loopnoise import LoopNoise, make_loop_modes, noisy_loop  # noqa: F401
+from repro.core.noise import NOISE_SCOPE, NoiseMode, NoiseScale, PatternCost, make_modes  # noqa: F401
+from repro.core.payload import InjectionReport, analyze_injection, body_size  # noqa: F401

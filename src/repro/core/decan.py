@@ -1,0 +1,77 @@
+"""DECAN-style decremental analysis — the paper's comparison baseline (§5.2).
+
+DECAN *removes* instruction classes (FP variant keeps only FP, LS variant
+keeps only loads/stores) and defines Sat(VAR) = T(VAR)/T(REF): a variant
+running much faster than the reference means the removed class was saturated.
+
+Here a decremental target is a kernel builder parameterized by which parts to
+keep — removal happens at trace time, so the "binary patching" is free and,
+unlike MADRAS, trivially portable (the paper's criticism of DECAN's
+portability is structural to binary patching, not to the idea). The semantics
+caveat the paper raises (removal breaks dataflow) is handled the same way
+DECAN does: variants keep the control flow and write to dead buffers.
+
+Used by benchmarks/table3 (four overlap scenarios) and fig6 (the
+frontend-bottleneck case where noise injection and DECAN must be combined).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.absorption import measure
+
+
+@dataclasses.dataclass(frozen=True)
+class DecanTarget:
+    """A kernel expressed with separable FP and LS parts.
+
+    ``build(fp, ls)`` -> jitted callable; ``args_for()`` -> its arguments.
+    build(True, True) is the reference; (True, False) the FP variant
+    (memory ops removed); (False, True) the LS variant (FP ops removed).
+    """
+    name: str
+    build: Callable[[bool, bool], Callable]
+    args_for: Callable[[], tuple]
+
+
+@dataclasses.dataclass
+class DecanResult:
+    name: str
+    t_ref: float
+    t_fp: float          # LS removed
+    t_ls: float          # FP removed
+
+    @property
+    def sat_fp(self) -> float:
+        """T(FP)/T(REF): low -> LS (the removed class) was the bottleneck...
+        Note the paper's convention: Sat(VAR)=T(VAR)/T(REF) for variant VAR
+        which KEEPS that class. Sat_FP ~ 1 -> FP stream alone reproduces the
+        run time -> FP saturated."""
+        return self.t_fp / self.t_ref
+
+    @property
+    def sat_ls(self) -> float:
+        return self.t_ls / self.t_ref
+
+    def scenario(self, *, close: float = 0.80, fast: float = 0.6) -> str:
+        """Table 3 scenarios."""
+        fp, ls = self.sat_fp, self.sat_ls
+        if fp >= close and ls < fast:
+            return "compute-bound"         # case 1: FP variant ~ ref
+        if ls >= close and fp < fast:
+            return "data-bound"            # case 2
+        if fp >= close and ls >= close:
+            return "full-overlap"          # case 3
+        if fp < close and ls < close:
+            return "limited-overlap"       # case 4 (ambiguous for DECAN)
+        return "mixed"
+
+
+def run_decan(target: DecanTarget, *, reps: int = 5, inner: int = 1
+              ) -> DecanResult:
+    args = target.args_for()
+    t_ref = measure(target.build(True, True), args, reps=reps, inner=inner)
+    t_fp = measure(target.build(True, False), args, reps=reps, inner=inner)
+    t_ls = measure(target.build(False, True), args, reps=reps, inner=inner)
+    return DecanResult(target.name, t_ref, t_fp, t_ls)

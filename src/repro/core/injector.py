@@ -1,0 +1,108 @@
+"""Graph-level noise injection — wrap a whole jitted step (train/serve) with
+k patterns of a noise mode.
+
+This is the coarse-grained injection site: noise and step co-exist in one XLA
+program, competing for the same chip resources under XLA's static schedule
+(the TPU's "absorber"; DESIGN.md §6.3). The noise state is threaded through
+the wrapped step so buffers are allocated once and patterns chain across
+calls; the scalar aux output is the ``volatile`` analogue (DCE-proof).
+
+Semantics preservation is by construction: noise reads/writes only its own
+state (R_n ∩ R_s = ∅) and the original outputs are returned untouched —
+tests assert bit-identical outputs for every k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import payload as payload_mod
+from repro.core.absorption import (DEFAULT_KS, AbsorptionCurve, AbsorptionFit,
+                                   absorption, sweep)
+from repro.core.noise import NoiseMode
+
+
+def inject(step_fn: Callable, mode: NoiseMode, k: int) -> Callable:
+    """Return ``noisy(noise_state, *args, **kw) -> (out, aux, new_state)``.
+
+    ``out`` is bit-identical to ``step_fn(*args, **kw)``; ``aux`` is the
+    DCE-proof noise scalar; ``new_state`` feeds the next call so noise
+    chains persist across steps.
+    """
+    def noisy(noise_state, *args, **kw):
+        out = step_fn(*args, **kw)
+        aux, new_state = mode.apply(noise_state, k)
+        # barrier: the noise must not be sunk after the step's outputs are
+        # ready nor hoisted before its inputs — keep them in one schedule.
+        out, aux = jax.lax.optimization_barrier((out, aux))
+        return out, aux, new_state
+
+    return noisy
+
+
+def init_state(mode: NoiseMode, rng: Optional[jax.Array] = None):
+    return mode.make_state(rng if rng is not None else jax.random.PRNGKey(0))
+
+
+@dataclasses.dataclass
+class StepProbe:
+    """Measured + statically-verified absorption of one step × one mode."""
+    mode: str
+    curve: AbsorptionCurve
+    fit: AbsorptionFit
+    injection: payload_mod.InjectionReport
+
+
+def probe_step(step_fn: Callable, args: tuple, mode: NoiseMode, *,
+               ks: Sequence[int] = DEFAULT_KS, reps: int = 5,
+               tol: float = 0.05, verify_payload: bool = True,
+               donate_state: bool = False) -> StepProbe:
+    """Sweep k for ``mode`` against ``step_fn(*args)`` (measured on the host
+    backend) and statically verify the payload survived XLA optimization."""
+    state0 = init_state(mode)
+
+    def build(k: int):
+        fn = inject(step_fn, mode, k)
+        return jax.jit(fn, donate_argnums=(0,) if donate_state else ())
+
+    curve = sweep(build, mode=mode.name, ks=ks,
+                  args_for=lambda k: (state0, *args), reps=reps)
+    fit = absorption(curve, tol=tol)
+
+    inj = None
+    if verify_payload:
+        k_chk = max(8, curve.ks[-1] // 2) if len(curve.ks) > 1 else 8
+        compiled = jax.jit(inject(step_fn, mode, k_chk)).lower(
+            state0, *args).compile()
+        inj = payload_mod.analyze_injection(
+            compiled.as_text(), mode=mode.name, target=mode.target,
+            expected=k_chk)
+    return StepProbe(mode=mode.name, curve=curve, fit=fit, injection=inj)
+
+
+def verify_semantics(step_fn: Callable, args: tuple, mode: NoiseMode,
+                     k: int = 8, *, rtol: float = 0.0, atol: float = 0.0
+                     ) -> bool:
+    """Paper §2.3 property: injection must not change program semantics.
+    Checks the wrapped output equals the clean output (bitwise by default)."""
+    clean = jax.jit(step_fn)(*args)
+    state0 = init_state(mode)
+    noisy_out, _, _ = jax.jit(inject(step_fn, mode, k))(state0, *args)
+    ok = True
+
+    def chk(a, b):
+        nonlocal ok
+        import numpy as np
+        a = np.asarray(a)
+        b = np.asarray(b)
+        if rtol == 0.0 and atol == 0.0:
+            ok = ok and bool((a == b).all() or
+                             (np.isnan(a) & np.isnan(b)).all())
+        else:
+            ok = ok and bool(np.allclose(a, b, rtol=rtol, atol=atol))
+
+    jax.tree.map(chk, clean, noisy_out)
+    return ok

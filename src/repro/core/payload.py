@@ -1,0 +1,139 @@
+"""Static payload/overhead verification (paper §2.3).
+
+The paper splits injected instructions into *payload* (the useful noise) and
+*overhead* (spills / setup), computed by statically analyzing the compiler's
+output, "ensuring that noise did not produce unexpected and significant side
+effects that may bias analysis". Here the compiler is XLA: we re-parse the
+*optimized* HLO and count surviving instructions whose ``op_name`` metadata
+carries the ``noise_pattern`` scope tag.
+
+Graph-level noise cannot spill registers, but XLA can fuse, dedup (CSE), or
+reschedule patterns — the exact analogue of "did my noise survive -O3". A
+``survival_fraction`` < 1 means patterns were merged and absorption readings
+for that (code, mode, k) are biased; the controller re-emits with more chains.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.noise import NOISE_SCOPE
+from repro.hlo.parse import Instr, nesting_multipliers, find_entry, parse_module
+
+# Opcodes that are pure plumbing, never counted as payload or overhead.
+_BOOKKEEPING = frozenset({
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "copy", "broadcast", "reshape", "transpose", "iota", "after-all",
+    "bitcast-convert",
+})
+
+# payload opcode families per noise-mode target
+PAYLOAD_OPS = {
+    "compute": {"add", "multiply", "subtract", "dot", "convolution"},
+    "l1": {"dynamic-slice", "gather", "slice"},
+    "vmem": {"dynamic-slice", "gather", "slice", "add"},
+    "memory": {"dynamic-slice", "gather", "slice"},
+    "latency": {"dynamic-slice", "gather"},
+    "ici": {"all-reduce", "all-gather", "all-to-all", "reduce-scatter",
+            "collective-permute"},
+}
+
+
+@dataclasses.dataclass
+class InjectionReport:
+    mode: str
+    target: str
+    expected: int              # k patterns requested (static count)
+    payload: int               # surviving payload ops (static)
+    overhead: int              # surviving non-payload noise ops
+    payload_dynamic: int       # payload weighted by loop trip counts
+    body_ops: int              # non-noise ops in the injected loop body |l1.l2|
+
+    @property
+    def survival_fraction(self) -> float:
+        return self.payload / self.expected if self.expected else 1.0
+
+    @property
+    def overhead_fraction(self) -> float:
+        tot = self.payload + self.overhead
+        return self.overhead / tot if tot else 0.0
+
+    def ok(self, min_survival: float = 0.9, max_overhead: float = 0.5) -> bool:
+        return (self.survival_fraction >= min_survival
+                and self.overhead_fraction <= max_overhead)
+
+
+def _is_noise(ins: Instr) -> bool:
+    return NOISE_SCOPE in ins.op_name
+
+
+def analyze_injection(compiled_text: str, *, mode: str, target: str,
+                      expected: int,
+                      fused_inner: bool = True) -> InjectionReport:
+    """Count surviving noise ops in optimized HLO.
+
+    ``fused_inner``: on CPU, noise ends up inside fusion computations whose
+    instructions are printed as separate computations — count those (the real
+    machine ops), not the fusion wrappers.
+    """
+    comps = parse_module(compiled_text)
+    entry = find_entry(comps, compiled_text)
+    mult = nesting_multipliers(comps, entry)
+    pay_ops = PAYLOAD_OPS.get(target, PAYLOAD_OPS["compute"])
+
+    payload = overhead = 0
+    payload_dyn = 0
+    noisy_comps: set[str] = set()
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if not _is_noise(ins):
+                continue
+            if ins.opcode in _BOOKKEEPING or ins.opcode == "fusion":
+                continue
+            noisy_comps.add(cname)
+            if ins.opcode in pay_ops:
+                payload += 1
+                payload_dyn += mult.get(cname, 1)
+            else:
+                overhead += 1
+
+    # |l1.l2|: non-noise, non-bookkeeping ops in computations where noise
+    # landed (= the target loop body after optimization).
+    body_ops = 0
+    for cname in noisy_comps:
+        for ins in comps[cname]:
+            if _is_noise(ins) or ins.opcode in _BOOKKEEPING:
+                continue
+            body_ops += 1
+
+    return InjectionReport(mode=mode, target=target, expected=expected,
+                           payload=payload, overhead=overhead,
+                           payload_dynamic=payload_dyn, body_ops=body_ops)
+
+
+def body_size(compiled_text: str, *, computation_hint: Optional[str] = None
+              ) -> int:
+    """Instruction count of the hottest loop body |l1.l2| (for Abs^rel when a
+    clean (k=0) compile is analyzed — no noise tags to locate the body).
+
+    The hottest body = all computations executing at the maximum loop-nesting
+    multiplier (the while body plus the fusion computations it calls — on CPU
+    the real work lives inside ``fused_computation.*``)."""
+    comps = parse_module(compiled_text)
+    if computation_hint and computation_hint in comps:
+        return sum(1 for i in comps[computation_hint]
+                   if i.opcode not in _BOOKKEEPING)
+    entry = find_entry(comps, compiled_text)
+    mult = nesting_multipliers(comps, entry)
+    inner = {c: m for c, m in mult.items() if m > 1}
+    if not inner:
+        return sum(1 for i in comps.get(entry, ())
+                   if i.opcode not in _BOOKKEEPING)
+    mmax = max(inner.values())
+    total = 0
+    for cname, m in inner.items():
+        if m != mmax or "condition" in cname or "cond" in cname.split(".")[0]:
+            continue
+        total += sum(1 for i in comps[cname]
+                     if i.opcode not in _BOOKKEEPING and i.opcode != "fusion")
+    return max(total, 1)

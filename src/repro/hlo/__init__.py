@@ -1,0 +1,6 @@
+from repro.hlo.parse import (  # noqa: F401
+    Instr,
+    parse_module,
+    shape_bytes,
+    while_trip_counts,
+)

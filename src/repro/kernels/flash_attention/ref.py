@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: full-materialization masked softmax attention (f32)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,H,Sq,hd); k,v (B,KH,Sk,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    KH = k.shape[1]
+    if KH != H:
+        k = jnp.repeat(k, H // KH, axis=1)
+        v = jnp.repeat(v, H // KH, axis=1)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    keep = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        keep &= qpos >= kpos
+    if window:
+        keep &= qpos - kpos < window
+    s = jnp.where(keep[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

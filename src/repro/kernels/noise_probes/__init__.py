@@ -1,0 +1,1 @@
+from repro.kernels.noise_probes.ops import run_probe  # noqa: F401

@@ -1,0 +1,23 @@
+"""jit'd public wrapper with backend dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.noise_probes.kernel import probe_pallas
+from repro.kernels.noise_probes.ref import probe_ref
+from repro.kernels.noisy_matmul.ops import default_noise_operand
+
+
+@partial(jax.jit, static_argnames=("mode", "k_noise", "n_steps", "backend"))
+def run_probe(noise=None, *, mode: str = "fp", k_noise: int = 1,
+              n_steps: int = 128, backend: str = "auto"):
+    if noise is None:
+        noise = default_noise_operand()
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if backend == "ref":
+        return probe_ref(noise, mode=mode, k_noise=k_noise, n_steps=n_steps)
+    return probe_pallas(noise, mode=mode, k_noise=k_noise, n_steps=n_steps,
+                        interpret=(backend == "interpret"))

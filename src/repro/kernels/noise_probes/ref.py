@@ -1,0 +1,24 @@
+"""Oracles for the probe kernel: exact accumulated value per mode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def probe_ref(noise, *, mode: str, k_noise: int, n_steps: int):
+    nf = noise.astype(jnp.float32)
+    if mode == "none" or k_noise == 0:
+        return jnp.zeros((8, 128), jnp.float32)
+    if mode == "fp":
+        return k_noise * n_steps * nf[0:8, :]
+    if mode == "mxu":
+        one = jnp.dot(nf[0:8, :], nf, preferred_element_type=jnp.float32)
+        return k_noise * n_steps * one
+    if mode == "vmem":
+        acc = jnp.zeros((8, 128), jnp.float32)
+        rows = noise.shape[0]
+        for i in range(n_steps):
+            for j in range(k_noise):
+                off = (i * 7 + j * 13) % max(rows - 8, 1)
+                acc = acc + nf[off:off + 8, 0:128]
+        return acc
+    raise ValueError(mode)

@@ -1,0 +1,85 @@
+"""Kernel-level noise slots — instruction-granularity injection inside Pallas
+kernels (the closest TPU analogue of the paper's inline-asm patterns).
+
+Every noisy kernel in this package takes a trailing ``noise_ref`` input block
+(128×128, disjoint from kernel semantics — the paper's R_n ∩ R_s = ∅) and a
+dedicated ``nacc`` output block (8×128) that all grid steps revisit; the
+accumulated noise value is the DCE-proof aux output AND a correctness oracle
+(its exact value is predictable, so tests assert the payload executed).
+
+Modes (DESIGN.md §2 table):
+  fp    — k VPU vector adds on the accumulator              (fp_add64)
+  mxu   — k small (8×128)·(128×128) MXU dots                (fp FMA throughput)
+  vmem  — k re-reads of the kernel's own input block at
+          rotating offsets (always VMEM-resident)           (l1_ld64)
+
+HBM-level noise is injected at the graph level (core.noise) — inside a Pallas
+kernel every ref the body touches is already VMEM-resident by construction,
+so "memory noise" belongs to the pipeline/DMA layer, not the body.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NOISE_SHAPE = (8, 128)          # one VREG row group
+NOISE_REF_SHAPE = (128, 128)    # MXU-aligned noise operand
+
+MODES = ("none", "fp", "mxu", "vmem")
+
+
+def noise_in_spec(grid_ndim: int) -> pl.BlockSpec:
+    """The (128,128) noise operand: same block for every grid step."""
+    return pl.BlockSpec(NOISE_REF_SHAPE, lambda *ids: (0, 0))
+
+
+def noise_out_spec(grid_ndim: int) -> pl.BlockSpec:
+    """The (8,128) noise accumulator: all grid steps revisit block (0,0)."""
+    return pl.BlockSpec(NOISE_SHAPE, lambda *ids: (0, 0))
+
+
+def noise_out_shape(dtype=jnp.float32):
+    import jax
+
+    return jax.ShapeDtypeStruct(NOISE_SHAPE, dtype)
+
+
+def init_noise(nacc_ref, is_first):
+    @pl.when(is_first)
+    def _():
+        nacc_ref[...] = jnp.zeros_like(nacc_ref)
+
+
+def emit_noise(mode: str, k: int, nacc_ref, noise_ref, src_ref=None,
+               step=0) -> None:
+    """Emit ``k`` patterns of ``mode`` into the kernel body.
+
+    ``step``: a traced or static per-grid-step index used to rotate vmem
+    offsets (defeats CSE the same way the paper rotates registers).
+    """
+    if mode == "none" or k == 0:
+        return
+    if mode == "fp":
+        c = noise_ref[0:8, :]
+        for _ in range(k):
+            nacc_ref[...] += c
+    elif mode == "mxu":
+        a = noise_ref[0:8, :]
+        b = noise_ref[...]
+        for _ in range(k):
+            nacc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32
+                                     ).astype(nacc_ref.dtype)
+    elif mode == "vmem":
+        src = src_ref if src_ref is not None else noise_ref
+        rows = src.shape[0]
+        for j in range(k):
+            off = (step * 7 + j * 13) % max(rows - 8, 1)
+            blk = src[pl.ds(off, 8), 0:128]
+            nacc_ref[...] += blk.astype(nacc_ref.dtype)
+    else:
+        raise ValueError(f"unknown kernel noise mode {mode!r}; one of {MODES}")
+
+
+def expected_fp_noise(noise: jnp.ndarray, k: int, n_steps: int) -> jnp.ndarray:
+    """Oracle for mode='fp': nacc = k * n_steps * noise[0:8, :]."""
+    return k * n_steps * noise[0:8, :].astype(jnp.float32)

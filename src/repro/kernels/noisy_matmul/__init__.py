@@ -1,0 +1,1 @@
+from repro.kernels.noisy_matmul.ops import noisy_matmul  # noqa: F401

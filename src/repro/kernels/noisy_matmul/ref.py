@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the noisy matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)
+                   ).astype(a.dtype)
+
+
+def fp_noise_ref(noise, k_noise: int, n_grid_steps: int):
+    """nacc oracle for mode='fp'."""
+    return k_noise * n_grid_steps * noise[0:8, :].astype(jnp.float32)

@@ -1,0 +1,79 @@
+"""ELL-format sparse matrix-vector product for TPU — the paper's SPMXV case
+study kernel (§6), adapted from CSR to the TPU-friendly ELL layout.
+
+CSR's per-row variable nnz serializes badly on a vector unit; ELL pads every
+row to L nonzeros so the kernel is a dense (br, L) multiply + gather —
+rethinking the access pattern for the MXU/VPU instead of porting the CPU loop
+(DESIGN.md hardware adaptation). The irregular part — the x gather through
+``cols`` — is exactly what the paper's swap probability q randomizes, and the
+gather locality is what moves the kernel between bandwidth- and latency-bound
+regimes.
+
+Blocks: vals/cols (br, L); x fully VMEM-resident (1, N) — valid for the case
+study sizes (N ≤ ~1M f32 = 4 MiB... for larger N shard rows over the grid and
+x over a second grid axis; see ops.py). y written as (nb, br) so the lane dim
+stays 128-aligned. Vector gather lowering on TPU requires a recent Mosaic;
+correctness is validated in interpret mode on CPU (the container has no TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import noise_slots as ns
+
+
+def _spmv_kernel(vals_ref, cols_ref, x_ref, y_ref, nacc_ref, *,
+                 mode: str, k_noise: int):
+    i = pl.program_id(0)
+    ns.init_noise(nacc_ref, i == 0)
+
+    vals = vals_ref[...].astype(jnp.float32)        # (br, L)
+    cols = cols_ref[...]                            # (br, L) int32
+    x = x_ref[0]                                    # (N,)
+    g = jnp.take(x, cols, axis=0).astype(jnp.float32)
+    y_ref[0, ...] = jnp.sum(vals * g, axis=1).astype(y_ref.dtype)
+
+    # noise slot: vmem mode re-reads the vals block (this kernel has no
+    # dedicated noise operand — fp noise synthesizes its constant in VREGs).
+    if mode == "vmem" and k_noise:
+        ns.emit_noise("vmem", k_noise, nacc_ref, vals_ref, src_ref=vals_ref,
+                      step=i)
+    elif mode == "fp" and k_noise:
+        c = jnp.full((8, 128), 1e-6, jnp.float32)
+        for _ in range(k_noise):
+            nacc_ref[...] += c
+
+
+def spmv_ell_pallas(vals, cols, x, *, br: int = 128, mode: str = "none",
+                    k_noise: int = 0, interpret: bool = False):
+    """vals,cols (R,L); x (N,) -> (y (R,), nacc)."""
+    R, L = vals.shape
+    br = min(br, R)
+    assert R % br == 0, (R, br)
+    nb = R // br
+    N = x.shape[0]
+
+    kernel = functools.partial(_spmv_kernel, mode=mode, k_noise=k_noise)
+    y, nacc = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((br, L), lambda i: (i, 0)),
+            pl.BlockSpec((br, L), lambda i: (i, 0)),
+            pl.BlockSpec((1, N), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br), lambda i: (i, 0)),
+            ns.noise_out_spec(1),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, br), x.dtype),
+            ns.noise_out_shape(),
+        ],
+        interpret=interpret,
+    )(vals, cols, x[None, :])
+    return y.reshape(R), nacc

@@ -1,0 +1,22 @@
+"""jit'd public wrapper with backend dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmv_ell.kernel import spmv_ell_pallas
+from repro.kernels.spmv_ell.ref import spmv_ell_ref
+
+
+@partial(jax.jit, static_argnames=("br", "mode", "k_noise", "backend"))
+def spmv_ell(vals, cols, x, *, br: int = 128, mode: str = "none",
+             k_noise: int = 0, backend: str = "auto"):
+    """ELL SPMV. Returns (y (R,), nacc (8,128))."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if backend == "ref":
+        return spmv_ell_ref(vals, cols, x), jnp.zeros((8, 128), jnp.float32)
+    return spmv_ell_pallas(vals, cols, x, br=br, mode=mode, k_noise=k_noise,
+                           interpret=(backend == "interpret"))

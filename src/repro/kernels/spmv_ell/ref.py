@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for ELL SPMV + the ELL matrix generators used by the
+SPMXV case study (band matrix with swap probability q, paper §6)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmv_ell_ref(vals, cols, x):
+    """y[r] = sum_l vals[r,l] * x[cols[r,l]] (padded entries have vals=0)."""
+    g = jnp.take(x, cols, axis=0)
+    return jnp.sum(vals.astype(jnp.float32) * g.astype(jnp.float32),
+                   axis=1).astype(x.dtype)
+
+
+def make_band_ell(n: int, nnz_per_row: int, q: float, seed: int = 0,
+                  dtype=np.float32):
+    """Banded sparse matrix in ELL with the paper's swap-probability q.
+
+    At q=0 the nonzeros of row r sit at columns r-w..r+w (stride-1 vector
+    access, prefetch friendly). Each nonzero is swapped with probability q to
+    a uniformly random column — monotonically increasing the irregularity of
+    the x gather, exactly the paper's knob for driving SPMXV from
+    bandwidth-bound to latency-bound.
+    """
+    rng = np.random.RandomState(seed)
+    w = nnz_per_row // 2
+    base = np.arange(n)[:, None] + (np.arange(nnz_per_row)[None, :] - w)
+    cols = np.clip(base, 0, n - 1).astype(np.int32)
+    swap = rng.random_sample(cols.shape) < q
+    cols[swap] = rng.randint(0, n, size=int(swap.sum()), dtype=np.int32)
+    vals = rng.random_sample(cols.shape).astype(dtype) * 0.1
+    return jnp.asarray(vals), jnp.asarray(cols)

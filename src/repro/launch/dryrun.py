@@ -1,0 +1,158 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend init. Everything below is ordinary.
+
+_DOC = """Multi-pod dry-run: lower + compile every (architecture × input
+shape) on the production meshes and extract memory / cost / roofline evidence.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all                 # 16x16
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod     # 2x16x16
+
+Outputs one JSON per cell under experiments/dryrun/<mesh>/ with:
+  memory_analysis  — per-chip argument/output/temp bytes (proves it fits)
+  cost_analysis    — XLA flops/bytes (loop bodies counted once; see roofline)
+  roofline         — trip-count-aware FLOPs / HBM-traffic / wire bytes and
+                     the three terms in seconds (EXPERIMENTS.md §Roofline)
+  collectives      — per-opcode wire-byte breakdown (the collective schedule)
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "experiments/dryrun",
+             compress: str | None = None,
+             overrides: dict | None = None,
+             remat: str = "nothing",
+             tag: str = "", verbose: bool = True) -> dict:
+    import jax
+
+    from repro.configs import SHAPES, TPU_V5E, get_config, shape_applicable
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import SkipCell, build_cell
+    from repro.roofline import analyze_compiled_text
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cell_id = f"{arch}_{shape_name}{('_' + tag) if tag else ''}"
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "tag": tag}
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        record.update(status="skip", reason=reason)
+        _write(out_dir, mesh_name, cell_id, record)
+        if verbose:
+            print(f"SKIP {cell_id} [{mesh_name}]: {reason}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):  # sets the abstract mesh: logical-axis
+            # sharding constraints inside the model resolve against it
+            prog = build_cell(arch, shape_name, mesh, compress=compress,
+                              overrides=overrides, remat=remat)
+            jitted = jax.jit(prog.fn, in_shardings=prog.in_shardings,
+                             out_shardings=prog.out_shardings,
+                             donate_argnums=prog.donate)
+            lowered = jitted.lower(*prog.args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        text = compiled.as_text()
+        rep = analyze_compiled_text(
+            text, arch=arch, shape=shape, mesh_name=mesh_name,
+            n_chips=mesh.devices.size, hw=TPU_V5E, cfg=cfg, cost=cost,
+            memory_stats=_mem_dict(mem))
+        record.update(
+            status="ok",
+            kind=prog.kind,
+            compile_s=time.time() - t0,
+            memory=_mem_dict(mem),
+            cost={k: cost.get(k) for k in ("flops", "bytes accessed",
+                                           "transcendentals")},
+            roofline=dataclasses.asdict(rep),
+            hlo_bytes=len(text),
+        )
+        if verbose:
+            m = record["memory"]
+            print(f"OK   {cell_id} [{mesh_name}] compile={record['compile_s']:.1f}s "
+                  f"args={m['argument_size_in_bytes']/2**30:.2f}GiB "
+                  f"temp={m['temp_size_in_bytes']/2**30:.2f}GiB "
+                  f"out={m['output_size_in_bytes']/2**30:.2f}GiB")
+            print("     " + rep.summary())
+    except SkipCell as e:
+        record.update(status="skip", reason=str(e))
+        if verbose:
+            print(f"SKIP {cell_id} [{mesh_name}]: {e}")
+    except Exception as e:
+        record.update(status="fail", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"FAIL {cell_id} [{mesh_name}]: {type(e).__name__}: {e}")
+    _write(out_dir, mesh_name, cell_id, record)
+    return record
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {k: getattr(mem, k, None) for k in keys}
+
+
+def _write(out_dir: str, mesh_name: str, cell_id: str, record: dict) -> None:
+    d = os.path.join(out_dir, mesh_name)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, f"{cell_id}.json"), "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=_DOC)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--compress", default=None, choices=(None, "int8"))
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, SHAPES, canonical
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape (or --all) required")
+        cells.append((canonical(args.arch), args.shape))
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                       out_dir=args.out, compress=args.compress,
+                       tag=args.tag)
+        n_ok += rec["status"] == "ok"
+        n_skip += rec["status"] == "skip"
+        n_fail += rec["status"] == "fail"
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production meshes. A FUNCTION, not a module-level constant — importing
+this module never touches jax device state (the dry-run sets
+--xla_force_host_platform_device_count before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_config(*, multi_pod: bool = False):
+    return MULTI_POD if multi_pod else SINGLE_POD

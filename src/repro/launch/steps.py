@@ -1,0 +1,192 @@
+"""Abstract step builders for the multi-pod dry-run: for every
+(arch × shape × mesh) cell, produce (fn, abstract_args, in_shardings) so that
+``jax.jit(fn, in_shardings=...).lower(*args).compile()`` exercises the full
+production program — train_step (loss+grad+AdamW) for train shapes,
+forward-only for prefill, one-token decode against a seq_len KV/state cache
+for decode shapes — without allocating anything.
+
+Per-arch memory tuning lives in DRYRUN_TUNING (microbatches bound activation
+memory; scan_group trades recompute for saved residuals on the deepest
+models). Values were chosen by napkin math against v5e's 16 GiB and then
+checked against compiled memory_analysis (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, TrainConfig, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import ModelApi, build
+from repro.parallel.sharding import resolve, resolve_tree
+from repro.train.optimizer import adamw_init, opt_spec_like
+from repro.train.trainer import TrainState, make_train_step
+
+# (microbatches, scan_group) per arch for train_4k. Rationale: microbatch
+# count M splits the 256-seq global batch into M accumulation steps; the
+# per-chip saved residual is then ceil(B/M/dp)·S·D·2B per layer boundary.
+DRYRUN_TUNING: dict[str, tuple[int, int]] = {
+    "mixtral_8x22b": (16, 1),  # M=16: temp 13.0 GiB (fits v5e; §Perf iter 5)
+    "qwen3_moe_30b_a3b": (8, 1),
+    "mamba2_780m": (1, 1),
+    "whisper_large_v3": (4, 1),
+    "llava_next_34b": (16, 2),
+    "minitron_4b": (8, 1),     # 256k vocab: bound the logits buffer
+    "deepseek_coder_33b": (8, 2),
+    "gemma_2b": (8, 1),        # 256k vocab
+
+    "mistral_large_123b": (8, 2),
+    "zamba2_1p2b": (1, 1),
+}
+
+# decode cache length: the shape's seq_len (the assignment: "one new token
+# with a KV cache of seq_len").
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _shardings_for(tree_logical, tree_sds, mesh):
+    spec = resolve_tree(tree_logical, tree_sds, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec)
+
+
+def _batch_shardings(batch_sds, mesh):
+    def one(x):
+        spec = resolve(("batch",) + (None,) * (len(x.shape) - 1), x.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, batch_sds)
+
+
+@dataclasses.dataclass
+class CellProgram:
+    fn: Callable
+    args: tuple                 # ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any          # or None (let GSPMD choose)
+    donate: tuple = ()
+    kind: str = "train"
+
+
+def train_cell(api: ModelApi, shape: ShapeConfig, mesh,
+               *, microbatches: int, scan_group: int,
+               compress: str | None = None,
+               remat: str = "nothing") -> CellProgram:
+    tcfg = TrainConfig(microbatches=microbatches, scan_group=scan_group,
+                       remat=remat)
+    step = make_train_step(api, tcfg, mesh=mesh, compress=compress)
+
+    def _abstract_state(rng):
+        params = api.init(rng)
+        return TrainState(params=params, opt=adamw_init(params),
+                          residuals=None)
+
+    state_sds = jax.eval_shape(_abstract_state, jax.random.PRNGKey(0))
+
+    batch_sds = api.input_specs(shape)
+    pspec = api.param_spec()
+    params_sh = _shardings_for(pspec, state_sds.params, mesh)
+    opt_logical = opt_spec_like(pspec, use_master=state_sds.opt.master is not None)
+    mu_sh = _shardings_for(opt_logical["mu"], state_sds.opt.mu, mesh)
+    nu_sh = _shardings_for(opt_logical["nu"], state_sds.opt.nu, mesh)
+    master_sh = (_shardings_for(opt_logical["master"], state_sds.opt.master, mesh)
+                 if state_sds.opt.master is not None else None)
+    from repro.train.optimizer import AdamWState
+    state_sh = TrainState(
+        params=params_sh,
+        opt=AdamWState(step=NamedSharding(mesh, P()), mu=mu_sh, nu=nu_sh,
+                       master=master_sh),
+        residuals=None)
+    batch_sh = _batch_shardings(batch_sds, mesh)
+    return CellProgram(fn=step, args=(state_sds, batch_sds),
+                       in_shardings=(state_sh, batch_sh),
+                       out_shardings=(state_sh, None),
+                       donate=(0,), kind="train")
+
+
+def prefill_cell(api: ModelApi, shape: ShapeConfig, mesh) -> CellProgram:
+    kw = {}
+    if api.cfg.n_experts:
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        dp = sizes.get("pod", 1) * sizes.get("data", 1)
+        kw["n_groups"] = dp      # shard the MoE dispatch buffer (see trainer)
+
+    def fwd(params, batch):
+        logits, aux = api.forward(params, batch, **kw)
+        del aux
+        # serving prefill emits the next-token distribution for every seq
+        return logits[:, -1, :]
+
+    params_sds = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    batch_sds = api.input_specs(shape)
+    batch_sds.pop("labels", None)
+    params_sh = _shardings_for(api.param_spec(), params_sds, mesh)
+    batch_sh = _batch_shardings(batch_sds, mesh)
+    return CellProgram(fn=fwd, args=(params_sds, batch_sds),
+                       in_shardings=(params_sh, batch_sh),
+                       out_shardings=None, kind="prefill")
+
+
+def decode_cell(api: ModelApi, shape: ShapeConfig, mesh) -> CellProgram:
+    B, S = shape.global_batch, shape.seq_len
+
+    def serve_step(params, cache, tokens, pos):
+        return api.decode_step(params, cache, tokens, pos)
+
+    params_sds = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    if api.cfg.family == "encdec":
+        cache_sds = jax.eval_shape(
+            lambda p: api.decode_init(
+                p, {"frames": jnp.zeros((B, api.cfg.enc_frames,
+                                         api.cfg.d_model),
+                                        jnp.dtype(api.cfg.compute_dtype)),
+                    "max_seq": S}),
+            params_sds)
+    else:
+        cache_sds = jax.eval_shape(
+            lambda p: api.decode_init(
+                p, {"tokens": jnp.zeros((B, 1), jnp.int32), "max_seq": S}),
+            params_sds)
+    tokens_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    params_sh = _shardings_for(api.param_spec(), params_sds, mesh)
+    cache_sh = _shardings_for(api.cache_spec(), cache_sds, mesh)
+    tokens_sh = NamedSharding(mesh, resolve(("batch", None), (B, 1), mesh))
+    pos_sh = NamedSharding(mesh, P())
+    return CellProgram(
+        fn=serve_step, args=(params_sds, cache_sds, tokens_sds, pos_sds),
+        in_shardings=(params_sh, cache_sh, tokens_sh, pos_sh),
+        out_shardings=(None, cache_sh), donate=(1,), kind="decode")
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               compress: str | None = None,
+               overrides: dict | None = None,
+               remat: str = "nothing") -> CellProgram:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(reason)
+    api = build(cfg)
+    if shape.kind == "train":
+        m, g = DRYRUN_TUNING.get(arch, (1, 1))
+        return train_cell(api, shape, mesh, microbatches=m, scan_group=g,
+                          compress=compress, remat=remat)
+    if shape.kind == "prefill":
+        return prefill_cell(api, shape, mesh)
+    return decode_cell(api, shape, mesh)
+
+
+class SkipCell(Exception):
+    pass

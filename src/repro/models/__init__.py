@@ -1,0 +1,1 @@
+from repro.models.model import ModelApi, build  # noqa: F401

@@ -1,0 +1,161 @@
+"""Whisper-style encoder-decoder. The conv/log-mel frontend is a STUB per the
+assignment: inputs are precomputed frame embeddings (B, F, d_model).
+
+Encoder: bidirectional self-attention blocks (scanned).
+Decoder: causal self-attention + cross-attention + MLP (scanned).
+Decode state: per-layer self KV cache + precomputed cross K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.transformer import REMAT_POLICIES
+
+_SPEC_LEAF = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+    isinstance(e, (str, type(None))) for e in x)
+
+
+def _stack_spec(spec):
+    return jax.tree.map(lambda lg: (None,) + lg, spec, is_leaf=_SPEC_LEAF)
+
+
+def init_enc_layer(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"ln1": L.init_rmsnorm(k1, cfg.d_model, cfg),
+            "attn": attn.init_attention(k2, cfg),
+            "ln2": L.init_rmsnorm(k3, cfg.d_model, cfg),
+            "mlp": L.init_mlp(k4, cfg)}
+
+
+def spec_enc_layer():
+    return {"ln1": L.spec_rmsnorm(), "attn": attn.spec_attention(),
+            "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp()}
+
+
+def init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 6)
+    return {"ln1": L.init_rmsnorm(ks[0], cfg.d_model, cfg),
+            "attn": attn.init_attention(ks[1], cfg),
+            "lnx": L.init_rmsnorm(ks[2], cfg.d_model, cfg),
+            "xattn": attn.init_cross_attention(ks[3], cfg),
+            "ln2": L.init_rmsnorm(ks[4], cfg.d_model, cfg),
+            "mlp": L.init_mlp(ks[5], cfg)}
+
+
+def spec_dec_layer():
+    return {"ln1": L.spec_rmsnorm(), "attn": attn.spec_attention(),
+            "lnx": L.spec_rmsnorm(), "xattn": attn.spec_attention(),
+            "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp()}
+
+
+def init_encdec(rng, cfg):
+    ke, kd, k1, k2, k3 = jax.random.split(rng, 5)
+    return {
+        "embed": L.init_embedding(k1, cfg),
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(
+            jax.random.split(ke, cfg.enc_layers)),
+        "enc_norm": L.init_rmsnorm(k2, cfg.d_model, cfg),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(
+            jax.random.split(kd, cfg.n_layers)),
+        "final_norm": L.init_rmsnorm(k3, cfg.d_model, cfg),
+    }
+
+
+def spec_encdec(cfg):
+    return {
+        "embed": L.spec_embedding(cfg),
+        "enc_layers": _stack_spec(spec_enc_layer()),
+        "enc_norm": L.spec_rmsnorm(),
+        "dec_layers": _stack_spec(spec_dec_layer()),
+        "final_norm": L.spec_rmsnorm(),
+    }
+
+
+def encode(params, cfg, frames, *, remat="nothing"):
+    """frames (B,F,D) stub embeddings -> encoder states (B,F,D)."""
+    h = frames.astype(L.cdtype_of(cfg))
+    F = h.shape[1]
+    positions = jnp.arange(F, dtype=jnp.int32)
+
+    def body(hh, lp):
+        a = attn.attn_train(lp["attn"], cfg, L.rmsnorm(lp["ln1"], hh, cfg.norm_eps),
+                            positions, causal=False)
+        hh = hh + a
+        hh = hh + L.mlp(lp["mlp"], L.rmsnorm(lp["ln2"], hh, cfg.norm_eps), cfg)
+        return hh, None
+
+    body_ck = jax.checkpoint(body, policy=REMAT_POLICIES[remat], prevent_cse=False)
+    h, _ = jax.lax.scan(body_ck, h, params["enc_layers"])
+    return L.rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def decoder_forward(params, cfg, tokens, enc_out, *, remat="nothing"):
+    h = L.embed(params["embed"], tokens, cfg)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(hh, lp):
+        a = attn.attn_train(lp["attn"], cfg, L.rmsnorm(lp["ln1"], hh, cfg.norm_eps),
+                            positions, causal=True)
+        hh = hh + a
+        ckv = attn.cross_kv(lp["xattn"], cfg, enc_out)
+        x = attn.attn_cross(lp["xattn"], cfg,
+                            L.rmsnorm(lp["lnx"], hh, cfg.norm_eps), ckv)
+        hh = hh + x
+        hh = hh + L.mlp(lp["mlp"], L.rmsnorm(lp["ln2"], hh, cfg.norm_eps), cfg)
+        return hh, None
+
+    body_ck = jax.checkpoint(body, policy=REMAT_POLICIES[remat], prevent_cse=False)
+    h, _ = jax.lax.scan(body_ck, h, params["dec_layers"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return L.unembed(params["embed"], h, cfg)
+
+
+def encdec_forward(params, cfg, batch, *, remat="nothing", **_):
+    enc_out = encode(params, cfg, batch["frames"], remat=remat)
+    logits = decoder_forward(params, cfg, batch["tokens"], enc_out, remat=remat)
+    return logits, {}
+
+
+def encdec_decode_init(params, cfg, batch):
+    """Runs the encoder; precomputes cross K/V; allocates self caches.
+
+    batch: {"frames": (B,F,D)}; max_seq passed via batch["max_seq"] int."""
+    frames = batch["frames"]
+    max_seq = batch["max_seq"]
+    enc_out = encode(params, cfg, frames)
+    ckv = jax.vmap(lambda lp: attn.cross_kv(lp, cfg, enc_out))(params["dec_layers"]["xattn"])
+    self_cache = attn.init_cache(cfg, frames.shape[0], max_seq)
+    kv = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), self_cache)
+    return {"kv": kv, "cross": ckv}
+
+
+def encdec_cache_logical(cfg):
+    del cfg
+    kv = _stack_spec(attn.cache_logical())
+    cross = _stack_spec({"ck": ("cache_batch", "cache_kv_heads", None, None),
+                         "cv": ("cache_batch", "cache_kv_heads", None, None)})
+    return {"kv": kv, "cross": cross}
+
+
+def encdec_decode_step(params, cfg, cache, tokens, pos):
+    h = L.embed(params["embed"], tokens, cfg)
+
+    def body(hh, xs):
+        lp, c, ckv = xs
+        a, c = attn.attn_decode(lp["attn"], cfg,
+                                L.rmsnorm(lp["ln1"], hh, cfg.norm_eps), c, pos)
+        hh = hh + a
+        x = attn.attn_cross(lp["xattn"], cfg,
+                            L.rmsnorm(lp["lnx"], hh, cfg.norm_eps), ckv)
+        hh = hh + x
+        hh = hh + L.mlp(lp["mlp"], L.rmsnorm(lp["ln2"], hh, cfg.norm_eps), cfg)
+        return hh, c
+
+    h, new_kv = jax.lax.scan(body, h, (params["dec_layers"], cache["kv"], cache["cross"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return L.unembed(params["embed"], h, cfg), {"kv": new_kv, "cross": cache["cross"]}

@@ -1,0 +1,139 @@
+"""Zamba2-style hybrid: a stack of Mamba2 blocks with ONE shared
+attention+MLP block applied every ``attn_every`` layers (weight sharing).
+
+The scan carries (h, attn-cache-stack); the shared block runs under lax.cond
+inside the scan body so the HLO stays O(1) in depth with a single copy of the
+attention graph. The per-invocation attention cache lives in a stacked buffer
+(n_invocations, ...) indexed by layer//attn_every.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.transformer import REMAT_POLICIES
+
+_SPEC_LEAF = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+    isinstance(e, (str, type(None))) for e in x)
+
+
+def n_invocations(cfg):
+    return -(-cfg.n_layers // cfg.attn_every)
+
+
+def init_hybrid(rng, cfg):
+    k1, k2, k3, k4, k5, k6 = jax.random.split(rng, 6)
+    mamba_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": L.init_embedding(k1, cfg),
+        "mamba": jax.vmap(lambda k: {
+            "ln": L.init_rmsnorm(k, cfg.d_model, cfg),
+            "ssm": ssm.init_ssm(k, cfg)})(mamba_keys),
+        "shared": {
+            "ln1": L.init_rmsnorm(k3, cfg.d_model, cfg),
+            "attn": attn.init_attention(k4, cfg),
+            "ln2": L.init_rmsnorm(k5, cfg.d_model, cfg),
+            "mlp": L.init_mlp(k5, cfg),
+        },
+        "final_norm": L.init_rmsnorm(k6, cfg.d_model, cfg),
+    }
+
+
+def spec_hybrid(cfg):
+    mamba = jax.tree.map(lambda lg: (None,) + lg,
+                         {"ln": L.spec_rmsnorm(), "ssm": ssm.spec_ssm()},
+                         is_leaf=_SPEC_LEAF)
+    return {
+        "embed": L.spec_embedding(cfg),
+        "mamba": mamba,
+        "shared": {"ln1": L.spec_rmsnorm(), "attn": attn.spec_attention(),
+                   "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp()},
+        "final_norm": L.spec_rmsnorm(),
+    }
+
+
+def _shared_block(sp, cfg, h, positions):
+    a = attn.attn_train(sp["attn"], cfg, L.rmsnorm(sp["ln1"], h, cfg.norm_eps),
+                        positions, causal=True)
+    h = h + a
+    h = h + L.mlp(sp["mlp"], L.rmsnorm(sp["ln2"], h, cfg.norm_eps), cfg)
+    return h
+
+
+def hybrid_forward(params, cfg, batch, *, remat="nothing", **_):
+    h = L.embed(params["embed"], batch["tokens"], cfg)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    sp = params["shared"]
+
+    def body(carry, xs):
+        hh = carry
+        idx, lp = xs
+        hh = jax.lax.cond(idx % cfg.attn_every == 0,
+                          lambda x: _shared_block(sp, cfg, x, positions),
+                          lambda x: x, hh)
+        hh = hh + ssm.ssm_block(lp["ssm"], cfg,
+                                L.rmsnorm(lp["ln"], hh, cfg.norm_eps))
+        return hh, None
+
+    body_ck = jax.checkpoint(body, policy=REMAT_POLICIES[remat], prevent_cse=False)
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    h, _ = jax.lax.scan(body_ck, h, (idxs, params["mamba"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return L.unembed(params["embed"], h, cfg), {}
+
+
+def hybrid_decode_init(params, cfg, batch_size, max_seq):
+    del params
+    sc = ssm.init_ssm_cache(cfg, batch_size)
+    states = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), sc)
+    ac = attn.init_cache(cfg, batch_size, max_seq)
+    kv = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_invocations(cfg),) + x.shape).copy(), ac)
+    return {"ssm": states, "kv": kv}
+
+
+def hybrid_cache_logical(cfg):
+    del cfg
+    stack = lambda s: jax.tree.map(lambda lg: (None,) + lg, s, is_leaf=_SPEC_LEAF)
+    return {"ssm": stack(ssm.ssm_cache_logical()),
+            "kv": stack(attn.cache_logical())}
+
+
+def hybrid_decode_step(params, cfg, cache, tokens, pos):
+    h = L.embed(params["embed"], tokens, cfg)
+    sp = params["shared"]
+
+    def body(carry, xs):
+        hh, kv_stack = carry
+        idx, lp, sc = xs
+
+        def with_attn(args):
+            x, kvs = args
+            inv = idx // cfg.attn_every
+            c = jax.tree.map(lambda b: jax.lax.dynamic_index_in_dim(
+                b, inv, axis=0, keepdims=False), kvs)
+            a, c = attn.attn_decode(sp["attn"], cfg,
+                                    L.rmsnorm(sp["ln1"], x, cfg.norm_eps), c, pos)
+            x = x + a
+            x = x + L.mlp(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps), cfg)
+            kvs = jax.tree.map(
+                lambda b, u: jax.lax.dynamic_update_index_in_dim(b, u, inv, axis=0),
+                kvs, c)
+            return x, kvs
+
+        hh, kv_stack = jax.lax.cond(idx % cfg.attn_every == 0, with_attn,
+                                    lambda args: args, (hh, kv_stack))
+        out, new_sc = ssm.ssm_decode_step(lp["ssm"], cfg,
+                                          L.rmsnorm(lp["ln"], hh, cfg.norm_eps), sc)
+        return (hh + out, kv_stack), new_sc
+
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    (h, kv), new_ssm = jax.lax.scan(body, (h, cache["kv"]),
+                                    (idxs, params["mamba"], cache["ssm"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return L.unembed(params["embed"], h, cfg), {"ssm": new_ssm, "kv": kv}

@@ -1,0 +1,230 @@
+"""Unified model API: every architecture family exposes the same surface.
+
+``build(cfg)`` returns a :class:`ModelApi` with
+
+  init(rng)                      -> params
+  forward(params, batch, **kw)   -> (logits, aux)          train / prefill
+  loss(params, batch, **kw)      -> (scalar, aux)
+  decode_init(params, batch|B,S) -> cache
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+  param_spec()                   -> pytree of logical-axis tuples
+  cache_spec(batch, max_seq)     -> logical spec for the decode cache
+  input_specs(shape, mesh=None)  -> {name: ShapeDtypeStruct} (dry-run stand-ins)
+
+The same object drives the trainer, the serving engine, the multi-pod dry-run
+and the noise-injection probe, so the paper's technique applies uniformly to
+every assigned architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import attention as attn
+from repro.models import encdec as encdec_mod
+from repro.models import hybrid as hybrid_mod
+from repro.models import layers as L
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable             # (params, batch, **kw) -> (logits, aux)
+    decode_init: Callable         # (params, batch) -> cache
+    decode_step: Callable         # (params, cache, tokens, pos) -> (logits, cache)
+    param_spec: Callable          # () -> logical spec tree
+    cache_spec: Callable          # () -> logical spec tree (mirrors decode cache)
+
+    # ------------------------------------------------------------------
+    def loss(self, params, batch, **kw):
+        """Mean next-token NLL (+ MoE aux losses). Labels = batch['labels']."""
+        logits, aux = self.forward(params, batch, **kw)
+        # For VLM the image tokens are prepended; only score the text tail.
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:
+            logits = logits[:, -labels.shape[1]:]
+        nll = L.softmax_xent(logits, labels, batch.get("mask"))
+        total = nll
+        if aux:
+            total = total + self.cfg.router_aux_coef * aux.get("moe_lb_loss", 0.0) \
+                + 1e-3 * aux.get("moe_z_loss", 0.0)
+        return total, dict(aux, nll=nll)
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig, *, for_decode: Optional[bool] = None,
+                    batch_override: Optional[int] = None) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for a (shape) cell — no allocation."""
+        cfg = self.cfg
+        B = batch_override or shape.global_batch
+        S = shape.seq_len
+        decode = shape.is_decode if for_decode is None else for_decode
+        i32, bf16 = jnp.int32, jnp.dtype(cfg.compute_dtype)
+        sd = jax.ShapeDtypeStruct
+        if decode:
+            return {"tokens": sd((B, 1), i32)}
+        specs: dict[str, Any] = {
+            "tokens": sd((B, S), i32),
+            "labels": sd((B, S), i32),
+        }
+        if cfg.family == "encdec":
+            specs["frames"] = sd((B, cfg.enc_frames, cfg.d_model), bf16)
+        if cfg.family == "vlm":
+            specs["img_embeds"] = sd((B, cfg.n_img_tokens, cfg.d_model), bf16)
+        return specs
+
+    def dummy_batch(self, shape: ShapeConfig, rng=None, **kw) -> dict[str, Any]:
+        """Concrete random batch matching input_specs (CPU smoke / examples)."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        out = {}
+        for k, sds in self.input_specs(shape, **kw).items():
+            rng, sub = jax.random.split(rng)
+            if jnp.issubdtype(sds.dtype, jnp.integer):
+                out[k] = jax.random.randint(sub, sds.shape, 0, self.cfg.vocab_size,
+                                            dtype=sds.dtype)
+            else:
+                out[k] = jax.random.normal(sub, sds.shape, jnp.float32).astype(sds.dtype)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Family adapters
+# ---------------------------------------------------------------------------
+
+def _build_lm(cfg: ModelConfig) -> ModelApi:       # dense / moe / vlm
+    def decode_init(params, batch):
+        B = batch["tokens"].shape[0] if isinstance(batch, dict) else batch
+        max_seq = batch.get("max_seq", cfg.window or 32768) if isinstance(batch, dict) \
+            else (cfg.window or 32768)
+        return tf.lm_decode_init(params, cfg, B, max_seq)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda rng: tf.init_lm(rng, cfg),
+        forward=lambda p, b, **kw: tf.lm_forward(p, cfg, b, **kw),
+        decode_init=decode_init,
+        decode_step=lambda p, c, t, pos: tf.lm_decode_step(p, cfg, c, t, pos),
+        param_spec=lambda: tf.spec_lm(cfg),
+        cache_spec=lambda: tf.lm_cache_logical(cfg),
+    )
+
+
+def _build_ssm(cfg: ModelConfig) -> ModelApi:
+    def init(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        keys = jax.random.split(k2, cfg.n_layers)
+        return {
+            "embed": L.init_embedding(k1, cfg),
+            "blocks": jax.vmap(lambda k: {
+                "ln": L.init_rmsnorm(k, cfg.d_model, cfg),
+                "ssm": ssm_mod.init_ssm(k, cfg)})(keys),
+            "final_norm": L.init_rmsnorm(k3, cfg.d_model, cfg),
+        }
+
+    def param_spec():
+        leaf = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+            isinstance(e, (str, type(None))) for e in x)
+        blocks = jax.tree.map(lambda lg: (None,) + lg,
+                              {"ln": L.spec_rmsnorm(), "ssm": ssm_mod.spec_ssm()},
+                              is_leaf=leaf)
+        return {"embed": L.spec_embedding(cfg), "blocks": blocks,
+                "final_norm": L.spec_rmsnorm()}
+
+    def forward(params, batch, *, remat="nothing", **_):
+        h = L.embed(params["embed"], batch["tokens"], cfg)
+
+        def body(hh, lp):
+            hh = hh + ssm_mod.ssm_block(lp["ssm"], cfg,
+                                        L.rmsnorm(lp["ln"], hh, cfg.norm_eps))
+            return hh, None
+
+        body_ck = jax.checkpoint(body, policy=tf.REMAT_POLICIES[remat],
+                                 prevent_cse=False)
+        h, _ = jax.lax.scan(body_ck, h, params["blocks"])
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return L.unembed(params["embed"], h, cfg), {}
+
+    def decode_init(params, batch):
+        B = batch["tokens"].shape[0] if isinstance(batch, dict) else batch
+        sc = ssm_mod.init_ssm_cache(cfg, B)
+        return {"ssm": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), sc)}
+
+    def cache_spec():
+        leaf = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+            isinstance(e, (str, type(None))) for e in x)
+        return {"ssm": jax.tree.map(lambda lg: (None,) + lg,
+                                    ssm_mod.ssm_cache_logical(), is_leaf=leaf)}
+
+    def decode_step(params, cache, tokens, pos):
+        del pos  # SSM state is position-free
+        h = L.embed(params["embed"], tokens, cfg)
+
+        def body(hh, xs):
+            lp, sc = xs
+            out, new_sc = ssm_mod.ssm_decode_step(
+                lp["ssm"], cfg, L.rmsnorm(lp["ln"], hh, cfg.norm_eps), sc)
+            return hh + out, new_sc
+
+        h, new_ssm = jax.lax.scan(body, h, (params["blocks"], cache["ssm"]))
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        return L.unembed(params["embed"], h, cfg), {"ssm": new_ssm}
+
+    return ModelApi(cfg=cfg, init=init, forward=forward, decode_init=decode_init,
+                    decode_step=decode_step, param_spec=param_spec,
+                    cache_spec=cache_spec)
+
+
+def _build_hybrid(cfg: ModelConfig) -> ModelApi:
+    def decode_init(params, batch):
+        B = batch["tokens"].shape[0] if isinstance(batch, dict) else batch
+        max_seq = batch.get("max_seq", 4096) if isinstance(batch, dict) else 4096
+        return hybrid_mod.hybrid_decode_init(params, cfg, B, max_seq)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda rng: hybrid_mod.init_hybrid(rng, cfg),
+        forward=lambda p, b, **kw: hybrid_mod.hybrid_forward(p, cfg, b, **kw),
+        decode_init=decode_init,
+        decode_step=lambda p, c, t, pos: hybrid_mod.hybrid_decode_step(p, cfg, c, t, pos),
+        param_spec=lambda: hybrid_mod.spec_hybrid(cfg),
+        cache_spec=lambda: hybrid_mod.hybrid_cache_logical(cfg),
+    )
+
+
+def _build_encdec(cfg: ModelConfig) -> ModelApi:
+    def decode_init(params, batch):
+        return encdec_mod.encdec_decode_init(params, cfg, batch)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda rng: encdec_mod.init_encdec(rng, cfg),
+        forward=lambda p, b, **kw: encdec_mod.encdec_forward(p, cfg, b, **kw),
+        decode_init=decode_init,
+        decode_step=lambda p, c, t, pos: encdec_mod.encdec_decode_step(p, cfg, c, t, pos),
+        param_spec=lambda: encdec_mod.spec_encdec(cfg),
+        cache_spec=lambda: encdec_mod.encdec_cache_logical(cfg),
+    )
+
+
+_BUILDERS = {
+    "dense": _build_lm,
+    "moe": _build_lm,
+    "vlm": _build_lm,
+    "ssm": _build_ssm,
+    "hybrid": _build_hybrid,
+    "encdec": _build_encdec,
+}
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    try:
+        return _BUILDERS[cfg.family](cfg)
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}") from None

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts: top-k routing with sort-based, capacity-bounded dispatch.
+
+Dispatch is *group-local* (one group per data shard), then the dispatched
+buffer is resharded from group-parallel to expert-parallel — GSPMD turns that
+constraint flip into the canonical MoE all-to-all. Expert FFNs run as batched
+einsums with experts sharded over `model` when the expert count divides it
+(qwen3: 128/16), and tensor-parallel inside experts otherwise (mixtral: 8
+experts, shard d_ff). No one-hot dispatch einsums: dispatch is gather/scatter,
+so HLO FLOPs ≈ active-expert FLOPs (honest roofline accounting).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _act, _normal, cdtype_of, dtype_of
+from repro.parallel.sharding import constrain
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    return {
+        "router": _normal(k1, (d, e), d ** -0.5, jnp.float32),
+        "w_gate": _normal(k2, (e, d, f), d ** -0.5, dt),
+        "w_up": _normal(k3, (e, d, f), d ** -0.5, dt),
+        "w_down": _normal(k4, (e, f, d), f ** -0.5, dt),
+    }
+
+
+def spec_moe():
+    return {
+        "router": (None, None),
+        "w_gate": ("experts", "fsdp", "expert_ff"),
+        "w_up": ("experts", "fsdp", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "fsdp"),
+    }
+
+
+def _capacity(tokens_per_group, cfg):
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8, floor 8
+
+
+def _group_dispatch(x_g, eidx_g, cfg, capacity):
+    """x_g (Tg,D); eidx_g (Tg,k) -> buf (E,C,D), slots (Tg,k) slot-in-expert."""
+    Tg, k = eidx_g.shape
+    flat_e = eidx_g.reshape(-1)                      # (Tg*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=cfg.n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(Tg * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    # slot for original (t, j): invert the permutation
+    slots = jnp.zeros((Tg * k,), jnp.int32).at[order].set(pos_sorted).reshape(Tg, k)
+    tok_of = order // k                              # token index per sorted entry
+    buf = jnp.zeros((cfg.n_experts, capacity, x_g.shape[-1]), x_g.dtype)
+    buf = buf.at[sorted_e, pos_sorted].set(x_g[tok_of], mode="drop")
+    return buf, slots
+
+
+def _group_combine(out_buf, eidx_g, slots, gates_g, capacity):
+    """out_buf (E,C,D) -> y (Tg,D) weighted by gates; dropped slots -> 0."""
+    dropped = slots >= capacity
+    gathered = out_buf[eidx_g, jnp.minimum(slots, capacity - 1)]  # (Tg,k,D)
+    w = jnp.where(dropped, 0.0, gates_g).astype(gathered.dtype)
+    return jnp.einsum("tkd,tk->td", gathered, w)
+
+
+def moe_block(p, cfg, x, n_groups=1):
+    """x (B,S,D) -> (y (B,S,D), aux_losses dict)."""
+    B, S, D = x.shape
+    cd = cdtype_of(cfg)
+    T = B * S
+    G = n_groups if T % n_groups == 0 else 1
+    Tg = T // G
+    C = _capacity(Tg, cfg)
+
+    xf = x.reshape(T, D)
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, cfg.top_k)                        # (T,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses: load balance (Switch) + router z-loss
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((cfg.n_experts,), jnp.float32).at[eidx.reshape(-1)].add(1.0)
+    ce = jax.lax.stop_gradient(ce / (T * cfg.top_k))
+    lb_loss = cfg.n_experts * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    xg = constrain(xf.reshape(G, Tg, D), "batch", None, None)
+    eg = eidx.reshape(G, Tg, cfg.top_k)
+    buf, slots = jax.vmap(lambda a, b: _group_dispatch(a, b, cfg, C))(xg, eg)
+    # (G,E,C,D) group-parallel -> expert-parallel: the MoE all-to-all
+    buf = constrain(buf.transpose(1, 0, 2, 3), "experts", "batch", None, None)
+
+    def ffn(w_gate, w_up, w_down, h):
+        # Pre-gather the FSDP-sharded weights (d_model dim) BEFORE the
+        # contraction: the alternative GSPMD schedule — all-reducing the
+        # (E,G,C,ff) activation partial sums over the data axis — costs
+        # ~300x more wire (measured: 10-14 TB/chip/step on the MoE train
+        # cells; EXPERIMENTS.md §Perf). Weight shards are tiny; activations
+        # are not.
+        w_gate = constrain(w_gate.astype(cd), "experts", None, "expert_ff")
+        w_up = constrain(w_up.astype(cd), "experts", None, "expert_ff")
+        w_down = constrain(w_down.astype(cd), "experts", "expert_ff", None)
+        g = jnp.einsum("egcd,edf->egcf", h, w_gate)
+        u = jnp.einsum("egcd,edf->egcf", h, w_up)
+        a = constrain(_act(cfg.act, g) * u, "experts", "batch", None, "expert_ff")
+        return jnp.einsum("egcf,efd->egcd", a, w_down)
+
+    out = ffn(p["w_gate"], p["w_up"], p["w_down"], buf)
+    out = constrain(out.transpose(1, 0, 2, 3), "batch", "experts", None, None)  # back
+    yg = jax.vmap(lambda ob, e, s, g: _group_combine(ob, e, s, g, C))(
+        out, eg, slots, gates.reshape(G, Tg, cfg.top_k))
+    y = constrain(yg.reshape(B, S, D), "batch", "seq", "d_model")
+    return y, {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss}

@@ -1,0 +1,212 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD for train/prefill: intra-chunk quadratic attention-like term +
+inter-chunk state recurrence (associative scan). O(1)-state decode step.
+All recurrence math in fp32. A reference sequential-recurrence oracle lives in
+tests (and kernels/ref.py) — the chunked form must match it.
+
+Layout: x heads (B, S, nh, hp); B/C (B, S, ng, N); state (B, nh, hp, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _normal, cdtype_of, dtype_of, rmsnorm
+from repro.parallel.sharding import constrain
+
+
+def init_ssm(key, cfg):
+    d, di = cfg.d_model, cfg.d_inner
+    nh, N, ng = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_ngroups
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg)
+    conv_ch = di + 2 * ng * N
+    return {
+        "w_x": _normal(ks[0], (d, di), d ** -0.5, dt),
+        "w_z": _normal(ks[1], (d, di), d ** -0.5, dt),
+        "w_B": _normal(ks[2], (d, ng * N), d ** -0.5, dt),
+        "w_C": _normal(ks[3], (d, ng * N), d ** -0.5, dt),
+        "w_dt": _normal(ks[4], (d, nh), d ** -0.5, dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "conv_w": _normal(ks[5], (cfg.ssm_conv, conv_ch), 0.5, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "norm": jnp.ones((di,), dt),
+        "w_out": _normal(ks[6], (di, d), di ** -0.5, dt),
+    }
+
+
+def spec_ssm():
+    return {
+        "w_x": ("fsdp", "ssm_inner"), "w_z": ("fsdp", "ssm_inner"),
+        "w_B": ("fsdp", None), "w_C": ("fsdp", None),
+        "w_dt": ("fsdp", "ssm_heads"),
+        "dt_bias": ("ssm_heads",), "A_log": ("ssm_heads",), "D_skip": ("ssm_heads",),
+        "conv_w": (None, None), "conv_b": (None,),
+        "norm": ("ssm_inner",), "w_out": ("ssm_inner", "fsdp"),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b, buf=None):
+    """Depthwise causal conv, width K. xbc (B,S,Ch). buf (B,K-1,Ch) history for
+    decode; returns (y, new_buf)."""
+    K = conv_w.shape[0]
+    if buf is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = buf.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # (B, S+K-1, Ch)
+    y = sum(full[:, i:i + xbc.shape[1], :] * conv_w[i][None, None, :]
+            for i in range(K))
+    y = y + conv_b[None, None, :]
+    new_buf = full[:, -(K - 1):, :]
+    return jax.nn.silu(y), new_buf
+
+
+def _split_heads(cfg, xc, Bc, Cc):
+    B, S = xc.shape[:2]
+    nh, hp, ng, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    x = xc.reshape(B, S, nh, hp)
+    Bm = Bc.reshape(B, S, ng, N)
+    Cm = Cc.reshape(B, S, ng, N)
+    return x, Bm, Cm
+
+
+def _proj_inputs(p, cfg, h, conv_buf=None):
+    cd = cdtype_of(cfg)
+    z = jnp.einsum("bsd,de->bse", h, p["w_z"].astype(cd))
+    xc = jnp.einsum("bsd,de->bse", h, p["w_x"].astype(cd))
+    Bc = jnp.einsum("bsd,de->bse", h, p["w_B"].astype(cd))
+    Cc = jnp.einsum("bsd,de->bse", h, p["w_C"].astype(cd))
+    dt = jnp.einsum("bsd,dh->bsh", h, p["w_dt"].astype(cd))
+    xbc = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    xbc, new_buf = _causal_conv(xbc, p["conv_w"].astype(cd), p["conv_b"].astype(cd),
+                                conv_buf)
+    di, ngN = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state
+    xc, Bc, Cc = xbc[..., :di], xbc[..., di:di + ngN], xbc[..., di + ngN:]
+    x, Bm, Cm = _split_heads(cfg, xc, Bc, Cc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    x = constrain(x, "batch", "seq", "ssm_heads", None)
+    dt = constrain(dt, "batch", "seq", "ssm_heads")
+    z = constrain(z, "batch", "seq", "ssm_inner")
+    return x, Bm, Cm, dt, z, new_buf
+
+
+def _gated_out(p, cfg, y, z):
+    """y (B,S,nh,hp) -> out (B,S,D): gated RMSNorm then out-proj."""
+    B, S = y.shape[:2]
+    yf = y.reshape(B, S, cfg.d_inner)
+    yf = yf * jax.nn.silu(z.astype(yf.dtype))
+    yf = rmsnorm({"scale": p["norm"]}, yf.astype(cdtype_of(cfg)), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", yf, p["w_out"].astype(cdtype_of(cfg)))
+    return constrain(out, "batch", "seq", "d_model")
+
+
+def ssd_chunked(cfg, x, Bm, Cm, dt, A, init_state=None):
+    """Chunked SSD. x (B,S,nh,hp) f32-castable; returns (y, final_state).
+
+    Recurrence (per head h, state S_t of shape (hp,N)):
+      S_t = exp(dt_t A_h) S_{t-1} + dt_t x_t ⊗ B_t ;  y_t = S_t · C_t + D x_t
+    (the D-skip is applied by the caller).
+    """
+    Bb, S, nh, hp = x.shape
+    ng, N = Bm.shape[2], Bm.shape[3]
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    f32 = jnp.float32
+    xc = x.astype(f32).reshape(Bb, nc, Q, nh, hp)
+    Bc = Bm.astype(f32).reshape(Bb, nc, Q, ng, N)
+    Cc = Cm.astype(f32).reshape(Bb, nc, Q, ng, N)
+    dtc = dt.astype(f32).reshape(Bb, nc, Q, nh)
+
+    dA = dtc * A[None, None, None, :]               # (B,nc,Q,nh) (negative)
+    cum = jnp.cumsum(dA, axis=2)                    # inclusive cumsum within chunk
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,nh) = cum_i - cum_j
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # Clamp BEFORE exp: masked (i<j) entries have seg>0 and would overflow to
+    # inf, which where() hides in the primal but NaNs the gradient.
+    seg = jnp.where(tri, seg, -jnp.inf)
+    L = jnp.exp(seg)
+
+    # heads per group (ng groups broadcast over nh heads)
+    hpg = nh // ng
+    Bh = jnp.repeat(Bc, hpg, axis=3) if ng != nh else Bc    # (B,nc,Q,nh,N)
+    Ch = jnp.repeat(Cc, hpg, axis=3) if ng != nh else Cc
+
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)           # (B,nc,nh,Q,Q)
+    M = cb * L.transpose(0, 1, 4, 2, 3)                     # mask+decay
+    xdt = xc * dtc[..., None]                               # (B,nc,Q,nh,hp)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, xdt)
+
+    # chunk states: S_c = sum_q exp(cum_last - cum_q) dt_q x_q ⊗ B_q
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,Q,nh)
+    Sc = jnp.einsum("bcqhn,bcqhp->bchpn", Bh, xdt * decay_end[..., None])
+
+    # inter-chunk recurrence (associative scan over chunks)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,nh)
+    if init_state is None:
+        init_state = jnp.zeros((Bb, nh, hp, N), f32)
+
+    def combine(a, b):
+        (d1, s1), (d2, s2) = a, b
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    ds, ss = jax.lax.associative_scan(combine, (chunk_decay, Sc), axis=1)
+    # states AFTER each chunk, including initial state contribution
+    states = ss + init_state[:, None] * ds[..., None, None]
+    prev = jnp.concatenate([init_state[:, None], states[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", Ch * jnp.exp(cum)[..., None], prev)
+    y = (y_intra + y_inter).reshape(Bb, S, nh, hp)
+    return y, states[:, -1]
+
+
+def ssm_block(p, cfg, h, init_state=None, return_state=False):
+    """Full Mamba2 block: proj -> conv -> SSD -> gated norm -> out proj."""
+    x, Bm, Cm, dt, z, _ = _proj_inputs(p, cfg, h)
+    A = -jnp.exp(p["A_log"])
+    x = constrain(x, "batch", "seq", "ssm_heads", None)
+    y, state = ssd_chunked(cfg, x, Bm, Cm, dt, A, init_state)
+    y = y + x.astype(jnp.float32) * p["D_skip"][None, None, :, None]
+    out = _gated_out(p, cfg, y.astype(cdtype_of(cfg)), z)
+    if return_state:
+        return out, state
+    return out
+
+
+def init_ssm_cache(cfg, batch):
+    nh, hp, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, nh, hp, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), cdtype_of(cfg)),
+    }
+
+
+def ssm_cache_logical():
+    return {"state": ("cache_batch", "ssm_heads", None, None),
+            "conv": ("cache_batch", None, None)}
+
+
+def ssm_decode_step(p, cfg, h, cache):
+    """h (B,1,D) one token; cache {'state','conv'}; O(1) update."""
+    x, Bm, Cm, dt, z, new_conv = _proj_inputs(p, cfg, h, conv_buf=cache["conv"])
+    A = -jnp.exp(p["A_log"])
+    f32 = jnp.float32
+    x1 = x[:, 0].astype(f32)                                # (B,nh,hp)
+    B1 = Bm[:, 0].astype(f32)                               # (B,ng,N)
+    C1 = Cm[:, 0].astype(f32)
+    dt1 = dt[:, 0]                                          # (B,nh)
+    hpg = cfg.ssm_nheads // cfg.ssm_ngroups
+    Bh = jnp.repeat(B1, hpg, axis=1) if cfg.ssm_ngroups != cfg.ssm_nheads else B1
+    Ch = jnp.repeat(C1, hpg, axis=1) if cfg.ssm_ngroups != cfg.ssm_nheads else C1
+    decay = jnp.exp(dt1 * A[None, :])                       # (B,nh)
+    upd = (dt1[..., None] * x1)[..., None] * Bh[:, :, None, :]   # (B,nh,hp,N)
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + x1 * p["D_skip"][None, :, None]
+    out = _gated_out(p, cfg, y[:, None].astype(cdtype_of(cfg)), z)
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,233 @@
+"""Decoder-only LM assembly (dense / MoE / VLM) with jax.lax.scan over layers
+(O(1) HLO in depth — required to compile 88-layer configs) and remat policies.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.parallel.sharding import constrain
+
+REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "full": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def _is_moe(cfg):
+    return cfg.n_experts > 0
+
+
+def init_layer(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": L.init_rmsnorm(k1, cfg.d_model, cfg),
+        "attn": attn.init_attention(k2, cfg),
+        "ln2": L.init_rmsnorm(k3, cfg.d_model, cfg),
+    }
+    if _is_moe(cfg):
+        p["moe"] = moe_mod.init_moe(k4, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k4, cfg)
+    return p
+
+
+def spec_layer(cfg):
+    s = {
+        "ln1": L.spec_rmsnorm(),
+        "attn": attn.spec_attention(),
+        "ln2": L.spec_rmsnorm(),
+    }
+    if _is_moe(cfg):
+        s["moe"] = moe_mod.spec_moe()
+    else:
+        s["mlp"] = L.spec_mlp()
+    return s
+
+
+def layer_fwd(p, cfg, h, positions, *, n_groups=1):
+    """One transformer block (train/prefill). Returns (h, aux)."""
+    a = attn.attn_train(p["attn"], cfg, L.rmsnorm(p["ln1"], h, cfg.norm_eps),
+                        positions, causal=True, window=cfg.window)
+    h = h + a
+    x = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if _is_moe(cfg):
+        y, aux = moe_mod.moe_block(p["moe"], cfg, x, n_groups=n_groups)
+    else:
+        y, aux = L.mlp(p["mlp"], x, cfg), {}
+    return h + y, aux
+
+
+def layer_decode(p, cfg, h, cache, pos):
+    a, cache = attn.attn_decode(p["attn"], cfg,
+                                L.rmsnorm(p["ln1"], h, cfg.norm_eps), cache, pos)
+    h = h + a
+    x = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if _is_moe(cfg):
+        y, _ = moe_mod.moe_block(p["moe"], cfg, x, n_groups=1)
+    else:
+        y = L.mlp(p["mlp"], x, cfg)
+    return h + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+
+def init_lm(rng, cfg):
+    k_emb, k_layers, k_fn = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    return {
+        "embed": L.init_embedding(k_emb, cfg),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "final_norm": L.init_rmsnorm(k_fn, cfg.d_model, cfg),
+    }
+
+
+def spec_lm(cfg):
+    layer = spec_layer(cfg)
+    stacked = jax.tree.map(
+        lambda lg: (None,) + lg, layer,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return {
+        "embed": L.spec_embedding(cfg),
+        "layers": stacked,
+        "final_norm": L.spec_rmsnorm(),
+    }
+
+
+def _embed_inputs(params, cfg, batch):
+    """tokens (+img_embeds for VLM) -> h (B,S,D), positions (S,), loss offset."""
+    h = L.embed(params["embed"], batch["tokens"], cfg)
+    if cfg.family == "vlm" and "img_embeds" in batch:
+        img = batch["img_embeds"].astype(h.dtype)
+        img = constrain(img, "batch", "seq", "d_model")
+        h = jnp.concatenate([img, h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    return h, positions
+
+
+def lm_forward(params, cfg, batch, *, remat="nothing", n_groups=1,
+               return_cache=False, scan_group=1):
+    """-> (logits (B,S,V), aux). aux holds MoE losses (mean over layers).
+
+    With return_cache: also returns per-layer KV caches stacked (L, ...) laid
+    out for decode (prefill path).
+
+    scan_group=g > 1 scans over L/g groups of g layers per checkpointed body:
+    saved residual carries drop g× (recompute grows g×) — the activation-
+    memory knob for the deepest configs (mistral-large-123b)."""
+    h, positions, = _embed_inputs(params, cfg, batch)
+
+    if scan_group > 1 and not return_cache:
+        assert cfg.n_layers % scan_group == 0, (cfg.n_layers, scan_group)
+        grouped = jax.tree.map(
+            lambda x: x.reshape((cfg.n_layers // scan_group, scan_group)
+                                + x.shape[1:]), params["layers"])
+
+        def gbody(carry, lp_group):
+            hh = carry
+            auxs = []
+            for j in range(scan_group):
+                lp = jax.tree.map(lambda x: x[j], lp_group)
+                hh, aux = layer_fwd(lp, cfg, hh, positions, n_groups=n_groups)
+                auxs.append(aux)
+            aux = ({k: sum(a[k] for a in auxs) / scan_group
+                    for k in auxs[0]} if auxs[0] else {})
+            return hh, aux
+
+        gbody_ck = jax.checkpoint(gbody, policy=REMAT_POLICIES[remat],
+                                  prevent_cse=False)
+        h, ys = jax.lax.scan(gbody_ck, h, grouped)
+        h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        logits = L.unembed(params["embed"], h, cfg)
+        aux = {k: jnp.mean(v) for k, v in ys.items()} if ys else {}
+        return logits, aux
+
+    def body(carry, lp):
+        hh = carry
+        if return_cache:
+            out, kv = attn.attn_train(
+                lp["attn"], cfg, L.rmsnorm(lp["ln1"], hh, cfg.norm_eps),
+                positions, causal=True, window=cfg.window, return_cache=True)
+            hh = hh + out
+            x = L.rmsnorm(lp["ln2"], hh, cfg.norm_eps)
+            if _is_moe(cfg):
+                y, aux = moe_mod.moe_block(lp["moe"], cfg, x, n_groups=n_groups)
+            else:
+                y, aux = L.mlp(lp["mlp"], x, cfg), {}
+            return hh + y, (aux, kv)
+        hh, aux = layer_fwd(lp, cfg, hh, positions, n_groups=n_groups)
+        return hh, aux
+
+    policy = REMAT_POLICIES[remat]
+    body_ck = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    h, ys = jax.lax.scan(body_ck, h, params["layers"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h, cfg)
+    if return_cache:
+        aux_l, kv = ys
+        aux = {k: jnp.mean(v) for k, v in aux_l.items()} if aux_l else {}
+        return logits, aux, kv
+    aux = {k: jnp.mean(v) for k, v in ys.items()} if ys else {}
+    return logits, aux
+
+
+def lm_decode_init(params, cfg, batch_size, max_seq):
+    del params
+    cache = attn.init_cache(cfg, batch_size, max_seq)
+    return {
+        "kv": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), cache),
+    }
+
+
+def lm_cache_logical(cfg):
+    kv = jax.tree.map(
+        lambda lg: (None,) + lg, attn.cache_logical(),
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    if cfg.window:  # ring cache has kpos (S,) per layer
+        kv = dict(kv, kpos=(None, "cache_seq"))
+    return {"kv": kv}
+
+
+def lm_prefill(params, cfg, batch, max_seq):
+    """Full-sequence prefill -> (logits (B,S,V), decode cache padded to
+    ``max_seq``). Serving fast path for dense/moe/vlm families."""
+    logits, _aux, kv = lm_forward(params, cfg, batch, return_cache=True)
+    B = kv["k"].shape[1]
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def pad(x):  # (L,B,Kh,S,hd) -> (L,B,Kh,max_seq,hd)
+        L, b, h, S, d = x.shape
+        buf = jnp.zeros((L, b, h, max_seq, d), x.dtype)
+        return jax.lax.dynamic_update_slice(buf, x, (0, 0, 0, 0, 0))
+
+    del kh, hd
+    cache = {"kv": {"k": pad(kv["k"]), "v": pad(kv["v"])}}
+    return logits, cache
+
+
+def lm_decode_step(params, cfg, cache, tokens, pos):
+    """tokens (B,1) -> (logits (B,1,V), new cache). pos: scalar int32."""
+    h = L.embed(params["embed"], tokens, cfg)
+
+    def body(carry, xs):
+        hh = carry
+        lp, c = xs
+        hh, c = layer_decode(lp, cfg, hh, c, pos)
+        return hh, c
+
+    h, new_kv = jax.lax.scan(body, h, (params["layers"], cache["kv"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h, cfg)
+    return logits, {"kv": new_kv}

@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (  # noqa: F401
+    LOGICAL_RULES,
+    constrain,
+    make_mesh_from_config,
+    resolve,
+    resolve_tree,
+)

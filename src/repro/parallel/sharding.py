@@ -1,0 +1,150 @@
+"""Logical-axis sharding: models annotate params/activations with logical axis
+names; this module resolves them against the active mesh.
+
+Rules (production mesh: data=DP/FSDP axis, model=TP axis, pod=extra DP axis):
+
+  batch      -> (pod, data)     data parallelism
+  heads      -> model           Megatron TP on attention heads (GSPMD pads when
+  kv_heads   -> model           non-divisible; padding waste is visible in the
+  ff         -> model           roofline FLOPs and is a hillclimb lever)
+  experts    -> model           expert parallelism (MoE with many experts)
+  vocab      -> model           sharded embedding/logits
+  fsdp       -> data            parameter d_model dim (ZeRO-3 style; XLA
+                                all-gathers weights at use)
+  ssm_heads  -> model           Mamba2 head dim
+  cache_seq  -> (decode only)   sequence-parallel KV/flash-decoding; chosen by
+                                the cache-spec helpers when kv_heads don't divide
+  (anything unknown)            replicated
+
+Divisibility: when concrete dims are supplied, non-divisible axes fall back
+to the largest dividing prefix of their rule (often: replication). Examples
+that rely on this: MQA (1 kv head -> replicated heads, sharded elsewhere),
+Mixtral's 8 experts on model=16 (expert dim replicated, expert_ff picks up
+`model` = tensor parallelism inside experts).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "cache_batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "experts": ("model",),
+    "expert_ff": ("model",),
+    "vocab": ("model",),
+    "fsdp": ("data",),
+    "ssm_heads": ("model",),
+    "ssm_inner": ("model",),
+    # decode-cache axes: kv heads shard over model ONLY when divisible (no
+    # padding — that would double cache bytes); cache_seq takes whatever axes
+    # remain unused (flash-decoding style sequence parallelism).
+    "cache_kv_heads": ("model",),
+    "cache_seq": ("data", "model"),
+    "seq": (),
+    "d_model": (),
+}
+
+
+
+def _mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.axis_sizes)) if hasattr(mesh, "axis_sizes") \
+        else {k: v for k, v in mesh.shape.items()}
+
+
+def resolve(
+    logical: Sequence[Optional[str]],
+    dims: Optional[Sequence[int]] = None,
+    mesh: Optional[Any] = None,
+    rules: Optional[dict[str, tuple[str, ...]]] = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec for ``mesh``.
+
+    ``dims`` (optional) enables divisibility-aware fallback to replication for
+    axes not in PAD_OK. Mesh axes absent from the mesh are dropped, so the same
+    annotations work for (data, model), (pod, data, model) and test meshes.
+    """
+    rules = rules or LOGICAL_RULES
+    if mesh is None:
+        mesh = jax.sharding.get_abstract_mesh()
+    sizes = _mesh_axis_sizes(mesh) if mesh is not None and mesh.axis_names else {}
+    out = []
+    used: set[str] = set()
+    for i, name in enumerate(logical):
+        if name is None or not sizes:
+            out.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules.get(name, ()) if a in sizes and a not in used)
+        if not mesh_axes:
+            out.append(None)
+            continue
+        total = 1
+        for a in mesh_axes:
+            total *= sizes[a]
+        if dims is not None and dims[i] % total != 0:
+            # try a prefix of the axes that divides (e.g. batch=1 -> none)
+            chosen: tuple[str, ...] = ()
+            acc = 1
+            for a in mesh_axes:
+                if dims[i] % (acc * sizes[a]) == 0:
+                    acc *= sizes[a]
+                    chosen = chosen + (a,)
+                else:
+                    break
+            mesh_axes = chosen
+        if not mesh_axes:
+            out.append(None)
+            continue
+        used.update(mesh_axes)
+        out.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def resolve_tree(logical_tree, shape_tree=None, mesh=None, rules=None):
+    """Map ``resolve`` over a pytree of logical-axis tuples (mirrors params)."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda lg: resolve(lg, None, mesh, rules), logical_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+        )
+    return jax.tree.map(
+        lambda lg, sds: resolve(lg, sds.shape, mesh, rules), logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def constrain(x, *logical, rules=None):
+    """``with_sharding_constraint`` by logical axes; no-op without a mesh
+    context (CPU unit tests) so model code is mesh-agnostic."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    spec = resolve(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def make_mesh_from_config(mesh_cfg, devices=None) -> Mesh:
+    import numpy as np
+
+    if devices is None:
+        devices = jax.devices()
+    n = int(np.prod(mesh_cfg.shape))
+    if len(devices) < n:
+        raise ValueError(
+            f"mesh {mesh_cfg.shape} needs {n} devices, have {len(devices)} "
+            "(dryrun.py sets XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return jax.make_mesh(
+        mesh_cfg.shape, mesh_cfg.axes, devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.axes))
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

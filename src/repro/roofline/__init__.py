@@ -1,0 +1,7 @@
+from repro.roofline.terms import (  # noqa: F401
+    RooflineReport,
+    analyze_compiled_text,
+    collective_wire_bytes,
+    model_flops,
+    parsed_dot_flops,
+)

@@ -1,0 +1,291 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = wire_bytes_per_chip / link_bw
+
+Under SPMD the compiled module is the per-device program, so every quantity
+parsed from it is already per-chip (dividing cluster totals by chip count, as
+in the assignment formulas, gives the same numbers).
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE (measured: a 16-step
+scan reports 1/16 of the unrolled FLOPs), and scan-over-layers is mandatory
+for compiling 88-layer models — so FLOPs and bytes are re-derived from the
+optimized HLO text with loop trip-count multipliers (repro.hlo.parse):
+
+  - FLOPs: every ``dot``/``convolution`` instruction, 2·prod(out)·prod(contract),
+    × its computation's execution multiplier. (Elementwise FLOPs are ignored:
+    ≪1% for these models and invisible at MXU granularity.)
+  - HBM bytes: a traffic model — each top-level instruction (fusion, dot,
+    collective, copy, dynamic-update...) reads its operands and writes its
+    result through HBM once; instructions *inside* fusion computations are
+    VMEM-resident and free. This matches the TPU execution model of fused
+    streaming kernels.
+  - wire bytes: ring-algorithm models per collective (all-reduce 2(g-1)/g·B,
+    all-gather/reduce-scatter/all-to-all (g-1)/g·B, permute 1·B), group size
+    parsed from replica_groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.configs.base import HardwareConfig, ModelConfig, ShapeConfig
+from repro.hlo.parse import (Instr, find_entry, nesting_multipliers,
+                             parse_module, shape_bytes, shape_dims)
+
+_COLLECTIVES = ("all-reduce", "all-gather", "all-to-all", "reduce-scatter",
+                "collective-permute")
+_SKIP_TRAFFIC = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "while", "conditional", "call", "custom-call",
+    "broadcast", "reshape", "partition-id", "replica-id",
+})
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+# ---------------------------------------------------------------------------
+# FLOPs
+# ---------------------------------------------------------------------------
+
+def _dot_flops(ins: Instr) -> float:
+    """2 · prod(result dims) · prod(lhs contracting dims)."""
+    res = shape_dims(ins.shape)
+    if not res:
+        return 0.0
+    out_elems = 1
+    for d in res[0][1]:
+        out_elems *= d
+    ops = ins.operand_shapes()
+    if not ops:
+        return 0.0
+    lhs = shape_dims(ops[0])
+    if not lhs:
+        return 0.0
+    lhs_dims = lhs[0][1]
+    m = _CONTRACT_RE.search(ins.line)
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def parsed_dot_flops(comps: dict[str, list[Instr]], mults: dict[str, int]
+                     ) -> float:
+    total = 0.0
+    for cname, instrs in comps.items():
+        m = mults.get(cname, 0)
+        if m == 0:
+            continue
+        for ins in instrs:
+            if ins.opcode in ("dot", "convolution"):
+                total += m * _dot_flops(ins)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic model
+# ---------------------------------------------------------------------------
+
+def traffic_bytes(comps: dict[str, list[Instr]], mults: dict[str, int],
+                  fusion_comps: set[str]) -> float:
+    total = 0.0
+    for cname, instrs in comps.items():
+        m = mults.get(cname, 0)
+        if m == 0 or cname in fusion_comps:
+            continue
+        for ins in instrs:
+            if ins.opcode in _SKIP_TRAFFIC or ins.opcode in _COLLECTIVES:
+                continue
+            ops = [shape_bytes(s) for s in ins.operand_shapes()]
+            res = ins.result_bytes
+            # In-place cache updates: a dynamic-update-slice (or a fusion
+            # rooted in one) aliases its big operand — XLA updates the
+            # buffer in place, so only the written slice moves, not the
+            # whole KV cache per token (decode cells were overcharged
+            # ~100x before this correction).
+            if ("dynamic-update-slice" in ins.name
+                    or ins.opcode == "dynamic-update-slice"):
+                big = max(ops, default=0)
+                if big and abs(big - res) <= 0.01 * res:
+                    total += m * (res + sum(ops) - 2 * big)
+                    continue
+            total += m * (res + sum(ops))
+    return total
+
+
+def _fusion_computations(comps: dict[str, list[Instr]]) -> set[str]:
+    out = set()
+    for instrs in comps.values():
+        for ins in instrs:
+            if ins.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if m:
+                    out.add(m.group(1))
+    # fused computations call no-one else that matters, but be safe and also
+    # mark nested "fused_computation" names
+    for name in comps:
+        if name.startswith("fused_computation") or ".fused" in name:
+            out.add(name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Collectives
+# ---------------------------------------------------------------------------
+
+def _group_size(ins: Instr, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(ins.line)   # iota form: [n_groups,group_size]<=
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(ins.line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return default
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def collective_wire_bytes(comps: dict[str, list[Instr]],
+                          mults: dict[str, int], *, default_group: int
+                          ) -> tuple[float, dict[str, float]]:
+    """Per-chip wire bytes (ring models) and a per-opcode breakdown."""
+    total = 0.0
+    by_op: dict[str, float] = {}
+    for cname, instrs in comps.items():
+        m = mults.get(cname, 0)
+        if m == 0:
+            continue
+        for ins in instrs:
+            if ins.opcode not in _COLLECTIVES:
+                continue
+            g = _group_size(ins, default_group)
+            # payload: result bytes for all-gather (shard grows), operand
+            # bytes otherwise (start instruction variants included)
+            if ins.opcode == "all-gather":
+                payload = ins.result_bytes
+            else:
+                payload = max(sum(shape_bytes(s)
+                                  for s in ins.operand_shapes()),
+                              ins.result_bytes)
+            wire = m * payload * _WIRE_FACTOR[ins.opcode](g)
+            total += wire
+            by_op[ins.opcode] = by_op.get(ins.opcode, 0.0) + wire
+    return total, by_op
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (the "useful" flops)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D for training, 2·N_active·tokens for inference-only steps."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    t_compute: float
+    t_memory: float
+    t_ici: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float            # MODEL_FLOPS / (chips · flops_per_chip)
+    collective_breakdown: dict[str, float]
+    xla_flops: Optional[float] = None      # raw cost_analysis (body-once)
+    xla_bytes: Optional[float] = None
+    memory_stats: Optional[dict] = None
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_ici)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute utilization at the modeled bound: the MFU the step
+        would achieve if it runs exactly at max(term)s."""
+        if self.bound_time <= 0:
+            return 0.0
+        t_useful = (self.model_flops_total / self.n_chips) / _PEAK
+        return t_useful / self.bound_time
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        return (f"{self.arch:22s} {self.shape:12s} {self.mesh:6s} "
+                f"Tc={self.t_compute*1e3:9.3f}ms Tm={self.t_memory*1e3:9.3f}ms "
+                f"Ti={self.t_ici*1e3:9.3f}ms -> {self.dominant:8s} "
+                f"useful={self.useful_ratio:6.1%} "
+                f"roofline_frac={self.roofline_fraction:6.1%}")
+
+
+_PEAK = 197e12  # set properly via analyze_compiled_text(hw=...)
+
+
+def analyze_compiled_text(text: str, *, arch: str, shape: ShapeConfig,
+                          mesh_name: str, n_chips: int, hw: HardwareConfig,
+                          cfg: ModelConfig, cost: Optional[dict] = None,
+                          memory_stats: Optional[dict] = None
+                          ) -> RooflineReport:
+    global _PEAK
+    _PEAK = hw.peak_flops
+    comps = parse_module(text)
+    entry = find_entry(comps, text)
+    mults = nesting_multipliers(comps, entry)
+    fused = _fusion_computations(comps)
+
+    flops = parsed_dot_flops(comps, mults)
+    hbm = traffic_bytes(comps, mults, fused)
+    wire, by_op = collective_wire_bytes(comps, mults, default_group=n_chips)
+
+    t_c = flops / hw.peak_flops
+    t_m = hbm / hw.hbm_bw
+    t_i = wire / hw.ici_bw
+    dom = max(("compute", t_c), ("memory", t_m), ("ici", t_i),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    useful = mf / (n_chips * flops) if flops else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, n_chips=n_chips,
+        flops_per_chip=flops, hbm_bytes_per_chip=hbm,
+        wire_bytes_per_chip=wire, t_compute=t_c, t_memory=t_m, t_ici=t_i,
+        dominant=dom, model_flops_total=mf, useful_ratio=useful,
+        collective_breakdown=by_op,
+        xla_flops=(cost or {}).get("flops"),
+        xla_bytes=(cost or {}).get("bytes accessed"),
+        memory_stats=memory_stats)

@@ -1,0 +1,13 @@
+from repro.train.optimizer import (  # noqa: F401
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    lr_schedule,
+)
+from repro.train.grad_compression import (  # noqa: F401
+    compress_int8,
+    decompress_int8,
+    make_compressed_psum,
+)
+from repro.train.trainer import Trainer, TrainState, make_train_step  # noqa: F401

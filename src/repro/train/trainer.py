@@ -1,0 +1,276 @@
+"""Production trainer: pjit'd step with microbatched gradient accumulation,
+mixed precision, optional int8-compressed DP all-reduce, checkpoint/restart
+fault tolerance, and a straggler watchdog.
+
+Large-scale posture (DESIGN.md §4):
+  - params/optimizer sharded by the logical rules (FSDP over `data`, TP over
+    `model`), batch over (`pod`,`data`) — ZeRO-3-style memory scaling under
+    plain pjit.
+  - microbatch accumulation bounds activation memory AND gives XLA's
+    latency-hiding scheduler per-microbatch reduce-scatters to overlap with
+    the next microbatch's compute.
+  - fault tolerance: every state mutation flows through TrainState; the loop
+    checkpoints asynchronously, detects straggling steps by deadline, and on
+    failure restores the last checkpoint and continues (elastic: checkpoints
+    are mesh-layout-free, so the restart may use a different mesh/device
+    count).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+from repro.models.model import ModelApi
+from repro.parallel.sharding import resolve, resolve_tree
+from repro.train import grad_compression as gc
+from repro.train.optimizer import (AdamWState, adamw_init, adamw_update,
+                                   opt_spec_like)
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    residuals: Optional[Any] = None    # error-feedback state (compression)
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.residuals), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Step construction
+# ---------------------------------------------------------------------------
+
+def _split_microbatches(batch, m):
+    def r(x):
+        b = x.shape[0]
+        assert b % m == 0, (b, m)
+        return x.reshape(m, b // m, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(api: ModelApi, tcfg: TrainConfig, *,
+                    mesh=None, compress: Optional[str] = None) -> Callable:
+    """Returns ``step(state, batch) -> (state, metrics)`` (pure; jit outside).
+
+    compress: None | "int8" — int8 error-feedback all-reduce over the batch
+    axes (runs the reduction explicitly; requires grads to be DP-identical,
+    i.e. it compresses the replica-mean — see grad_compression.py).
+    """
+    M = tcfg.microbatches
+    fwd_kw: dict = {"remat": tcfg.remat}
+    if tcfg.scan_group > 1:
+        fwd_kw["scan_group"] = tcfg.scan_group
+    if api.cfg.n_experts and mesh is not None:
+        # MoE dispatch groups = batch shards: the (E, G, C, D) dispatch
+        # buffer shards over the data axes instead of replicating (G=1
+        # would leave the capacity buffer unshardable -> TB-scale
+        # all-gathers on the 8-expert configs).
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes)) \
+            if hasattr(mesh, "axis_sizes") else dict(mesh.shape)
+        dp = 1
+        for a in ("pod", "data"):
+            dp *= sizes.get(a, 1)
+        fwd_kw["n_groups"] = dp
+
+    def loss_fn(params, mb):
+        loss, aux = api.loss(params, mb, **fwd_kw)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if M <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, grads
+        mbs = _split_microbatches(batch, M)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, aux), g = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, b: a + b, acc, g)
+            return (acc, loss_acc + loss), aux
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), auxs = jax.lax.scan(body, (zeros, jnp.float32(0)), mbs)
+        grads = jax.tree.map(lambda g: g / M, gsum)
+        aux = jax.tree.map(lambda a: jnp.mean(a), auxs)
+        return loss_sum / M, aux, grads
+
+    batch_axes = tuple(a for a in ("pod", "data")
+                       if mesh is not None and a in mesh.axis_names)
+
+    def step(state: TrainState, batch):
+        loss, aux, grads = compute_grads(state.params, batch)
+        residuals = state.residuals
+        if compress == "int8" and batch_axes:
+            cpsum = gc.make_compressed_psum(batch_axes)
+
+            def reduced(g, r):
+                # grads out of pjit backward are already the replica mean;
+                # re-quantizing and re-reducing the mean is the single-program
+                # form of the wire-compression (see module docstring).
+                return cpsum(g, r)
+
+            grads, residuals = jax.shard_map(
+                reduced, mesh=mesh,
+                in_specs=(P(), P()), out_specs=(P(), P()),
+                check_vma=False)(grads, residuals)
+        params, opt, stats = adamw_update(tcfg, state.params, grads, state.opt)
+        metrics = {"loss": loss, **stats,
+                   **{k: v for k, v in aux.items()}}
+        return TrainState(params=params, opt=opt, residuals=residuals), metrics
+
+    return step
+
+
+def state_shardings(api: ModelApi, mesh, state: TrainState):
+    """NamedSharding pytree for TrainState on ``mesh`` (logical rules)."""
+    pspec = api.param_spec()
+    shapes = jax.eval_shape(lambda s: s, state)
+
+    logical = {
+        "params": pspec,
+        "opt": opt_spec_like(pspec, use_master=state.opt.master is not None),
+        "res": pspec if state.residuals is not None else None,
+    }
+
+    def build(log_tree, shape_tree):
+        spec_tree = resolve_tree(log_tree, shape_tree, mesh)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+    params_sh = build(logical["params"], shapes.params)
+    mu_sh = build(logical["opt"]["mu"], shapes.opt.mu)
+    nu_sh = build(logical["opt"]["nu"], shapes.opt.nu)
+    master_sh = (build(logical["opt"]["master"], shapes.opt.master)
+                 if state.opt.master is not None else None)
+    res_sh = (build(logical["res"], shapes.residuals)
+              if state.residuals is not None else None)
+    opt_sh = AdamWState(step=NamedSharding(mesh, P()), mu=mu_sh, nu=nu_sh,
+                        master=master_sh)
+    return TrainState(params=params_sh, opt=opt_sh, residuals=res_sh)
+
+
+def batch_shardings(mesh, batch_like):
+    def one(x):
+        spec = resolve(("batch",) + (None,) * (x.ndim - 1), x.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, batch_like)
+
+
+# ---------------------------------------------------------------------------
+# The driver loop (host side): checkpointing, watchdog, restart
+# ---------------------------------------------------------------------------
+
+class Trainer:
+    def __init__(self, api: ModelApi, tcfg: TrainConfig, *, mesh=None,
+                 compress: Optional[str] = None, ckpt_manager=None):
+        self.api = api
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.compress = compress
+        self.ckpt = ckpt_manager
+        self._step_raw = make_train_step(api, tcfg, mesh=mesh,
+                                         compress=compress)
+        self._step_jit: Optional[Callable] = None
+        self.data_step = 0          # resumable data-pipeline cursor
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self, rng=None) -> TrainState:
+        rng = jax.random.PRNGKey(self.tcfg.seed) if rng is None else rng
+        params = self.api.init(rng)
+        opt = adamw_init(params)
+        res = (gc.init_residuals(params) if self.compress else None)
+        return TrainState(params=params, opt=opt, residuals=res)
+
+    def _jit_step(self, state: TrainState, batch):
+        if self._step_jit is not None:
+            return self._step_jit
+        if self.mesh is not None:
+            ssh = state_shardings(self.api, self.mesh, state)
+            bsh = batch_shardings(self.mesh, batch)
+            self._step_jit = jax.jit(self._step_raw,
+                                     in_shardings=(ssh, bsh),
+                                     out_shardings=(ssh, None),
+                                     donate_argnums=(0,))
+        else:
+            self._step_jit = jax.jit(self._step_raw, donate_argnums=(0,))
+        return self._step_jit
+
+    # -- fault-tolerant loop ---------------------------------------------------
+    def run(self, state: TrainState, data: Iterator, *, steps: int,
+            start_step: int = 0, max_restarts: int = 3,
+            fail_injector: Optional[Callable[[int], None]] = None
+            ) -> tuple[TrainState, list[dict]]:
+        """Run ``steps`` steps with checkpoint/restart fault tolerance.
+
+        ``fail_injector(step)`` may raise to simulate node failure (tests).
+        On failure: restore the latest checkpoint (possibly on a different
+        mesh — checkpoints are layout-free) and continue. The data pipeline
+        is step-indexed so replayed batches are identical.
+        """
+        history: list[dict] = []
+        step = start_step
+        restarts = 0
+        while step < steps:
+            try:
+                batch = data(step) if callable(data) else next(data)
+                if fail_injector is not None:
+                    fail_injector(step)
+                t0 = time.perf_counter()
+                fn = self._jit_step(state, batch)
+                state, metrics = fn(state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                dt = time.perf_counter() - t0
+                metrics.update(step=step, wall_s=dt)
+                history.append(metrics)
+                if (self.tcfg.step_deadline_s
+                        and dt > self.tcfg.step_deadline_s):
+                    log.warning("straggler: step %d took %.3fs > deadline %.3fs"
+                                " — flagged for re-dispatch", step, dt,
+                                self.tcfg.step_deadline_s)
+                    history[-1]["straggler"] = True
+                if self.ckpt is not None and self.tcfg.ckpt_every \
+                        and (step + 1) % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save(step + 1, state, blocking=False)
+                step += 1
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:  # node failure / preemption analogue
+                restarts += 1
+                if self.ckpt is None or restarts > max_restarts:
+                    raise
+                log.warning("step %d failed (%s); restoring last checkpoint "
+                            "(restart %d/%d)", step, e, restarts, max_restarts)
+                self.ckpt.wait()
+                restored, ckpt_step = self.ckpt.restore_latest(
+                    like=state, mesh=self.mesh)
+                if restored is None:      # no checkpoint yet: restart clean
+                    state = self.init_state()
+                    step = start_step
+                else:
+                    state = restored
+                    step = ckpt_step
+                self._step_jit = None     # mesh/layout may have changed
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return state, history

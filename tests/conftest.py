@@ -1,0 +1,21 @@
+import os
+import sys
+
+# tests see ONE cpu device (the dry-run forces 512 only in its own process)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def assert_close(a, b, rtol=2e-3, atol=2e-3, msg=""):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=rtol, atol=atol, err_msg=msg)

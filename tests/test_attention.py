@@ -1,0 +1,141 @@
+"""Attention equivalences: blocked vs naive, prefill vs incremental decode,
+scalar vs vector positions, ring cache."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import attention as attn
+from repro.models import transformer as tf
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    """O(S^2)-materializing reference."""
+    H, KH = q.shape[1], k.shape[1]
+    if KH != H:
+        k = jnp.repeat(k, H // KH, axis=1)
+        v = jnp.repeat(v, H // KH, axis=1)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    Sq, Sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    keep = jnp.ones((Sq, Sk), bool)
+    if causal:
+        keep &= qpos >= kpos
+    if window:
+        keep &= qpos - kpos < window
+    s = jnp.where(keep[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("gemma_2b").scaled(n_kv_heads=2, window=0)
+
+
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("q_block", [8, 16, 64])
+def test_blocked_sdpa_matches_naive(cfg, window, q_block):
+    c = cfg.scaled(window=window)
+    p = attn.init_attention(jax.random.PRNGKey(1), c)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, c.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    positions = jnp.arange(64, dtype=jnp.int32)
+    out = attn.attn_train(p, c, x, positions, causal=True, window=window,
+                          q_block=q_block)
+    # reference through the same projections
+    q, k, v = attn._project_qkv(p, c, x, positions)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    ref = attn._out_proj(p, c, ref.astype(x.dtype))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=3e-2,
+                               atol=3e-2)
+
+
+def test_prefill_matches_incremental_decode(cfg):
+    """Decode one token at a time == full-sequence forward (dense LM)."""
+    c = cfg
+    params = tf.init_lm(jax.random.PRNGKey(0), c)
+    S, B = 12, 2
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                                c.vocab_size, dtype=jnp.int32)
+    full_logits, _ = tf.lm_forward(params, c, {"tokens": tokens})
+
+    cache = tf.lm_decode_init(params, c, B, max_seq=32)
+    dec = []
+    for t in range(S):
+        lg, cache = tf.lm_decode_step(params, c, cache, tokens[:, t:t + 1],
+                                      jnp.int32(t))
+        dec.append(lg[:, 0])
+    dec = jnp.stack(dec, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=4e-2, atol=4e-2)
+
+
+def test_lm_prefill_cache_matches_decode(cfg):
+    """lm_prefill's padded cache continues identically to step-by-step."""
+    c = cfg
+    params = tf.init_lm(jax.random.PRNGKey(0), c)
+    B, S = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0,
+                                c.vocab_size, dtype=jnp.int32)
+    logits_pre, cache_pre = tf.lm_prefill(params, c, {"tokens": tokens}, 32)
+
+    cache = tf.lm_decode_init(params, c, B, max_seq=32)
+    for t in range(S):
+        lg, cache = tf.lm_decode_step(params, c, cache, tokens[:, t:t + 1],
+                                      jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits_pre[:, -1], np.float32),
+                               np.asarray(lg[:, 0], np.float32), rtol=4e-2,
+                               atol=4e-2)
+    nxt = jnp.argmax(lg[:, 0], -1)[:, None].astype(jnp.int32)
+    lg_a, _ = tf.lm_decode_step(params, c, cache, nxt, jnp.int32(S))
+    lg_b, _ = tf.lm_decode_step(params, c, cache_pre, nxt, jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(lg_a, np.float32),
+                               np.asarray(lg_b, np.float32), rtol=4e-2,
+                               atol=4e-2)
+
+
+def test_vector_pos_matches_scalar(cfg):
+    c = cfg
+    p = attn.init_attention(jax.random.PRNGKey(1), c)
+    B = 3
+    cache = attn.init_cache(c, B, 16)
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, 1, c.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    out_s, cache_s = attn.attn_decode(p, c, x, cache, jnp.int32(4))
+    out_v, cache_v = attn.attn_decode(p, c, x, cache,
+                                      jnp.full((B,), 4, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out_s, np.float32),
+                               np.asarray(out_v, np.float32), rtol=2e-2,
+                               atol=2e-2)
+    np.testing.assert_allclose(np.asarray(cache_s["k"], np.float32),
+                               np.asarray(cache_v["k"], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ring_cache_sliding_window(cfg):
+    """Ring cache decode == full cache decode when window masks the past."""
+    W = 4
+    c = cfg.scaled(window=W)
+    p = attn.init_attention(jax.random.PRNGKey(1), c)
+    B, S = 2, 10
+    xs = jax.random.normal(jax.random.PRNGKey(6), (B, S, c.d_model),
+                           jnp.float32).astype(jnp.bfloat16)
+    ring = attn.init_cache(c, B, 64)             # ring of size W
+    assert ring["k"].shape[2] == W and "kpos" in ring
+    full = attn.init_cache(c, B, 64, window=0)   # full cache, masked by cfg
+    for t in range(S):
+        o_r, ring = attn.attn_decode(p, c, xs[:, t:t + 1], ring, jnp.int32(t))
+        o_f, full = attn.attn_decode(p, c, xs[:, t:t + 1], full, jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(o_r, np.float32),
+                                   np.asarray(o_f, np.float32), rtol=3e-2,
+                                   atol=3e-2, err_msg=f"t={t}")

@@ -1,0 +1,105 @@
+"""Assigned-architecture configs match the assignment sheet; param counts hit
+their advertised sizes; shape applicability rules."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, canonical, get_config, get_smoke_config
+from repro.configs.base import shape_applicable
+
+SPEC = {  # arch: (L, d_model, H, kv, d_ff, vocab)
+    "mixtral_8x22b": (56, 6144, 48, 8, 0, 32768),
+    "qwen3_moe_30b_a3b": (48, 2048, 32, 4, 0, 151936),
+    "mamba2_780m": (48, 1536, 0, 0, 0, 50280),
+    "whisper_large_v3": (32, 1280, 20, 20, 5120, 51866),
+    "llava_next_34b": (60, 7168, 56, 8, 20480, 64000),
+    "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+    "deepseek_coder_33b": (62, 7168, 56, 8, 19200, 32256),
+    "gemma_2b": (18, 2048, 8, 1, 16384, 256000),
+    "mistral_large_123b": (88, 12288, 96, 8, 28672, 32768),
+    "zamba2_1p2b": (38, 2048, 32, 32, 8192, 32000),
+}
+
+# advertised total parameter counts (billions) and tolerance
+SIZES = {
+    "mixtral_8x22b": (141, 0.15),
+    "qwen3_moe_30b_a3b": (30.5, 0.2),
+    "mamba2_780m": (0.78, 0.25),
+    "llava_next_34b": (34, 0.2),
+    "minitron_4b": (4.2, 0.3),
+    "deepseek_coder_33b": (33, 0.15),
+    "gemma_2b": (2.5, 0.3),
+    "mistral_large_123b": (123, 0.1),
+    "zamba2_1p2b": (1.2, 0.35),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, dff, vocab = SPEC[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    if H:
+        assert cfg.n_heads == H and cfg.n_kv_heads == kv
+    assert cfg.d_ff == dff
+    assert cfg.vocab_size == vocab
+
+
+def test_moe_configs():
+    mix = get_config("mixtral-8x22b")
+    assert mix.n_experts == 8 and mix.top_k == 2 and mix.moe_d_ff == 16384
+    assert mix.window == 4096  # SWA
+    q = get_config("qwen3-moe-30b-a3b")
+    assert q.n_experts == 128 and q.top_k == 8 and q.moe_d_ff == 768
+
+
+def test_ssm_configs():
+    m = get_config("mamba2-780m")
+    assert m.ssm_state == 128 and m.family == "ssm"
+    z = get_config("zamba2-1.2b")
+    assert z.ssm_state == 64 and z.family == "hybrid" and z.attn_every > 0
+
+
+@pytest.mark.parametrize("arch", sorted(SIZES))
+def test_param_count_matches_advertised(arch):
+    cfg = get_config(arch)
+    want_b, tol = SIZES[arch]
+    got_b = cfg.param_count() / 1e9
+    assert abs(got_b - want_b) / want_b <= tol, (arch, got_b, want_b)
+
+
+def test_active_params_moe():
+    mix = get_config("mixtral_8x22b")
+    active = mix.active_param_count() / 1e9
+    assert 30 <= active <= 50, active          # ~39B advertised
+    q = get_config("qwen3_moe_30b_a3b")
+    assert 2 <= q.active_param_count() / 1e9 <= 5   # ~3B active
+
+
+def test_shape_applicability():
+    # long_500k runs only for sub-quadratic archs
+    runs = {a: shape_applicable(get_config(a), SHAPES["long_500k"])[0]
+            for a in ARCHS}
+    assert runs["mamba2_780m"] and runs["zamba2_1p2b"]
+    assert runs["mixtral_8x22b"]          # SWA rolling cache
+    for dense in ("gemma_2b", "mistral_large_123b", "deepseek_coder_33b",
+                  "llava_next_34b", "whisper_large_v3", "qwen3_moe_30b_a3b"):
+        assert not runs[dense], dense
+    # every other shape runs everywhere
+    for a in ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(a), SHAPES[s])[0]
+
+
+def test_canonical_aliases():
+    assert canonical("mixtral-8x22b") == "mixtral_8x22b"
+    assert canonical("zamba2-1.2b") == "zamba2_1p2b"
+    with pytest.raises(KeyError):
+        canonical("not-an-arch")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_config_small(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.family == get_config(arch).family
+    assert cfg.d_model <= 128 and cfg.n_layers <= 4
+    assert cfg.param_count() < 5e6

@@ -1,0 +1,104 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps,
+and exact noise-payload accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.noise_probes.ops import run_probe
+from repro.kernels.noise_probes.ref import probe_ref
+from repro.kernels.noisy_matmul.ops import default_noise_operand, noisy_matmul
+from repro.kernels.noisy_matmul.ref import fp_noise_ref, matmul_ref
+from repro.kernels.spmv_ell.ops import spmv_ell
+from repro.kernels.spmv_ell.ref import make_band_ell, spmv_ell_ref
+
+
+@pytest.mark.parametrize("M,N,K", [(256, 256, 256), (512, 256, 384),
+                                   (128, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes_dtypes(M, N, K, dtype):
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32).astype(dtype)
+    out, _ = noisy_matmul(a, b, bm=128, bn=128, bk=128)
+    ref = matmul_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("mode,k", [("fp", 1), ("fp", 5), ("mxu", 2),
+                                    ("vmem", 3)])
+def test_matmul_noise_does_not_change_result(mode, k):
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 256), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
+    clean, _ = noisy_matmul(a, b, bm=128, bn=128, bk=128)
+    noisy, nacc = noisy_matmul(a, b, mode=mode, k_noise=k,
+                               bm=128, bn=128, bk=128)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(noisy))
+    assert np.abs(np.asarray(nacc)).sum() > 0     # payload executed
+
+
+def test_matmul_fp_noise_exact():
+    a = jnp.ones((256, 256), jnp.float32)
+    b = jnp.ones((256, 256), jnp.float32)
+    noise = default_noise_operand()
+    _, nacc = noisy_matmul(a, b, noise, mode="fp", k_noise=3,
+                           bm=128, bn=128, bk=128)
+    n_steps = 2 * 2 * 2
+    np.testing.assert_allclose(np.asarray(nacc),
+                               np.asarray(fp_noise_ref(noise, 3, n_steps)),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("H,KH,Sq,Sk,hd,causal,window", [
+    (4, 4, 256, 256, 64, True, 0),
+    (8, 2, 256, 256, 64, True, 0),      # GQA
+    (4, 1, 128, 128, 128, True, 0),     # MQA
+    (4, 4, 128, 128, 64, False, 0),     # bidirectional (encoder)
+    (4, 2, 256, 256, 64, True, 64),     # sliding window
+])
+def test_flash_attention_sweep(H, KH, Sq, Sk, hd, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, H, Sq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (2, KH, Sk, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (2, KH, Sk, hd), jnp.float32)
+    out, _ = flash_attention(q, k, v, causal=causal, window=window,
+                             bq=128, bk=128)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 4, 128, 64), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 4, 128, 64), jnp.float32).astype(jnp.bfloat16)
+    out, _ = flash_attention(q, k, v, bq=64, bk=64)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=3e-2,
+                               atol=3e-2)
+
+
+@pytest.mark.parametrize("n,L,q", [(512, 128, 0.0), (1024, 128, 0.5),
+                                   (512, 256, 1.0)])
+def test_spmv_sweep(n, L, q):
+    vals, cols = make_band_ell(n, L, q, seed=1)
+    x = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32)
+    y, _ = spmv_ell(vals, cols, x, br=128)
+    ref = spmv_ell_ref(vals, cols, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["fp", "mxu", "vmem"])
+@pytest.mark.parametrize("k,n_steps", [(1, 4), (3, 16)])
+def test_probe_exact(mode, k, n_steps):
+    got = run_probe(mode=mode, k_noise=k, n_steps=n_steps)
+    want = probe_ref(default_noise_operand(), mode=mode, k_noise=k,
+                     n_steps=n_steps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
