@@ -8,6 +8,27 @@ from typing import Any
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
 
+# When set (benchmarks.run sets it by default), every characterization sweep
+# becomes a resumable campaign: measured points persist under this directory
+# and a re-run only measures what the store is missing.
+CAMPAIGN_DIR_VAR = "REPRO_CAMPAIGN_DIR"
+
+
+def characterize(ctl, region, modes) -> Any:
+    """``Controller.characterize`` through the campaign engine when a store
+    directory is configured, plain (non-persistent) otherwise."""
+    campaign_dir = os.environ.get(CAMPAIGN_DIR_VAR, "")
+    if not campaign_dir:
+        return ctl.characterize(region, modes=modes)
+    from repro.core import Campaign
+
+    camp = Campaign(os.path.join(campaign_dir, f"{region.name}.jsonl"), ctl)
+    rep = camp.characterize(region, modes)
+    if camp.stats.cached:
+        print(f"  [{region.name}: {camp.stats.cached} points from store, "
+              f"{camp.stats.measured} measured]")
+    return rep
+
 
 def save(name: str, payload: Any) -> None:
     os.makedirs(OUT_DIR, exist_ok=True)

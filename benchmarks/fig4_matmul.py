@@ -8,7 +8,7 @@ time (near-zero absorption in every mode).
 """
 from __future__ import annotations
 
-from benchmarks.common import banner, save
+from benchmarks.common import banner, characterize, save
 from repro.bench.kernels import matmul_region
 from repro.core import Controller
 
@@ -20,7 +20,7 @@ def run(quick: bool = True) -> dict:
     rows = {}
     for opt in (False, True):
         region = matmul_region(n=n, optimized=opt)
-        rep = ctl.characterize(region, modes=("fp_add", "l1_ld"))
+        rep = characterize(ctl, region, ("fp_add", "l1_ld"))
         rows[region.name] = {
             "abs": rep.absorptions(),
             "bottleneck": rep.bottleneck.label,

@@ -8,7 +8,7 @@ host — the differential signatures that validate the method:
 """
 from __future__ import annotations
 
-from benchmarks.common import banner, save
+from benchmarks.common import banner, characterize, save
 from repro.bench.kernels import haccmk_region, lat_mem_rd_region, stream_region
 from repro.core import Controller, classify
 
@@ -27,7 +27,7 @@ def run(quick: bool = True) -> dict:
     ctl = Controller(reps=3 if quick else 5, verify_payload=False)
     rows = {}
     for name, region in regions.items():
-        rep = ctl.characterize(region, modes=("fp_add", "l1_ld", "mem_ld"))
+        rep = characterize(ctl, region, ("fp_add", "l1_ld", "mem_ld"))
         rows[name] = {"abs": rep.absorptions(),
                       "abs_rel": rep.absorptions(relative=True),
                       "bottleneck": rep.bottleneck.label,

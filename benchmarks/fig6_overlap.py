@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import banner, save
+from benchmarks.common import banner, characterize, save
 from repro.core import (Controller, DecanTarget, classify,
                         cross_check_with_decan, loop_region, run_decan)
 
@@ -70,7 +70,7 @@ def run(quick: bool = True) -> dict:
         "livermore_1351",
         lambda noise, k: _livermore(True, True, n_iter, noise=noise, k=k),
         lambda: (buf,))
-    rep = ctl.characterize(region, modes=("fp_add", "l1_ld"))
+    rep = characterize(ctl, region, ("fp_add", "l1_ld"))
 
     noise_only = classify(rep.absorptions())
     combined = cross_check_with_decan(noise_only, dec.sat_fp, dec.sat_ls)

@@ -9,7 +9,7 @@ invisible to plain performance numbers.
 """
 from __future__ import annotations
 
-from benchmarks.common import banner, save
+from benchmarks.common import banner, characterize, save
 from repro.bench.kernels import spmxv_region
 from repro.core import Controller, measure
 
@@ -29,7 +29,7 @@ def run(quick: bool = True) -> dict:
             t0 = measure(region.build("", 0), region.args_for("", 0),
                          reps=3 if quick else 5)
             gflops = 2.0 * n * nnz / t0 / 1e9
-            rep = ctl.characterize(region, modes=("fp_add", "l1_ld"))
+            rep = characterize(ctl, region, ("fp_add", "l1_ld"))
             rows.append({"q": q, "gflops": gflops,
                          "abs_fp": rep.results["fp_add"].fit.k1,
                          "abs_l1": rep.results["l1_ld"].fit.k1,

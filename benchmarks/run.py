@@ -3,10 +3,17 @@
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig5,fig7]
 
 Writes per-table JSON to experiments/bench/ and prints the summary tables.
+
+Characterization sweeps run as resumable campaigns by default: every measured
+(region, mode, k, t) point lands in a JSONL store under --campaign-dir, and a
+re-run (after a crash, a ctrl-C, or to add modes) only measures what is
+missing. ``--no-campaign`` restores the old measure-everything-every-time
+behaviour; delete the store directory to force fresh numbers.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 
@@ -16,7 +23,20 @@ def main() -> None:
                     help="larger sizes / more reps (slower, steadier)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset, e.g. fig5,table3")
+    ap.add_argument("--campaign-dir", default="experiments/campaigns/bench",
+                    help="JSONL store directory for resumable sweeps")
+    ap.add_argument("--no-campaign", action="store_true",
+                    help="measure every point afresh (no persistence)")
     args = ap.parse_args()
+
+    from benchmarks.common import CAMPAIGN_DIR_VAR
+    if args.no_campaign:
+        os.environ.pop(CAMPAIGN_DIR_VAR, None)
+    else:
+        # quick/full use different region sizes: separate stores so a --full
+        # run never replays quick-mode timings (region names don't encode n)
+        os.environ[CAMPAIGN_DIR_VAR] = os.path.join(
+            args.campaign_dir, "full" if args.full else "quick")
 
     from benchmarks import (fig4_matmul, fig5_hwchar, fig6_overlap,
                             fig7_spmxv, table1_systems, table3_decan,

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import banner, save
+from benchmarks.common import banner, characterize, save
 from repro.bench.kernels import haccmk_region, lat_mem_rd_region, stream_region
 from repro.configs.base import CXL_MEM, TPU_V5E, TPU_V5P
 from repro.core import Controller, StepTerms, predict_absorption
@@ -51,7 +51,7 @@ def run(quick: bool = True) -> dict:
         "lat_mem_rd": lat_mem_rd_region(table_len=1 << 20, n_iter=2048),
         "haccmk": haccmk_region(n_iter=60_000),
     }.items():
-        rep = ctl.characterize(region, modes=("fp_add", "l1_ld", "mem_ld"))
+        rep = characterize(ctl, region, ("fp_add", "l1_ld", "mem_ld"))
         a = rep.absorptions()
         host[name] = {"fp": a["fp_add"], "l1": a["l1_ld"], "mem": a["mem_ld"],
                       "t0_s": rep.results["fp_add"].fit.t0}

@@ -24,7 +24,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import banner, save
+from benchmarks.common import banner, characterize, save
 from repro.core import (Controller, DecanTarget, classify,
                         cross_check_with_decan, loop_region, run_decan)
 
@@ -125,7 +125,7 @@ def run(quick: bool = True) -> dict:
             return _kernel(kind, depth, True, True, n_it, noise=noise, k=k)
 
         region = loop_region(f"t3_{name}", make, lambda: (a, b, c, x0))
-        rep = ctl.characterize(region, modes=("fp_add", "l1_ld"))
+        rep = characterize(ctl, region, ("fp_add", "l1_ld"))
         noise_label = classify(rep.absorptions())
         combined = cross_check_with_decan(noise_label, dec.sat_fp, dec.sat_ls)
         rows[name] = {

@@ -1,0 +1,132 @@
+"""JAX version-compatibility layer.
+
+The repo targets the modern mesh API (``jax.sharding.get_abstract_mesh``,
+``jax.sharding.AxisType``, ``jax.set_mesh``, ``jax.shard_map``) but must run
+on JAX 0.4.x where none of those exist. Every version-dependent call goes
+through the stable helpers below — no module under ``src/repro/`` may touch
+``jax.sharding.get_abstract_mesh`` / ``jax.sharding.AxisType`` directly.
+
+Policy: feature-detect once at import (getattr, never version string
+comparison), prefer the modern API when present, and fall back to the oldest
+equivalent that preserves semantics:
+
+  get_abstract_mesh  -> thread-local physical mesh (``with mesh:`` context)
+  AxisType.Auto      -> omitted (0.4.x meshes are implicitly "auto")
+  jax.set_mesh       -> jax.sharding.use_mesh -> ``with mesh:``
+  jax.shard_map      -> jax.experimental.shard_map (check_vma -> check_rep)
+  AbstractMesh(a, b) -> AbstractMesh(tuple(zip(names, sizes)))
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional
+
+import jax
+
+# ``AxisType`` is None on JAX versions that predate explicit/auto axis types.
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+_get_abstract_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+_set_mesh = getattr(jax, "set_mesh", None) or getattr(jax.sharding, "use_mesh",
+                                                      None)
+_shard_map = getattr(jax, "shard_map", None)
+
+
+def axis_types_auto(n_axes: int) -> dict:
+    """``axis_types=(AxisType.Auto,) * n`` as a splat-able kwargs dict.
+
+    Empty on JAX versions without axis types, where every mesh axis already
+    behaves as Auto.
+    """
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types whenever the API supports them."""
+    try:
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices,
+                             **axis_types_auto(len(axis_names)))
+    except TypeError:
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def abstract_mesh(axis_shapes, axis_names) -> "jax.sharding.AbstractMesh":
+    """Version-proof ``AbstractMesh`` constructor (sizes + names)."""
+    AM = jax.sharding.AbstractMesh
+    try:
+        return AM(tuple(axis_shapes), tuple(axis_names),
+                  **axis_types_auto(len(axis_names)))
+    except (TypeError, ValueError):
+        # 0.4.x signature: AbstractMesh(((name, size), ...))
+        return AM(tuple(zip(axis_names, axis_shapes)))
+
+
+def get_abstract_mesh() -> Optional[Any]:
+    """The mesh of the enclosing ``set_mesh`` context, or None.
+
+    Unlike the raw modern API (which returns an *empty* AbstractMesh when no
+    mesh is set), this normalizes to None whenever there is no usable mesh, so
+    callers only ever branch on ``mesh is None``.
+    """
+    if _get_abstract_mesh is not None:
+        m = _get_abstract_mesh()
+    else:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+    if m is None or getattr(m, "empty", False) or not m.axis_names:
+        return None
+    return m
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Enter ``mesh`` as the ambient mesh (modern: abstract mesh context;
+    0.4.x: the thread-local physical mesh that pjit and collectives read)."""
+    if _set_mesh is not None:
+        with _set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with replication checking off, on any JAX."""
+    if _shard_map is not None:
+        try:
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
+        except TypeError:
+            pass  # older keyword spelling below
+    try:
+        from jax.experimental.shard_map import shard_map as sm
+    except ImportError:
+        sm = _shard_map
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def cost_analysis(compiled) -> Optional[dict]:
+    """``compiled.cost_analysis()`` normalized to a single dict (0.4.x wraps
+    the per-program properties in a one-element list)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else None
+    return cost
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` (newer JAX) or the classic psum-of-ones."""
+    f = getattr(jax.lax, "axis_size", None)
+    if f is not None:
+        return f(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    """{axis name: size} for Mesh and AbstractMesh across versions."""
+    if hasattr(mesh, "axis_sizes"):
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return dict(mesh.shape.items())

@@ -23,10 +23,12 @@ from repro.core.analytic import (  # noqa: F401
     predict_absorption,
     predict_curve,
 )
+from repro.core.campaign import Campaign, CampaignStore  # noqa: F401
 from repro.core.classifier import BottleneckReport, classify, cross_check_with_decan  # noqa: F401
 from repro.core.controller import Controller, RegionReport, RegionTarget, loop_region  # noqa: F401
 from repro.core.decan import DecanResult, DecanTarget, run_decan  # noqa: F401
-from repro.core.injector import inject, init_state, probe_step, verify_semantics  # noqa: F401
+from repro.core.injector import (inject, inject_rt, init_state, probe_step,  # noqa: F401
+                                 step_region, verify_semantics)
 from repro.core.loopnoise import LoopNoise, make_loop_modes, noisy_loop  # noqa: F401
 from repro.core.noise import NOISE_SCOPE, NoiseMode, NoiseScale, PatternCost, make_modes  # noqa: F401
 from repro.core.payload import InjectionReport, analyze_injection, body_size  # noqa: F401

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -19,6 +20,22 @@ import numpy as np
 # ---------------------------------------------------------------------------
 # Timing
 # ---------------------------------------------------------------------------
+
+# Coarse timers (or a fully cached call) can report 0.0 s; every ratio in this
+# module divides by a baseline, so baselines are floored to one timer tick.
+MIN_MEASURABLE_S = 1e-9
+
+
+def floor_time(t: float, what: str = "baseline") -> float:
+    """Clamp a measured time to the minimum measurable tick, with a warning —
+    a 0.0 baseline otherwise poisons every downstream ratio (t/t0, drift)."""
+    if t < MIN_MEASURABLE_S:
+        warnings.warn(
+            f"{what} measured {t:.3g}s, below the {MIN_MEASURABLE_S:.0e}s "
+            "timer resolution; clamping (absorption ratios for this series "
+            "are unreliable)", RuntimeWarning, stacklevel=2)
+        return MIN_MEASURABLE_S
+    return t
 
 
 def measure(fn: Callable, args: tuple = (), *, reps: int = 5, warmup: int = 2,
@@ -49,6 +66,20 @@ def measure(fn: Callable, args: tuple = (), *, reps: int = 5, warmup: int = 2,
 
 DEFAULT_KS = (0, 1, 2, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128, 192, 256)
 
+# online saturation rule: stop after this many consecutive points past
+# stop_ratio×t0 (shared by sweep() and the campaign engine)
+STOP_CONSECUTIVE = 2
+
+
+def drift_corrected(ts: Sequence[float], drift: float) -> list[float]:
+    """Two-point linear drift correction: the k=0 kernel re-timed after the
+    sweep came out at ``drift``×t0, so divide a linear ramp out of the series.
+    Implausible (>2×) or negligible (<2%) drift returns ``ts`` unchanged."""
+    if len(ts) < 3 or not (0.5 < drift < 2.0 and abs(drift - 1.0) > 0.02):
+        return list(ts)
+    n = len(ts) - 1
+    return [t / (1.0 + (drift - 1.0) * i / n) for i, t in enumerate(ts)]
+
 
 @dataclasses.dataclass
 class AbsorptionCurve:
@@ -58,13 +89,13 @@ class AbsorptionCurve:
     stopped_early: bool = False
 
     def ratios(self) -> np.ndarray:
-        return np.asarray(self.ts) / self.ts[0]
+        return np.asarray(self.ts) / floor_time(self.ts[0], "t(k=0) baseline")
 
 
 def sweep(build: Callable[[int], Callable], *, mode: str = "",
           ks: Sequence[int] = DEFAULT_KS, args_for: Optional[Callable] = None,
           reps: int = 5, inner: int = 1, stop_ratio: float = 4.0,
-          stop_consecutive: int = 2,
+          stop_consecutive: int = STOP_CONSECUTIVE,
           drift_correct: bool = True) -> AbsorptionCurve:
     """Measure t(k) for increasing noise quantities.
 
@@ -89,7 +120,7 @@ def sweep(build: Callable[[int], Callable], *, mode: str = "",
         t = measure(fn, a, reps=reps, inner=inner)
         out_ks.append(k)
         out_ts.append(t)
-        if out_ts[0] > 0 and t / out_ts[0] > stop_ratio:
+        if t / floor_time(out_ts[0], f"sweep({mode}) t(k=0)") > stop_ratio:
             n_over += 1
             if n_over >= stop_consecutive:
                 stopped = True
@@ -99,11 +130,8 @@ def sweep(build: Callable[[int], Callable], *, mode: str = "",
     if drift_correct and len(out_ts) > 2:
         t0_end = measure(base_fn, base_args, reps=max(reps - 2, 2),
                          inner=inner)
-        drift = t0_end / out_ts[0]
-        if 0.5 < drift < 2.0 and abs(drift - 1.0) > 0.02:
-            n = len(out_ts) - 1
-            out_ts = [t / (1.0 + (drift - 1.0) * i / n)
-                      for i, t in enumerate(out_ts)]
+        drift = t0_end / floor_time(out_ts[0], f"sweep({mode}) t(k=0)")
+        out_ts = drift_corrected(out_ts, drift)
     return AbsorptionCurve(mode=mode, ks=out_ks, ts=out_ts, stopped_early=stopped)
 
 

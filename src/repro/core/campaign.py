@@ -1,0 +1,317 @@
+"""Campaign engine — persistent, resumable, fan-out noise-injection sweeps.
+
+The paper's methodology is a grid of measurements: for every (region, mode)
+pair, a k-sweep of wall-times. A campaign makes that grid a durable artifact
+instead of a transient loop:
+
+  * every measured point (region, mode, k, t) is appended to a JSONL store the
+    moment it exists — a killed campaign loses at most one point;
+  * re-running a campaign first replays the store: completed (region, mode)
+    sweeps are rebuilt from disk with ZERO new measurements, partially
+    measured sweeps resume at the first missing k;
+  * independent (region, mode) sweeps fan out through a worker pool. Builds,
+    compiles and payload verification parallelize; the actual timed
+    measurements serialize through a lock so concurrent workers never corrupt
+    each other's wall-clock readings.
+
+Combined with the controller's compile-once path (one runtime-k executable
+per sweep) this turns the slowest loop in the repo — recompile-per-(mode, k)
+— into a cached, restartable pipeline.
+
+Store schema (one JSON object per line; later records supersede earlier ones
+for the same key, so a settings change appends fresh data without rewriting):
+  {"kind": "meta",   "region": r, "mode": m, "reps": n, "compile_once": b}
+  {"kind": "sens",   "region": r, "mode": m, "value": s}
+  {"kind": "point",  "region": r, "mode": m, "k": k, "t": seconds}  # raw t
+  {"kind": "done",   "region": r, "mode": m, "ks": [...], "drift": f|null,
+   "stopped_early": b, "payload": {...}|null}
+  {"kind": "region", "region": r, "body_size": n}
+
+Points persist RAW; the two-point drift correction (absorption.sweep's
+behaviour) is applied at curve-assembly time using the drift factor recorded
+in the "done" marker, so replayed curves reproduce the original run exactly.
+Timings are only comparable under identical measurement settings, so each
+(region, mode) carries a "meta" record: resuming with different reps or a
+different sweep path (compile-once vs trace-per-k) discards the stored pair
+with a warning instead of splicing incompatible executables into one curve.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional, Sequence
+
+from repro.core.absorption import (STOP_CONSECUTIVE, AbsorptionCurve,
+                                   absorption, drift_corrected, floor_time,
+                                   measure)
+from repro.core.classifier import classify
+from repro.core.controller import (Controller, ModeResult, RegionReport,
+                                   RegionTarget, derive_body_size)
+from repro.core.payload import InjectionReport
+
+log = logging.getLogger("repro.campaign")
+
+
+class CampaignStore:
+    """Append-only JSONL measurement store, loaded eagerly on open.
+
+    Thread-safe: appends take a lock and flush immediately, so the on-disk
+    store is never more than one record behind the in-memory view.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.points: dict[tuple[str, str], dict[int, float]] = {}
+        self.sens: dict[tuple[str, str], float] = {}
+        self.done: dict[tuple[str, str], dict] = {}
+        self.meta: dict[tuple[str, str], dict] = {}
+        self.body_sizes: dict[str, int] = {}
+        self._lock = threading.Lock()
+        if os.path.exists(path):
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if line:
+                        self._ingest(json.loads(line))
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a")
+
+    def _ingest(self, rec: dict) -> None:
+        kind = rec.get("kind")
+        key = (rec.get("region"), rec.get("mode"))
+        if kind == "point":
+            self.points.setdefault(key, {})[int(rec["k"])] = float(rec["t"])
+        elif kind == "sens":
+            self.sens[key] = float(rec["value"])
+        elif kind == "done":
+            self.done[key] = rec
+        elif kind == "meta":
+            self.meta[key] = rec
+        elif kind == "region":
+            self.body_sizes[rec["region"]] = int(rec["body_size"])
+
+    def append(self, rec: dict) -> None:
+        with self._lock:
+            self._ingest(rec)
+            self._f.write(json.dumps(rec) + "\n")
+            self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+    # convenience views ----------------------------------------------------
+    def stored_ts(self, region: str, mode: str) -> dict[int, float]:
+        return self.points.get((region, mode), {})
+
+    def is_done(self, region: str, mode: str) -> bool:
+        return (region, mode) in self.done
+
+    def discard(self, region: str, mode: str) -> None:
+        """Drop a pair's in-memory data; the file keeps the old lines (this
+        run's fresh appends supersede them on the next load)."""
+        for d in (self.points, self.sens, self.done, self.meta):
+            d.pop((region, mode), None)
+
+
+@dataclasses.dataclass
+class CampaignStats:
+    measured: int = 0      # freshly timed points (incl. sensitivity probes)
+    cached: int = 0        # points replayed from the store
+
+
+class Campaign:
+    """Resumable measurement campaign over RegionTargets × noise modes.
+
+    ``workers`` > 1 fans independent (region, mode) sweeps across a thread
+    pool; every timed section still serializes through one lock (wall-clock
+    measurements on a shared machine must not overlap), so extra workers buy
+    back the compile/verify time, which dominates on the trace-per-k fallback
+    path and still bounds campaign latency on the compile-once path.
+    """
+
+    def __init__(self, store: CampaignStore | str,
+                 controller: Optional[Controller] = None, *,
+                 workers: int = 1):
+        self.store = store if isinstance(store, CampaignStore) \
+            else CampaignStore(store)
+        self.ctl = controller if controller is not None else Controller()
+        self.workers = max(1, int(workers))
+        self.stats = CampaignStats()
+        self._measure_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+
+    def _note(self, *, measured: int = 0, cached: int = 0) -> None:
+        with self._stats_lock:
+            self.stats.measured += measured
+            self.stats.cached += cached
+
+    # -- one (region, mode) sweep, store-backed -----------------------------
+    def _check_meta(self, target: RegionTarget, mode: str) -> None:
+        """Stored timings are only reusable under the same measurement
+        settings; on mismatch, discard the pair and remeasure."""
+        key = (target.name, mode)
+        cur = {"reps": self.ctl.reps,
+               "compile_once": self.ctl._rt_fn(target, mode) is not None}
+        old = self.store.meta.get(key)
+        if old is not None and any(old.get(f) != cur[f] for f in cur):
+            log.warning(
+                "campaign store for %s/%s was measured with %s, current "
+                "settings are %s; discarding stored sweep and remeasuring",
+                target.name, mode,
+                {f: old.get(f) for f in cur}, cur)
+            self.store.discard(*key)
+        if self.store.meta.get(key) is None:
+            self.store.append({"kind": "meta", "region": target.name,
+                               "mode": mode, **cur})
+
+    def _sensitivity(self, target: RegionTarget, mode: str) -> float:
+        key = (target.name, mode)
+        if key in self.store.sens:
+            return self.store.sens[key]
+        with self._measure_lock:
+            s = self.ctl.probe_sensitivity(target, mode)
+        self._note(measured=2)   # t0 + t(probe_k)
+        self.store.append({"kind": "sens", "region": target.name,
+                           "mode": mode, "value": s})
+        return s
+
+    def _point_fn(self, target: RegionTarget, mode: str, fn_rt, k: int):
+        if fn_rt is not None:
+            import jax.numpy as jnp
+            return fn_rt, (jnp.int32(k), *target.args_for_rt(mode))
+        return target.build(mode, k), target.args_for(mode, k)
+
+    def sweep_mode(self, target: RegionTarget, mode: str) -> ModeResult:
+        """Measure (or replay) the k-sweep for one (region, mode) pair."""
+        key = (target.name, mode)
+        self._check_meta(target, mode)
+        if self.store.is_done(*key):
+            return self._replay(target, mode)
+
+        ks = self.ctl._ks_for(self._sensitivity(target, mode))
+        stored = self.store.stored_ts(*key)
+        fn_rt = self.ctl._rt_fn(target, mode)
+
+        out_ks: list[int] = []
+        out_ts: list[float] = []
+        n_over = 0
+        n_fresh = 0
+        stopped = False
+        for k in ks:
+            if k in stored:
+                t = stored[k]
+                self._note(cached=1)
+            else:
+                fn, a = self._point_fn(target, mode, fn_rt, k)
+                with self._measure_lock:
+                    t = measure(fn, a, reps=self.ctl.reps)
+                self._note(measured=1)
+                n_fresh += 1
+                self.store.append({"kind": "point", "region": target.name,
+                                   "mode": mode, "k": k, "t": t})
+            out_ks.append(k)
+            out_ts.append(t)
+            # same online saturation rule as absorption.sweep
+            if t / floor_time(out_ts[0], f"campaign({target.name}/{mode}) "
+                              "t(k=0)") > self.ctl.stop_ratio:
+                n_over += 1
+                if n_over >= STOP_CONSECUTIVE:
+                    stopped = True
+                    break
+            else:
+                n_over = 0
+
+        # two-point drift correction (absorption.sweep's behaviour), only
+        # when the whole series was measured in THIS run — a drift factor is
+        # meaningless across sessions. Raw points stay raw in the store; the
+        # factor is recorded so replays reproduce this exact curve.
+        drift = None
+        if n_fresh == len(out_ks) and len(out_ts) > 2:
+            fn, a = self._point_fn(target, mode, fn_rt, out_ks[0])
+            with self._measure_lock:
+                t0_end = measure(fn, a, reps=max(self.ctl.reps - 2, 2))
+            self._note(measured=1)
+            drift = t0_end / floor_time(
+                out_ts[0], f"campaign({target.name}/{mode}) t(k=0)")
+
+        inj = self.ctl.verify_mode_payload(target, mode, out_ks) \
+            if self.ctl.verify_payload else None
+        self.store.append({
+            "kind": "done", "region": target.name, "mode": mode,
+            "ks": out_ks, "stopped_early": stopped, "drift": drift,
+            "payload": dataclasses.asdict(inj) if inj is not None else None})
+        return self._assemble_mode(mode, out_ks, out_ts, drift, stopped, inj)
+
+    def _assemble_mode(self, mode, ks, ts, drift, stopped, inj) -> ModeResult:
+        if drift is not None:
+            ts = drift_corrected(ts, drift)
+        curve = AbsorptionCurve(mode=mode, ks=list(ks), ts=list(ts),
+                                stopped_early=stopped)
+        return ModeResult(mode=mode, curve=curve,
+                          fit=absorption(curve, tol=self.ctl.tol),
+                          injection=inj)
+
+    def _replay(self, target: RegionTarget, mode: str) -> ModeResult:
+        rec = self.store.done[(target.name, mode)]
+        ts = self.store.stored_ts(target.name, mode)
+        ks = [int(k) for k in rec["ks"]]
+        missing = [k for k in ks if k not in ts]
+        if missing:   # truncated store: re-enter the measuring path
+            log.warning("campaign store for %s/%s lost points %s; remeasuring",
+                        target.name, mode, missing)
+            del self.store.done[(target.name, mode)]
+            return self.sweep_mode(target, mode)
+        self._note(cached=len(ks))
+        inj = InjectionReport(**rec["payload"]) if rec.get("payload") else None
+        return self._assemble_mode(mode, ks, [ts[k] for k in ks],
+                                   rec.get("drift"),
+                                   bool(rec.get("stopped_early")), inj)
+
+    # -- region / campaign level --------------------------------------------
+    def _body_size(self, target: RegionTarget) -> int:
+        if target.body_size:
+            return target.body_size
+        if target.name in self.store.body_sizes:
+            return self.store.body_sizes[target.name]
+        body = derive_body_size(target)
+        self.store.append({"kind": "region", "region": target.name,
+                           "body_size": body})
+        return body
+
+    def _assemble_region(self, target: RegionTarget,
+                         results: dict[str, ModeResult]) -> RegionReport:
+        report = classify({m: r.fit.k1 for m, r in results.items()})
+        return RegionReport(region=target.name, results=results,
+                            bottleneck=report,
+                            body_size=self._body_size(target))
+
+    def _pooled_sweeps(self, pairs):
+        """Run (target, mode) sweeps, fanned over the pool when enabled."""
+        if self.workers > 1 and len(pairs) > 1:
+            with ThreadPoolExecutor(max_workers=self.workers) as pool:
+                futs = [pool.submit(self.sweep_mode, t, m) for t, m in pairs]
+                return {(t.name, m): f.result()
+                        for (t, m), f in zip(pairs, futs)}
+        return {(t.name, m): self.sweep_mode(t, m) for t, m in pairs}
+
+    def characterize(self, target: RegionTarget,
+                     modes: Sequence[str]) -> RegionReport:
+        """Store-backed equivalent of ``Controller.characterize``: mode sweeps
+        fan out over the worker pool, completed sweeps replay from disk."""
+        res = self._pooled_sweeps([(target, m) for m in modes])
+        return self._assemble_region(
+            target, {m: res[(target.name, m)] for m in modes})
+
+    def run(self, targets: Sequence[RegionTarget],
+            modes: Sequence[str]) -> dict[str, RegionReport]:
+        """Characterize every region; (region, mode) pairs share one pool."""
+        res = self._pooled_sweeps([(t, m) for t in targets for m in modes])
+        return {t.name: self._assemble_region(
+                    t, {m: res[(t.name, m)] for m in modes})
+                for t in targets}

@@ -43,8 +43,61 @@ def inject(step_fn: Callable, mode: NoiseMode, k: int) -> Callable:
     return noisy
 
 
+def inject_rt(step_fn: Callable, mode: NoiseMode) -> Callable:
+    """Compile-once variant of ``inject``: the noise quantity is a runtime
+    operand, so ONE jitted executable serves the whole k-sweep.
+
+    Returns ``noisy(k, noise_state, *args, **kw) -> (out, aux, new_state)``
+    where ``k`` is an int32 scalar (traced under jit). k leads so region
+    adapters share one calling convention: ``build_rt(mode)(k, *args_rt)``.
+    """
+    if mode.apply_rt is None:
+        raise ValueError(f"mode {mode.name!r} has no runtime-k apply")
+
+    def noisy(k, noise_state, *args, **kw):
+        out = step_fn(*args, **kw)
+        aux, new_state = mode.apply_rt(noise_state, k)
+        out, aux = jax.lax.optimization_barrier((out, aux))
+        return out, aux, new_state
+
+    return noisy
+
+
 def init_state(mode: NoiseMode, rng: Optional[jax.Array] = None):
     return mode.make_state(rng if rng is not None else jax.random.PRNGKey(0))
+
+
+def step_region(name: str, step_fn: Callable, args: tuple,
+                registry: dict[str, NoiseMode], *, body_size: int = 0,
+                rng: Optional[jax.Array] = None):
+    """Adapt a jitted step + graph-level noise registry into a RegionTarget
+    (with both the trace-per-k and the compile-once build paths)."""
+    from repro.core.controller import RegionTarget   # cycle: controller->here
+
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    states = {m: registry[m].make_state(rng) for m in registry}
+
+    def build(mode: str, k: int):
+        if not mode or k == 0:
+            return jax.jit(step_fn)
+        return jax.jit(inject(step_fn, registry[mode], k))
+
+    def args_for(mode: str, k: int):
+        if not mode or k == 0:
+            return args
+        return (states[mode], *args)
+
+    def build_rt(mode: str):
+        if registry[mode].apply_rt is None:
+            return None
+        return jax.jit(inject_rt(step_fn, registry[mode]))
+
+    def args_for_rt(mode: str):
+        return (states[mode], *args)
+
+    return RegionTarget(name=name, build=build, args_for=args_for,
+                        body_size=body_size, build_rt=build_rt,
+                        args_for_rt=args_for_rt)
 
 
 @dataclasses.dataclass
@@ -59,17 +112,30 @@ class StepProbe:
 def probe_step(step_fn: Callable, args: tuple, mode: NoiseMode, *,
                ks: Sequence[int] = DEFAULT_KS, reps: int = 5,
                tol: float = 0.05, verify_payload: bool = True,
-               donate_state: bool = False) -> StepProbe:
+               donate_state: bool = False,
+               compile_once: bool = True) -> StepProbe:
     """Sweep k for ``mode`` against ``step_fn(*args)`` (measured on the host
-    backend) and statically verify the payload survived XLA optimization."""
+    backend) and statically verify the payload survived XLA optimization.
+
+    ``compile_once`` (default): k is a runtime operand, so the whole sweep
+    traces/compiles ONE executable instead of one per k (payload verification
+    still compiles one static-k executable — the count stays O(1), not
+    O(len(ks))). Falls back to trace-per-k when the mode has no runtime apply.
+    """
     state0 = init_state(mode)
 
-    def build(k: int):
-        fn = inject(step_fn, mode, k)
-        return jax.jit(fn, donate_argnums=(0,) if donate_state else ())
+    if compile_once and mode.apply_rt is not None:
+        fn_rt = jax.jit(inject_rt(step_fn, mode))  # noise state reused: no donation
+        curve = sweep(lambda k: fn_rt, mode=mode.name, ks=ks,
+                      args_for=lambda k: (jnp.int32(k), state0, *args),
+                      reps=reps)
+    else:
+        def build(k: int):
+            fn = inject(step_fn, mode, k)
+            return jax.jit(fn, donate_argnums=(0,) if donate_state else ())
 
-    curve = sweep(build, mode=mode.name, ks=ks,
-                  args_for=lambda k: (state0, *args), reps=reps)
+        curve = sweep(build, mode=mode.name, ks=ks,
+                      args_for=lambda k: (state0, *args), reps=reps)
     fit = absorption(curve, tol=tol)
 
     inj = None

@@ -15,7 +15,11 @@ Protocol (mirrors core.noise graph-level modes, but loop-carried):
                              from kernel state: the paper's R_n ∩ R_s = ∅)
   emit(carry, k, i)       -> new carry, after issuing k patterns; ``i`` is the
                              loop induction variable (varies offsets so the
-                             compiler cannot hoist or CSE patterns)
+                             compiler cannot hoist or CSE patterns); k is a
+                             static python int baked into the trace
+  emit_rt(carry, k, i)    -> same patterns with k a RUNTIME operand (traced
+                             int32, inner bounded ``lax.fori_loop``): one
+                             jitted executable serves the whole k-sweep
   finalize(carry)         -> scalar aux (returned from the jitted function —
                              the `volatile` analogue: DCE-proof)
 
@@ -25,7 +29,7 @@ verification (core.payload) can count surviving ops in optimized HLO.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +48,8 @@ class LoopNoise:
     emit: Callable[[Any, int, jax.Array], Any]
     finalize: Callable[[Any], jax.Array]
     payload_op: str = "add"           # dominant HLO opcode of one pattern
+    # runtime-k emitter (compile-once sweeps); None = trace-per-k only
+    emit_rt: Optional[Callable[[Any, jax.Array, jax.Array], Any]] = None
     description: str = ""
 
 
@@ -71,6 +77,20 @@ def _fp_finalize(carry):
     return sum(jnp.sum(a) for a in carry["accs"])
 
 
+def _unstack(accs):
+    return tuple(accs[j] for j in range(N_CHAINS))
+
+
+def _fp_emit_rt(carry, k, i):
+    del i
+    c = carry["c"]
+    accs = jnp.stack(carry["accs"])
+    with jax.named_scope(NOISE_SCOPE):
+        accs = jax.lax.fori_loop(
+            0, k, lambda j, a: a.at[j % N_CHAINS].add(c), accs)
+    return dict(carry, accs=_unstack(accs))
+
+
 # ---------------------------------------------------------------------------
 # fp_fma — multiply-add patterns (denser issue on FMA ports than plain add)
 # ---------------------------------------------------------------------------
@@ -83,6 +103,19 @@ def _fma_emit(carry, k, i):
         for j in range(k):
             accs[j % N_CHAINS] = accs[j % N_CHAINS] * 0.999999 + c
     return dict(carry, accs=tuple(accs))
+
+
+def _fma_emit_rt(carry, k, i):
+    del i
+    c = carry["c"]
+    accs = jnp.stack(carry["accs"])
+
+    def one(j, a):
+        return a.at[j % N_CHAINS].set(a[j % N_CHAINS] * 0.999999 + c)
+
+    with jax.named_scope(NOISE_SCOPE):
+        accs = jax.lax.fori_loop(0, k, one, accs)
+    return dict(carry, accs=_unstack(accs))
 
 
 # ---------------------------------------------------------------------------
@@ -110,6 +143,20 @@ def _l1_emit(carry, k, i):
             row = jax.lax.dynamic_slice(buf, (off, 0), (1, VEC))[0]
             accs[j % N_CHAINS] = accs[j % N_CHAINS] + row
     return dict(carry, accs=tuple(accs))
+
+
+def _l1_emit_rt(carry, k, i):
+    buf = carry["buf"]
+    accs = jnp.stack(carry["accs"])
+
+    def one(j, a):
+        off = (i * 7 + j * 13) % L1_ROWS
+        row = jax.lax.dynamic_slice(buf, (off, 0), (1, VEC))[0]
+        return a.at[j % N_CHAINS].add(row)
+
+    with jax.named_scope(NOISE_SCOPE):
+        accs = jax.lax.fori_loop(0, k, one, accs)
+    return dict(carry, accs=_unstack(accs))
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +188,21 @@ def _mem_emit(carry, k, i):
     return dict(carry, accs=tuple(accs))
 
 
+def _mem_emit_rt(carry, k, i):
+    buf = carry["buf"]
+    accs = jnp.stack(carry["accs"])
+    k_eff = jnp.maximum(k, 1)   # traced analogue of (k or 1)
+
+    def one(j, a):
+        off = ((i * k_eff + j) * 40_503) % MEM_ROWS
+        row = jax.lax.dynamic_slice(buf, (off, 0), (1, VEC))[0]
+        return a.at[j % N_CHAINS].add(row)
+
+    with jax.named_scope(NOISE_SCOPE):
+        accs = jax.lax.fori_loop(0, k, one, accs)
+    return dict(carry, accs=_unstack(accs))
+
+
 # ---------------------------------------------------------------------------
 # chase — serially dependent loads (paper: memory_ld64 latency flavour /
 # lat_mem_rd's own access pattern). The dependency chain is the point.
@@ -167,6 +229,18 @@ def _chase_emit(carry, k, i):
     return dict(carry, idx=idx)
 
 
+def _chase_emit_rt(carry, k, i):
+    del i
+    table = carry["table"]
+
+    def one(_, idx):
+        return jax.lax.dynamic_slice(table, (idx,), (1,))[0]
+
+    with jax.named_scope(NOISE_SCOPE):
+        idx = jax.lax.fori_loop(0, k, one, carry["idx"])
+    return dict(carry, idx=idx)
+
+
 def _chase_finalize(carry):
     return carry["idx"].astype(jnp.float32)
 
@@ -179,21 +253,25 @@ def make_loop_modes() -> dict[str, LoopNoise]:
     return {
         "fp_add": LoopNoise(
             "fp_add", "compute", _fp_init, _fp_emit, _fp_finalize, "add",
-            "round-robin chained vector adds (paper: fp_add64)"),
+            emit_rt=_fp_emit_rt,
+            description="round-robin chained vector adds (paper: fp_add64)"),
         "fp_fma": LoopNoise(
             "fp_fma", "compute", _fp_init, _fma_emit, _fp_finalize, "add",
-            "round-robin chained FMAs — saturates FMA ports faster"),
+            emit_rt=_fma_emit_rt,
+            description="round-robin chained FMAs — saturates FMA ports faster"),
         "l1_ld": LoopNoise(
             "l1_ld", "l1", _l1_init, _l1_emit, _fp_finalize, "dynamic-slice",
-            "rotating reads of a 16 KiB resident buffer (paper: l1_ld64)"),
+            emit_rt=_l1_emit_rt,
+            description="rotating reads of a 16 KiB resident buffer "
+                        "(paper: l1_ld64)"),
         "mem_ld": LoopNoise(
             "mem_ld", "memory", _mem_init, _mem_emit, _fp_finalize,
-            "dynamic-slice",
-            "strided reads of a 64 MiB buffer (paper: memory_ld64)"),
+            "dynamic-slice", emit_rt=_mem_emit_rt,
+            description="strided reads of a 64 MiB buffer (paper: memory_ld64)"),
         "chase": LoopNoise(
             "chase", "latency", _chase_init, _chase_emit, _chase_finalize,
-            "dynamic-slice",
-            "serially dependent pointer chase (latency probe)"),
+            "dynamic-slice", emit_rt=_chase_emit_rt,
+            description="serially dependent pointer chase (latency probe)"),
     }
 
 

@@ -7,9 +7,17 @@ schedule of MXU / VPU / DMA / ICI; the noise quantum is one HLO op group
 
   make_state(rng)        allocate DISJOINT noise buffers (semantics preserving
                          by construction — the paper's R_n ∩ R_s = ∅ argument)
-  apply(state, k)        emit k patterns; returns (aux, new_state). ``aux`` is
-                         returned from the jitted step so XLA cannot DCE the
-                         noise (the `volatile` analogue).
+  apply(state, k)        emit k patterns (k a static python int — the trace
+                         baked, trace-per-k path); returns (aux, new_state).
+                         ``aux`` is returned from the jitted step so XLA
+                         cannot DCE the noise (the `volatile` analogue).
+  apply_rt(state, k)     same patterns with k a RUNTIME operand (traced int32
+                         scalar, bounded ``lax.fori_loop``) — one jitted
+                         executable serves a whole k-sweep (compile-once).
+                         For k >= 1 the emitted arithmetic matches ``apply``
+                         pattern-for-pattern, so both paths measure the same
+                         noise; only the k=0 aux differs (sum of carried
+                         accumulators instead of literal 0).
   pattern_cost(hw)       per-pattern resource cost (FLOPs / HBM bytes / ICI
                          bytes / serial latency) — drives the analytic
                          saturation model in core/analytic.py.
@@ -27,6 +35,8 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import compat
 
 NOISE_SCOPE = "noise_pattern"
 
@@ -61,6 +71,8 @@ class NoiseMode:
     make_state: Callable[[jax.Array], Any]   # rng -> state pytree
     apply: Callable[[Any, int], tuple[jax.Array, Any]]
     pattern_cost: Callable[[Any], PatternCost]
+    # runtime-k variant (compile-once sweeps); None = trace-per-k only
+    apply_rt: Optional[Callable[[Any, jax.Array], tuple[jax.Array, Any]]] = None
     description: str = ""
 
 
@@ -97,6 +109,18 @@ def _fp_add_apply(state, k: int):
     return aux, dict(state, accs=tuple(accs))
 
 
+def _fp_add_apply_rt(state, k):
+    """Runtime-k twin of ``_fp_add_apply``: identical add order via a bounded
+    fori_loop over a stacked accumulator (chain i % N_CHAINS gets pattern i)."""
+    c = state["c"]
+    accs = jnp.stack(state["accs"])
+    with jax.named_scope(NOISE_SCOPE):
+        accs = jax.lax.fori_loop(
+            0, k, lambda i, a: a.at[i % N_CHAINS].add(c), accs)
+    aux = jnp.sum(accs)
+    return aux, dict(state, accs=tuple(accs[j] for j in range(N_CHAINS)))
+
+
 def _mxu_state(rng, sc: NoiseScale):
     d = sc.mxu_dim
     # c = identity: the chained product stays exactly bounded; XLA cannot
@@ -111,6 +135,17 @@ def _mxu_apply(state, k: int):
         for _ in range(k):
             m = jax.lax.dot(m, c, precision=jax.lax.Precision.DEFAULT,
                             preferred_element_type=jnp.bfloat16)
+    return jnp.sum(m.astype(jnp.float32)), dict(state, m=m)
+
+
+def _mxu_apply_rt(state, k):
+    m, c = state["m"], state["c"]
+    with jax.named_scope(NOISE_SCOPE):
+        m = jax.lax.fori_loop(
+            0, k,
+            lambda i, mm: jax.lax.dot(mm, c, precision=jax.lax.Precision.DEFAULT,
+                                      preferred_element_type=jnp.bfloat16),
+            m)
     return jnp.sum(m.astype(jnp.float32)), dict(state, m=m)
 
 
@@ -138,6 +173,23 @@ def _vmem_apply(state, k: int):
     return aux, dict(state, accs=tuple(accs))
 
 
+def _vmem_apply_rt(state, k):
+    buf = state["buf"]
+    accs = jnp.stack(state["accs"])
+    rows = buf.shape[0]
+    mod = max(rows - 8, 1)
+
+    def body(i, a):
+        off = (i * 13) % mod
+        return a.at[i % N_CHAINS].add(jax.lax.dynamic_slice(buf, (off, 0),
+                                                            (8, 128)))
+
+    with jax.named_scope(NOISE_SCOPE):
+        accs = jax.lax.fori_loop(0, k, body, accs)
+    aux = jnp.sum(accs)
+    return aux, dict(state, accs=tuple(accs[j] for j in range(N_CHAINS)))
+
+
 def _hbm_stream_state(rng, sc: NoiseScale):
     n_f32 = sc.hbm_mib * (1 << 20) // 4
     rows = n_f32 // 128
@@ -156,6 +208,21 @@ def _hbm_stream_apply(state, k: int, tile_rows: int):
             t = (i * 197) % n_tiles          # large co-prime stride: no reuse
             acc = acc + jax.lax.dynamic_slice(buf, (t * tile_rows, 0),
                                               (tile_rows, 128))
+    return jnp.sum(acc), dict(state, acc=acc)
+
+
+def _hbm_stream_apply_rt(state, k, tile_rows: int):
+    buf, acc = state["buf"], state["acc"]
+    rows = buf.shape[0]
+    n_tiles = max(rows // tile_rows, 1)
+
+    def body(i, a):
+        t = (i * 197) % n_tiles
+        return a + jax.lax.dynamic_slice(buf, (t * tile_rows, 0),
+                                         (tile_rows, 128))
+
+    with jax.named_scope(NOISE_SCOPE):
+        acc = jax.lax.fori_loop(0, k, body, acc)
     return jnp.sum(acc), dict(state, acc=acc)
 
 
@@ -182,18 +249,25 @@ def _chase_apply(state, k: int):
     return acc, dict(state, idx=idx, acc=acc)
 
 
+def _chase_apply_rt(state, k):
+    table = state["table"]
+
+    def body(_, carry):
+        idx, acc = carry
+        idx = table[idx]
+        return idx, acc + idx
+
+    with jax.named_scope(NOISE_SCOPE):
+        idx, acc = jax.lax.fori_loop(0, k, body,
+                                     (state["idx"], state["acc"]))
+    return acc, dict(state, idx=idx, acc=acc)
+
+
 # ---------------------------------------------------------------------------
 # ICI collective noise (per mesh axis)
 # ---------------------------------------------------------------------------
 
-def _shard_map(f, mesh, in_specs, out_specs):
-    try:
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    except TypeError:  # older signature
-        from jax.experimental.shard_map import shard_map as _sm
-        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_rep=False)
+_shard_map = compat.shard_map
 
 
 def _ici_state(rng, sc: NoiseScale):
@@ -202,20 +276,23 @@ def _ici_state(rng, sc: NoiseScale):
 
 
 def _mesh_for_collectives(mesh: Optional[Any]):
-    m = mesh if mesh is not None else jax.sharding.get_abstract_mesh()
+    m = mesh if mesh is not None else compat.get_abstract_mesh()
     if m is None or not m.axis_names:
         return None
     return m
+
+
+def _ici_fallback_state(v):
+    return {"c": v[:128].reshape(1, 128) * 1e-3,
+            "accs": (jnp.zeros((1, 128), jnp.float32),) * N_CHAINS}
 
 
 def _ici_allreduce_apply(state, k: int, axis: str, mesh=None):
     v = state["v"]
     m = _mesh_for_collectives(mesh)
     if m is None or axis not in m.axis_names:   # no mesh: degrade to vpu work
-        return _fp_add_apply({"c": v[:128].reshape(1, 128) * 1e-3,
-                              "accs": (jnp.zeros((1, 128), jnp.float32),) * N_CHAINS},
-                             k)[0], state
-    size = dict(zip(m.axis_names, m.axis_sizes))[axis]
+        return _fp_add_apply(_ici_fallback_state(v), k)[0], state
+    size = compat.mesh_axis_sizes(m)[axis]
 
     def body(x):
         with jax.named_scope(NOISE_SCOPE):
@@ -225,6 +302,23 @@ def _ici_allreduce_apply(state, k: int, axis: str, mesh=None):
 
     from jax.sharding import PartitionSpec as P
     out = _shard_map(body, m, P(), P())(v)
+    return jnp.sum(out), dict(state, v=out)
+
+
+def _ici_allreduce_apply_rt(state, k, axis: str, mesh=None):
+    v = state["v"]
+    m = _mesh_for_collectives(mesh)
+    if m is None or axis not in m.axis_names:
+        return _fp_add_apply_rt(_ici_fallback_state(v), k)[0], state
+    size = compat.mesh_axis_sizes(m)[axis]
+
+    def body(x, kk):   # kk replicated: runtime trip count inside the shard
+        with jax.named_scope(NOISE_SCOPE):
+            return jax.lax.fori_loop(
+                0, kk, lambda _, xx: jax.lax.psum(xx, axis) * (1.0 / size), x)
+
+    from jax.sharding import PartitionSpec as P
+    out = _shard_map(body, m, (P(), P()), P())(v, jnp.asarray(k, jnp.int32))
     return jnp.sum(out), dict(state, v=out)
 
 
@@ -246,12 +340,33 @@ def _ici_allgather_apply(state, k: int, axis: str, mesh=None):
     return jnp.sum(out), dict(state, v=out)
 
 
+def _ici_allgather_apply_rt(state, k, axis: str, mesh=None):
+    v = state["v"]
+    m = _mesh_for_collectives(mesh)
+    if m is None or axis not in m.axis_names:
+        return jnp.sum(v), state
+    from jax.sharding import PartitionSpec as P
+
+    def body(x, kk):
+
+        def one(_, xx):
+            g = jax.lax.all_gather(xx, axis)
+            return jnp.mean(g, axis=0)
+
+        with jax.named_scope(NOISE_SCOPE):
+            return jax.lax.fori_loop(0, kk, one, x)
+
+    out = _shard_map(body, m, (P(axis), P()), P(axis))(
+        v, jnp.asarray(k, jnp.int32))
+    return jnp.sum(out), dict(state, v=out)
+
+
 def _ici_a2a_apply(state, k: int, axis: str, mesh=None):
     v = state["v"]
     m = _mesh_for_collectives(mesh)
     if m is None or axis not in m.axis_names:
         return jnp.sum(v), state
-    size = dict(zip(m.axis_names, m.axis_sizes))[axis]
+    size = compat.mesh_axis_sizes(m)[axis]
     from jax.sharding import PartitionSpec as P
 
     def body(x):  # local shard (n/size,) -> reshape (size, chunk)
@@ -264,6 +379,31 @@ def _ici_a2a_apply(state, k: int, axis: str, mesh=None):
         return x.at[: size * chunk].set(y.reshape(-1))
 
     out = _shard_map(body, m, P(axis), P(axis))(v)
+    return jnp.sum(out), dict(state, v=out)
+
+
+def _ici_a2a_apply_rt(state, k, axis: str, mesh=None):
+    v = state["v"]
+    m = _mesh_for_collectives(mesh)
+    if m is None or axis not in m.axis_names:
+        return jnp.sum(v), state
+    size = compat.mesh_axis_sizes(m)[axis]
+    from jax.sharding import PartitionSpec as P
+
+    def body(x, kk):
+        chunk = x.shape[0] // size
+        y = x[: size * chunk].reshape(size, chunk)
+
+        def one(_, yy):
+            return jax.lax.all_to_all(yy, axis, split_axis=0, concat_axis=0,
+                                      tiled=False)
+
+        with jax.named_scope(NOISE_SCOPE):
+            y = jax.lax.fori_loop(0, kk, one, y)
+        return x.at[: size * chunk].set(y.reshape(-1))
+
+    out = _shard_map(body, m, (P(axis), P()), P(axis))(
+        v, jnp.asarray(k, jnp.int32))
     return jnp.sum(out), dict(state, v=out)
 
 
@@ -287,40 +427,52 @@ def make_modes(scale: NoiseScale = NoiseScale(), *, mesh=None,
     modes = {
         "fp_add32": NoiseMode(
             "fp_add32", "compute", partial(_fp_add_state, sc=sc), _fp_add_apply,
-            _c(flops=vpu_flops),
-            "chained VPU vector adds on disjoint f32 tiles (paper: fp_add64)"),
+            _c(flops=vpu_flops), apply_rt=_fp_add_apply_rt,
+            description="chained VPU vector adds on disjoint f32 tiles "
+                        "(paper: fp_add64)"),
         "mxu_fma128": NoiseMode(
             "mxu_fma128", "compute", partial(_mxu_state, sc=sc), _mxu_apply,
             _c(flops=mxu_flops, vmem_bytes=2 * sc.mxu_dim ** 2),
-            "chained 128x128 bf16 matmuls — stresses the MXU systolic array"),
+            apply_rt=_mxu_apply_rt,
+            description="chained 128x128 bf16 matmuls — stresses the MXU "
+                        "systolic array"),
         "vmem_ld": NoiseMode(
             "vmem_ld", "vmem", partial(_vmem_state, sc=sc), _vmem_apply,
             _c(flops=8 * 128, vmem_bytes=8 * 128 * 4),
-            "re-reads of a VMEM-resident tile (paper: l1_ld64)"),
+            apply_rt=_vmem_apply_rt,
+            description="re-reads of a VMEM-resident tile (paper: l1_ld64)"),
         "hbm_stream": NoiseMode(
             "hbm_stream", "memory", partial(_hbm_stream_state, sc=sc),
             lambda s, k: _hbm_stream_apply(s, k, sc.hbm_tile_rows),
             _c(flops=tile_bytes / 4, hbm_bytes=tile_bytes),
-            "streaming tile reads from a dedicated HBM buffer (bandwidth)"),
+            apply_rt=lambda s, k: _hbm_stream_apply_rt(s, k, sc.hbm_tile_rows),
+            description="streaming tile reads from a dedicated HBM buffer "
+                        "(bandwidth)"),
         "hbm_latency": NoiseMode(
             "hbm_latency", "latency", partial(_chase_state, sc=sc), _chase_apply,
             lambda hw: PatternCost(hbm_bytes=4.0, serial_s=hw.hbm_latency_s),
-            "serially dependent pointer chase (paper: memory_ld64 chaotic)"),
+            apply_rt=_chase_apply_rt,
+            description="serially dependent pointer chase (paper: memory_ld64 "
+                        "chaotic)"),
         "ici_allreduce": NoiseMode(
             "ici_allreduce", "ici", partial(_ici_state, sc=sc),
             partial(_ici_allreduce_apply, axis=ici_axis, mesh=mesh),
             _c(ici_bytes=2 * ici_bytes),   # ring all-reduce ≈ 2(n-1)/n·B
-            f"chained psum over mesh axis {ici_axis!r} on a disjoint buffer"),
+            apply_rt=partial(_ici_allreduce_apply_rt, axis=ici_axis, mesh=mesh),
+            description=f"chained psum over mesh axis {ici_axis!r} on a "
+                        "disjoint buffer"),
         "ici_allgather": NoiseMode(
             "ici_allgather", "ici", partial(_ici_state, sc=sc),
             partial(_ici_allgather_apply, axis=ici_axis, mesh=mesh),
             _c(ici_bytes=ici_bytes),
-            f"chained all-gather over mesh axis {ici_axis!r}"),
+            apply_rt=partial(_ici_allgather_apply_rt, axis=ici_axis, mesh=mesh),
+            description=f"chained all-gather over mesh axis {ici_axis!r}"),
         "ici_a2a": NoiseMode(
             "ici_a2a", "ici", partial(_ici_state, sc=sc),
             partial(_ici_a2a_apply, axis=ici_axis, mesh=mesh),
             _c(ici_bytes=ici_bytes),
-            f"chained all-to-all over mesh axis {ici_axis!r}"),
+            apply_rt=partial(_ici_a2a_apply_rt, axis=ici_axis, mesh=mesh),
+            description=f"chained all-to-all over mesh axis {ici_axis!r}"),
     }
     return modes
 

@@ -34,6 +34,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              tag: str = "", verbose: bool = True) -> dict:
     import jax
 
+    from repro import compat
     from repro.configs import SHAPES, TPU_V5E, get_config, shape_applicable
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import SkipCell, build_cell
@@ -57,7 +58,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):  # sets the abstract mesh: logical-axis
+        with compat.set_mesh(mesh):  # sets the ambient mesh: logical-axis
             # sharding constraints inside the model resolve against it
             prog = build_cell(arch, shape_name, mesh, compress=compress,
                               overrides=overrides, remat=remat)
@@ -67,7 +68,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             lowered = jitted.lower(*prog.args)
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         text = compiled.as_text()
         rep = analyze_compiled_text(
             text, arch=arch, shape=shape, mesh_name=mesh_name,

@@ -3,17 +3,14 @@ this module never touches jax device state (the dry-run sets
 --xla_force_host_platform_device_count before any jax import)."""
 from __future__ import annotations
 
-import jax
-
+from repro import compat
 from repro.configs.base import MULTI_POD, SINGLE_POD
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def mesh_config(*, multi_pod: bool = False):

@@ -1,9 +1,15 @@
 """Noise-injection bottleneck probe — the paper's tool applied to this
 framework's own train/serve steps.
 
-Measured mode (default; reduced config, host backend):
+Measured mode (default; reduced config, host backend) runs as a resumable
+CAMPAIGN: every (mode, k, t) point persists to a JSONL store under
+``experiments/campaigns/`` and re-running skips everything already measured.
+The sweep itself uses the controller's compile-once path (one runtime-k
+executable per mode instead of one per sweep point):
+
     PYTHONPATH=src python -m repro.launch.probe --arch gemma-2b --smoke \
-        --kind train --modes fp_add32,vmem_ld,hbm_stream
+        --kind train --modes fp_add32,vmem_ld,hbm_stream \
+        [--store PATH] [--fresh] [--workers N] [--no-compile-once]
 
 Analytic mode (full config, TPU v5e target, reads the dry-run artifact):
     PYTHONPATH=src python -m repro.launch.probe --arch gemma-2b \
@@ -21,20 +27,29 @@ import os
 import jax
 import jax.numpy as jnp
 
+CAMPAIGN_DIR = "experiments/campaigns"
+
 
 def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
-                   batch: int, reps: int) -> None:
+                   batch: int, reps: int, store: str | None = None,
+                   fresh: bool = False, workers: int = 1,
+                   compile_once: bool = True) -> None:
     from repro.configs import get_smoke_config
     from repro.configs.base import ShapeConfig
-    from repro.core import classify, probe_step
+    from repro.core import Campaign, Controller, step_region
     from repro.core.noise import NoiseScale, make_modes
     from repro.models.model import build
+
+    registry = make_modes(NoiseScale(hbm_mib=32, chase_len=1 << 20))
+    unknown = [m for m in modes if m not in registry]
+    if unknown:
+        raise SystemExit(f"unknown mode(s) {unknown}; available: "
+                         f"{', '.join(sorted(registry))}")
 
     cfg = get_smoke_config(arch)
     api = build(cfg)
     params = api.init(jax.random.PRNGKey(0))
     shape = ShapeConfig("probe", kind, seq, batch)
-    registry = make_modes(NoiseScale(hbm_mib=32, chase_len=1 << 20))
 
     if kind == "train":
         batch_data = api.dummy_batch(shape)
@@ -52,16 +67,26 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
             return api.decode_step(p, c, t, jnp.int32(seq // 2))[0]
         args = (params, cache, toks)
 
-    absorptions = {}
-    print(f"== measured probe: {cfg.name} {kind} seq={seq} batch={batch}")
-    for m in modes:
-        pr = probe_step(step, args, registry[m], reps=reps)
-        absorptions[m] = pr.fit.k1
-        inj = pr.injection
-        print(f"  {m:14s} Abs^raw={pr.fit.k1:7.1f} t0={pr.fit.t0*1e3:8.2f}ms "
-              f"slope={pr.fit.slope*1e6:9.2f}us/pat "
-              f"payload={inj.payload}/{inj.expected} overhead={inj.overhead}")
-    print(f"  => {classify(absorptions)}")
+    region_name = f"{cfg.name}_{kind}_s{seq}_b{batch}"
+    region = step_region(region_name, step, args,
+                         {m: registry[m] for m in modes})
+    store = store or os.path.join(CAMPAIGN_DIR, f"{region_name}.jsonl")
+    if fresh and os.path.exists(store):
+        os.unlink(store)
+    ctl = Controller(reps=reps, compile_once=compile_once)
+    camp = Campaign(store, ctl, workers=workers)
+    print(f"== measured probe: {cfg.name} {kind} seq={seq} batch={batch} "
+          f"(campaign store: {store})")
+    rep = camp.characterize(region, modes)
+    for m, r in rep.results.items():
+        inj = r.injection
+        pay = (f"payload={inj.payload}/{inj.expected} overhead={inj.overhead}"
+               if inj else "payload=n/a")
+        print(f"  {m:14s} Abs^raw={r.fit.k1:7.1f} t0={r.fit.t0*1e3:8.2f}ms "
+              f"slope={r.fit.slope*1e6:9.2f}us/pat {pay}")
+    print(f"  => {rep.bottleneck}")
+    print(f"  [{camp.stats.measured} points measured, "
+          f"{camp.stats.cached} replayed from store]")
 
 
 def analytic_probe(arch: str, shape_name: str, dryrun_dir: str,
@@ -113,6 +138,15 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--tol", type=float, default=0.05)
+    ap.add_argument("--store", default=None,
+                    help="campaign JSONL path (default: derived under "
+                         f"{CAMPAIGN_DIR}/)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="discard any existing campaign store first")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="fan independent mode sweeps over N workers")
+    ap.add_argument("--no-compile-once", action="store_true",
+                    help="force the trace-per-k fallback sweep path")
     args = ap.parse_args()
 
     modes = [m.strip() for m in args.modes.split(",") if m.strip()]
@@ -121,7 +155,9 @@ def main() -> None:
                        tol=args.tol)
     else:
         measured_probe(args.arch, args.kind, modes, seq=args.seq,
-                       batch=args.batch, reps=args.reps)
+                       batch=args.batch, reps=args.reps, store=args.store,
+                       fresh=args.fresh, workers=args.workers,
+                       compile_once=not args.no_compile_once)
 
 
 if __name__ == "__main__":

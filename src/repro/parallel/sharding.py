@@ -30,6 +30,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 LOGICAL_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
     "cache_batch": ("pod", "data"),
@@ -53,9 +55,7 @@ LOGICAL_RULES: dict[str, tuple[str, ...]] = {
 
 
 
-def _mesh_axis_sizes(mesh) -> dict[str, int]:
-    return dict(zip(mesh.axis_names, mesh.axis_sizes)) if hasattr(mesh, "axis_sizes") \
-        else {k: v for k, v in mesh.shape.items()}
+_mesh_axis_sizes = compat.mesh_axis_sizes
 
 
 def resolve(
@@ -72,7 +72,7 @@ def resolve(
     """
     rules = rules or LOGICAL_RULES
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
     sizes = _mesh_axis_sizes(mesh) if mesh is not None and mesh.axis_names else {}
     out = []
     used: set[str] = set()
@@ -87,6 +87,7 @@ def resolve(
         total = 1
         for a in mesh_axes:
             total *= sizes[a]
+        truncated = False
         if dims is not None and dims[i] % total != 0:
             # try a prefix of the axes that divides (e.g. batch=1 -> none)
             chosen: tuple[str, ...] = ()
@@ -98,11 +99,15 @@ def resolve(
                 else:
                     break
             mesh_axes = chosen
+            truncated = True
         if not mesh_axes:
             out.append(None)
             continue
         used.update(mesh_axes)
-        out.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        # a truncated multi-axis rule stays a tuple (('pod',) not 'pod') —
+        # old PartitionSpec doesn't normalize the two forms as equal
+        out.append(mesh_axes if len(mesh_axes) > 1 or truncated
+                   else mesh_axes[0])
     while out and out[-1] is None:
         out.pop()
     return P(*out)
@@ -124,8 +129,8 @@ def resolve_tree(logical_tree, shape_tree=None, mesh=None, rules=None):
 def constrain(x, *logical, rules=None):
     """``with_sharding_constraint`` by logical axes; no-op without a mesh
     context (CPU unit tests) so model code is mesh-agnostic."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    mesh = compat.get_abstract_mesh()
+    if mesh is None:
         return x
     spec = resolve(logical, x.shape, mesh, rules)
     return jax.lax.with_sharding_constraint(x, spec)
@@ -141,9 +146,7 @@ def make_mesh_from_config(mesh_cfg, devices=None) -> Mesh:
         raise ValueError(
             f"mesh {mesh_cfg.shape} needs {n} devices, have {len(devices)} "
             "(dryrun.py sets XLA_FLAGS=--xla_force_host_platform_device_count)")
-    return jax.make_mesh(
-        mesh_cfg.shape, mesh_cfg.axes, devices=devices[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(mesh_cfg.axes))
+    return compat.make_mesh(mesh_cfg.shape, mesh_cfg.axes, devices=devices[:n])
 
 
 def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:

@@ -18,6 +18,8 @@ from typing import Any, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def compress_int8(g, residual=None):
     """g f32/bf16 -> (q int8, scale f32 scalar, new_residual)."""
@@ -56,7 +58,7 @@ def make_compressed_psum(axis_names: Sequence[str]):
         total = jax.lax.psum(q.astype(jnp.int32), axes)
         n = 1
         for a in axes:
-            n *= jax.lax.axis_size(a)
+            n *= compat.axis_size(a)
         mean = total.astype(jnp.float32) * (scale / n)
         return mean.astype(g.dtype), new_r
 

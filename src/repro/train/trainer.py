@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import TrainConfig
 from repro.models.model import ModelApi
 from repro.parallel.sharding import resolve, resolve_tree
@@ -131,10 +132,9 @@ def make_train_step(api: ModelApi, tcfg: TrainConfig, *,
                 # form of the wire-compression (see module docstring).
                 return cpsum(g, r)
 
-            grads, residuals = jax.shard_map(
+            grads, residuals = compat.shard_map(
                 reduced, mesh=mesh,
-                in_specs=(P(), P()), out_specs=(P(), P()),
-                check_vma=False)(grads, residuals)
+                in_specs=(P(), P()), out_specs=(P(), P()))(grads, residuals)
         params, opt, stats = adamw_update(tcfg, state.params, grads, state.opt)
         metrics = {"loss": loss, **stats,
                    **{k: v for k, v in aux.items()}}

@@ -1,0 +1,101 @@
+"""The JAX version-compat layer: every shim must resolve on the installed
+JAX (whatever its version) and the fallback branches must behave like the
+modern API they stand in for."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+
+
+def test_no_direct_new_api_uses_in_src():
+    """Compat policy: nothing under src/repro/ (except compat.py itself)
+    touches the version-dependent jax.sharding surface directly."""
+    import os
+    root = os.path.join(os.path.dirname(compat.__file__))
+    banned = ("jax.sharding.get_abstract_mesh", "jax.sharding.AxisType",
+              "jax.lax.axis_size")
+    hits = []
+    for dirpath, _, files in os.walk(root):
+        for fn in files:
+            if not fn.endswith(".py") or fn == "compat.py":
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path) as f:
+                text = f.read()
+            hits += [f"{path}: {b}" for b in banned if b in text]
+    assert not hits, hits
+
+
+def test_make_mesh_works_on_installed_jax():
+    mesh = compat.make_mesh((1,), ("data",))
+    assert mesh.axis_names == ("data",)
+    assert compat.mesh_axis_sizes(mesh) == {"data": 1}
+
+
+def test_axis_types_auto_matches_feature_detection():
+    kw = compat.axis_types_auto(2)
+    if compat.AxisType is None:
+        assert kw == {}
+    else:
+        assert kw == {"axis_types": (compat.AxisType.Auto,) * 2}
+
+
+def test_abstract_mesh_both_signatures():
+    m = compat.abstract_mesh((2, 4), ("data", "model"))
+    assert m.axis_names == ("data", "model")
+    assert compat.mesh_axis_sizes(m) == {"data": 2, "model": 4}
+
+
+def test_get_abstract_mesh_none_outside_context():
+    assert compat.get_abstract_mesh() is None
+
+
+def test_set_mesh_roundtrip():
+    mesh = compat.make_mesh((1,), ("data",))
+    with compat.set_mesh(mesh):
+        m = compat.get_abstract_mesh()
+        assert m is not None
+        assert tuple(m.axis_names) == ("data",)
+    assert compat.get_abstract_mesh() is None
+
+
+def test_shard_map_psum():
+    mesh = compat.make_mesh((1,), ("data",))
+    f = compat.shard_map(lambda x: jax.lax.psum(x, "data"),
+                         mesh, in_specs=P(), out_specs=P())
+    out = f(jnp.arange(4.0))
+    np.testing.assert_allclose(np.asarray(out), np.arange(4.0))
+
+
+def test_axis_size_inside_shard_map():
+    mesh = compat.make_mesh((1,), ("data",))
+    f = compat.shard_map(lambda x: x * compat.axis_size("data"),
+                         mesh, in_specs=P(), out_specs=P())
+    np.testing.assert_allclose(np.asarray(f(jnp.ones(3))), np.ones(3))
+
+
+def test_cost_analysis_normalized_to_dict():
+    compiled = jax.jit(lambda x: x @ x).lower(jnp.ones((8, 8))).compile()
+    cost = compat.cost_analysis(compiled)
+    assert cost is None or hasattr(cost, "get")
+    if cost is not None:
+        assert cost.get("flops") is not None
+
+
+def test_fallback_branches_when_modern_api_missing(monkeypatch):
+    """Force the 0.4.x fallbacks regardless of installed version: the shims
+    must still produce a working mesh context and shard_map."""
+    monkeypatch.setattr(compat, "_get_abstract_mesh", None)
+    monkeypatch.setattr(compat, "_set_mesh", None)
+    monkeypatch.setattr(compat, "_shard_map", None)
+    assert compat.get_abstract_mesh() is None
+    mesh = compat.make_mesh((1,), ("data",))
+    with compat.set_mesh(mesh):
+        m = compat.get_abstract_mesh()
+        assert m is not None and tuple(m.axis_names) == ("data",)
+    f = compat.shard_map(lambda x: jax.lax.psum(x, "data"),
+                         mesh, in_specs=P(), out_specs=P())
+    np.testing.assert_allclose(np.asarray(f(jnp.ones(2))), np.ones(2))

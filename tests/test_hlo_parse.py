@@ -68,11 +68,11 @@ _SPMD_SCRIPT = textwrap.dedent("""
     from jax.sharding import PartitionSpec as P, NamedSharding
     import sys
     sys.path.insert(0, "src")
+    from repro import compat
     from repro.hlo.parse import parse_module, find_entry, nesting_multipliers
     from repro.roofline.terms import collective_wire_bytes
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     W = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
 
     def f(x):
@@ -82,7 +82,7 @@ _SPMD_SCRIPT = textwrap.dedent("""
 
     xs = NamedSharding(mesh, P("data", "model"))
     x = jax.device_put(jnp.ones((64, 256)), xs)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         txt = jax.jit(f, in_shardings=xs).lower(x).compile().as_text()
     comps = parse_module(txt)
     mults = nesting_multipliers(comps, find_entry(comps, txt))

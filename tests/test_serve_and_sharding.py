@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import get_smoke_config
 from repro.models.model import build
 from repro.parallel.sharding import resolve
@@ -81,9 +82,7 @@ def test_engine_ssm_fallback():
 @pytest.fixture(scope="module")
 def mesh():
     # abstract meshes are enough for resolution tests
-    return jax.sharding.AbstractMesh(
-        (16, 16), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_resolve_basic(mesh):
@@ -106,9 +105,7 @@ def test_resolve_divisibility_fallback(mesh):
 
 
 def test_resolve_batch_prefix(mesh3d=None):
-    mesh3 = jax.sharding.AbstractMesh(
-        (2, 16, 16), ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh3 = compat.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     # batch 256 shards over pod*data=32
     assert resolve(("batch", None), (256, 4096), mesh3) == P(("pod", "data"))
     # batch 1 (long_500k) cannot shard -> replicated

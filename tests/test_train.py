@@ -3,13 +3,18 @@ int8 compression with error feedback, checkpoint restart, fault tolerance."""
 import dataclasses
 import os
 
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ModuleNotFoundError:   # property tests skip; the rest still runs
+    from conftest import hypothesis_stub as hypothesis
+    from conftest import strategies_stub as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.ckpt import CheckpointManager
 from repro.configs import TrainConfig, get_smoke_config
 from repro.configs.base import ShapeConfig
@@ -108,15 +113,14 @@ def test_error_feedback_accumulates():
 
 
 def test_compressed_psum_single_device():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     cpsum = make_compressed_psum(("data",))
     g = {"a": jnp.linspace(-1, 1, 32).reshape(4, 8)}
     r = {"a": jnp.zeros((4, 8), jnp.float32)}
 
-    out, new_r = jax.shard_map(
+    out, new_r = compat.shard_map(
         cpsum, mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),) * 2,
-        out_specs=(jax.sharding.PartitionSpec(),) * 2, check_vma=False)(g, r)
+        out_specs=(jax.sharding.PartitionSpec(),) * 2)(g, r)
     scale = float(jnp.max(jnp.abs(g["a"]))) / 127.0
     assert float(jnp.max(jnp.abs(out["a"] - g["a"]))) <= scale * 0.5 + 1e-7
 
