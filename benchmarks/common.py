@@ -30,6 +30,29 @@ def characterize(ctl, region, modes) -> Any:
     return rep
 
 
+def run_decan_stored(target, *, reps: int, inner: int = 1) -> Any:
+    """``run_decan`` through the campaign store when a store directory is
+    configured — DECAN variant timings land in the SAME per-region file as
+    the noise sweeps, and a re-run replays them instead of remeasuring."""
+    from repro.core import CampaignStats, CampaignStore
+    from repro.core.decan import run_decan
+
+    campaign_dir = os.environ.get(CAMPAIGN_DIR_VAR, "")
+    if not campaign_dir:
+        return run_decan(target, reps=reps, inner=inner)
+    store = CampaignStore(os.path.join(campaign_dir, f"{target.name}.jsonl"))
+    stats = CampaignStats()
+    try:
+        res = run_decan(target, reps=reps, inner=inner, store=store,
+                        stats=stats)
+    finally:
+        store.close()
+    if stats.cached:
+        print(f"  [{target.name}: {stats.cached} DECAN variant(s) from "
+              f"store, {stats.measured} measured]")
+    return res
+
+
 def save(name: str, payload: Any) -> None:
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:

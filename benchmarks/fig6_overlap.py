@@ -14,9 +14,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import banner, characterize, save
+from benchmarks.common import banner, characterize, run_decan_stored, save
 from repro.core import (Controller, DecanTarget, classify,
-                        cross_check_with_decan, loop_region, run_decan)
+                        cross_check_with_decan)
 
 N = 1 << 18
 CHUNK = 64
@@ -60,17 +60,16 @@ def run(quick: bool = True) -> dict:
     n_iter = 60_000 if quick else 150_000
     buf = jnp.ones((N,), jnp.float32)
 
-    dec = run_decan(DecanTarget(
+    target = DecanTarget(
         "livermore_1351",
         lambda fp, ls: _livermore(fp, ls, n_iter),
-        lambda: (buf,)), reps=3 if quick else 5)
+        lambda: (buf,),
+        build_noisy=lambda noise, k: _livermore(True, True, n_iter,
+                                                noise=noise, k=k))
+    dec = run_decan_stored(target, reps=3 if quick else 5)
 
     ctl = Controller(reps=3 if quick else 5, verify_payload=False)
-    region = loop_region(
-        "livermore_1351",
-        lambda noise, k: _livermore(True, True, n_iter, noise=noise, k=k),
-        lambda: (buf,))
-    rep = characterize(ctl, region, ("fp_add", "l1_ld"))
+    rep = characterize(ctl, target.region(), ("fp_add", "l1_ld"))
 
     noise_only = classify(rep.absorptions())
     combined = cross_check_with_decan(noise_only, dec.sat_fp, dec.sat_ls)

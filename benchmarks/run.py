@@ -21,6 +21,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="larger sizes / more reps (slower, steadier)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes / few reps (the default; the explicit "
+                         "flag exists for scripts and CI smoke jobs)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset, e.g. fig5,table3")
     ap.add_argument("--campaign-dir", default="experiments/campaigns/bench",
@@ -28,6 +31,8 @@ def main() -> None:
     ap.add_argument("--no-campaign", action="store_true",
                     help="measure every point afresh (no persistence)")
     args = ap.parse_args()
+    if args.quick and args.full:
+        ap.error("--quick and --full are mutually exclusive")
 
     from benchmarks.common import CAMPAIGN_DIR_VAR
     if args.no_campaign:

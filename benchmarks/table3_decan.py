@@ -24,9 +24,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import banner, characterize, save
+from benchmarks.common import banner, characterize, run_decan_stored, save
 from repro.core import (Controller, DecanTarget, classify,
-                        cross_check_with_decan, loop_region, run_decan)
+                        cross_check_with_decan)
 
 N = 1 << 22
 CHUNK = 512
@@ -118,14 +118,17 @@ def run(quick: bool = True) -> dict:
         def build(fp, ls, kind=kind, depth=depth, n_it=n_it):
             return _kernel(kind, depth, ls, fp, n_it)
 
-        dec = run_decan(DecanTarget(name, build, lambda: (a, b, c, x0)),
-                        reps=3 if quick else 5)
-
         def make(noise, k, kind=kind, depth=depth, n_it=n_it):
             return _kernel(kind, depth, True, True, n_it, noise=noise, k=k)
 
-        region = loop_region(f"t3_{name}", make, lambda: (a, b, c, x0))
-        rep = characterize(ctl, region, ("fp_add", "l1_ld"))
+        # one DecanTarget carries both analyses: the decremental variants
+        # (store-backed, replayed on re-runs) and — via .region()'s build_rt
+        # — the compile-once noise sweeps (≤2 executables per mode, not one
+        # per k). Both write to the same t3_<name>.jsonl campaign artifact.
+        target = DecanTarget(f"t3_{name}", build, lambda: (a, b, c, x0),
+                             build_noisy=make)
+        dec = run_decan_stored(target, reps=3 if quick else 5)
+        rep = characterize(ctl, target.region(), ("fp_add", "l1_ld"))
         noise_label = classify(rep.absorptions())
         combined = cross_check_with_decan(noise_label, dec.sat_fp, dec.sat_ls)
         rows[name] = {

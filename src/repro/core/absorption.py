@@ -92,6 +92,21 @@ class AbsorptionCurve:
         return np.asarray(self.ts) / floor_time(self.ts[0], "t(k=0) baseline")
 
 
+def assemble_curve(mode: str, ks: Sequence[int], ts: Sequence[float], *,
+                   drift: Optional[float] = None,
+                   stopped_early: bool = False) -> AbsorptionCurve:
+    """The ONE place a raw (ks, ts) series becomes an AbsorptionCurve.
+
+    Campaign stores persist points RAW and re-apply the recorded drift factor
+    here on every replay, so a replayed curve is byte-identical to the curve
+    the original run assembled. The golden-signature regression suite pins
+    this function's behaviour — change it and those tests fail loudly.
+    """
+    out = drift_corrected(ts, drift) if drift is not None else list(ts)
+    return AbsorptionCurve(mode=mode, ks=list(ks), ts=out,
+                           stopped_early=stopped_early)
+
+
 def sweep(build: Callable[[int], Callable], *, mode: str = "",
           ks: Sequence[int] = DEFAULT_KS, args_for: Optional[Callable] = None,
           reps: int = 5, inner: int = 1, stop_ratio: float = 4.0,

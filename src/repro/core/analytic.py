@@ -18,6 +18,11 @@ measured in noise patterns*, which is exactly what the paper estimates
 empirically. The same model also answers the paper's Table-4 question
 ("HBM or DDR for this kernel?") by re-evaluating T_r under a different
 HardwareConfig.
+
+Predictions persist: ``core.campaign.AnalyticCampaign`` runs these functions
+through the campaign store ("pred" records carrying the HardwareConfig,
+these StepTerms and every model setting), so predicted curves live in the
+same artifact as measured ones and replay byte-identically.
 """
 from __future__ import annotations
 
@@ -43,6 +48,12 @@ class StepTerms:
 
     def as_dict(self) -> dict[str, float]:
         return {r: getattr(self, r) for r in RESOURCES}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, float]) -> "StepTerms":
+        """Inverse of ``as_dict`` — reconstructs the terms a campaign
+        ``pred`` record was computed from (its ``"terms"`` field)."""
+        return cls(**{r: float(d.get(r, 0.0)) for r in RESOURCES})
 
     @property
     def dominant(self) -> str:

@@ -12,28 +12,62 @@ instead of a transient loop:
   * independent (region, mode) sweeps fan out through a worker pool. Builds,
     compiles and payload verification parallelize; the actual timed
     measurements serialize through a lock so concurrent workers never corrupt
-    each other's wall-clock readings.
+    each other's wall-clock readings;
+  * independent HOSTS (or processes) fan out through per-worker stores:
+    ``measure_shard`` measures a deterministic subset of the (region, mode)
+    grid into its own store (``worker_store`` names it), and ``merge_stores``
+    folds the worker stores into one canonical store whose replay performs
+    zero new measurements;
+  * the ANALYTIC path (``AnalyticCampaign``) runs ``core.analytic``
+    predictions through the same store machinery, so measured and predicted
+    curves live in one artifact, and ``core.decan`` variant timings persist
+    as ``decan`` records — one file holds a region's full dossier.
 
 Combined with the controller's compile-once path (one runtime-k executable
 per sweep) this turns the slowest loop in the repo — recompile-per-(mode, k)
 — into a cached, restartable pipeline.
 
-Store schema (one JSON object per line; later records supersede earlier ones
-for the same key, so a settings change appends fresh data without rewriting):
+Store schema (one JSON object per line):
   {"kind": "meta",   "region": r, "mode": m, "reps": n, "compile_once": b}
   {"kind": "sens",   "region": r, "mode": m, "value": s}
   {"kind": "point",  "region": r, "mode": m, "k": k, "t": seconds}  # raw t
   {"kind": "done",   "region": r, "mode": m, "ks": [...], "drift": f|null,
    "stopped_early": b, "payload": {...}|null}
   {"kind": "region", "region": r, "body_size": n}
+  {"kind": "pred",   "region": r, "mode": m, "ks": [...], "ts": [...],
+   "fit": {...}, "hw": {HardwareConfig fields}, "terms": {resource: s},
+   "alpha": a, "tol": t, "k_max": n}            # analytic prediction
+  {"kind": "decan",  "region": r, "variant": "ref"|"fp"|"ls", "t": seconds,
+   "reps": n, "inner": n}                       # decremental baseline
+
+Supersede rules (they define both in-file appends and ``merge_stores``):
+  * later records supersede earlier ones for the same key — (region, mode)
+    for meta/sens/done/pred, (region, mode, k) for points, (region,) for
+    region records, (region, variant) for decan records — so a settings
+    change appends fresh data without rewriting the file;
+  * a "meta" record whose measurement settings differ from the pair's
+    current meta DISCARDS the pair's accumulated sens/point/done records:
+    timings from different settings (reps, sweep path) must never be
+    spliced into one curve. "pred" and "decan" records carry their own
+    settings inline and supersede independently of measured meta;
+  * ``merge_stores`` streams source stores in argument order (so a later
+    source's records supersede an earlier source's, and a meta CONFLICT
+    between stores resolves to the later source, dropping the earlier
+    pair), then writes records in a canonical sorted order with sorted
+    keys — merging is idempotent, and order-independent for stores whose
+    keys are disjoint.
 
 Points persist RAW; the two-point drift correction (absorption.sweep's
 behaviour) is applied at curve-assembly time using the drift factor recorded
 in the "done" marker, so replayed curves reproduce the original run exactly.
-Timings are only comparable under identical measurement settings, so each
-(region, mode) carries a "meta" record: resuming with different reps or a
-different sweep path (compile-once vs trace-per-k) discards the stored pair
-with a warning instead of splicing incompatible executables into one curve.
+
+Durability: a process killed mid-append leaves a truncated final line; the
+loader tolerates (and removes) it — "loses at most one point". A torn append
+that flushed the whole record but not its newline is healed in place (the
+record parses, so nothing is lost). Any corruption BEFORE the final record
+means the file was edited or the disk lies, and the loader hard-fails
+rather than silently dropping data. ``CampaignStore(path, readonly=True)``
+loads without creating, healing, or truncating anything.
 """
 from __future__ import annotations
 
@@ -43,17 +77,78 @@ import logging
 import os
 import threading
 from concurrent.futures import ThreadPoolExecutor
-from typing import Optional, Sequence
+from typing import Callable, Mapping, Optional, Sequence
 
-from repro.core.absorption import (STOP_CONSECUTIVE, AbsorptionCurve,
-                                   absorption, drift_corrected, floor_time,
-                                   measure)
-from repro.core.classifier import classify
+from repro.core.absorption import (DEFAULT_KS, STOP_CONSECUTIVE,
+                                   AbsorptionFit, absorption, assemble_curve,
+                                   floor_time, measure)
+from repro.core.analytic import StepTerms, predict_absorption, predict_curve
+from repro.core.classifier import BottleneckReport, classify
 from repro.core.controller import (Controller, ModeResult, RegionReport,
                                    RegionTarget, derive_body_size)
+from repro.core import decan as decan_mod
 from repro.core.payload import InjectionReport
 
 log = logging.getLogger("repro.campaign")
+
+
+class CampaignStoreError(RuntimeError):
+    """A store is corrupt in a way the loader must not paper over."""
+
+
+def read_store_records(path: str) -> tuple[list[dict], int]:
+    """Parse a JSONL store, tolerating a truncated FINAL line.
+
+    A process killed between ``write`` and ``flush`` leaves a partial last
+    record; that is expected damage and costs at most one point, so it is
+    dropped with a warning. A malformed record with valid records AFTER it
+    cannot come from a torn append — that store is corrupt, and loading it
+    raises ``CampaignStoreError``.
+
+    Returns ``(records, valid_bytes)`` where ``valid_bytes`` is the length of
+    the clean prefix (the caller may truncate the file to it).
+    """
+    with open(path, "rb") as f:
+        data = f.read()
+    records: list[dict] = []
+    valid = 0
+    pos = 0
+    while pos < len(data):
+        nl = data.find(b"\n", pos)
+        end = len(data) if nl < 0 else nl
+        nxt = end if nl < 0 else nl + 1
+        line = data[pos:end].strip()
+        if line:
+            try:
+                rec = json.loads(line.decode("utf-8"))
+                if not isinstance(rec, dict):
+                    raise ValueError(f"record is {type(rec).__name__}, "
+                                     "not an object")
+            except (UnicodeDecodeError, ValueError) as e:
+                if data[nxt:].strip():
+                    raise CampaignStoreError(
+                        f"{path}: corrupt record at byte {pos} with valid "
+                        f"records after it ({e}); refusing to load") from e
+                log.warning(
+                    "%s: dropping truncated final record (%d bytes) — a "
+                    "previous run died mid-append", path, end - pos)
+                return records, valid
+            records.append(rec)
+        valid = nxt
+        pos = nxt
+    return records, valid
+
+
+def _meta_settings(rec: dict) -> dict:
+    """The measurement-settings payload of a meta record (key fields off)."""
+    return {f: v for f, v in rec.items()
+            if f not in ("kind", "region", "mode")}
+
+
+def worker_store(path: str, index: int, count: int) -> str:
+    """Per-worker store naming for fan-out: ``base.jsonl`` -> ``base.w0of2.jsonl``."""
+    base, ext = os.path.splitext(path)
+    return f"{base}.w{index}of{count}{ext or '.jsonl'}"
 
 
 class CampaignStore:
@@ -63,24 +158,46 @@ class CampaignStore:
     store is never more than one record behind the in-memory view.
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, *, readonly: bool = False):
         self.path = path
         self.points: dict[tuple[str, str], dict[int, float]] = {}
         self.sens: dict[tuple[str, str], float] = {}
         self.done: dict[tuple[str, str], dict] = {}
         self.meta: dict[tuple[str, str], dict] = {}
+        self.preds: dict[tuple[str, str], dict] = {}
+        self.decan: dict[tuple[str, str], dict] = {}
         self.body_sizes: dict[str, int] = {}
         self._lock = threading.Lock()
-        if os.path.exists(path):
-            with open(path) as f:
-                for line in f:
-                    line = line.strip()
-                    if line:
-                        self._ingest(json.loads(line))
+        exists = os.path.exists(path)
+        if readonly and not exists:
+            raise FileNotFoundError(f"campaign store {path} does not exist")
+        if exists:
+            records, valid = read_store_records(path)
+            for rec in records:
+                self._ingest(rec)
+            if not readonly:
+                if valid < os.path.getsize(path):
+                    with open(path, "r+b") as f:  # drop the torn tail for
+                        f.truncate(valid)         # good: appends start clean
+                elif valid and not self._ends_with_newline(path):
+                    # torn append that DID flush the whole record but not its
+                    # newline: the record is intact (JSON is self-delimiting)
+                    # — heal the terminator so the next append starts a line
+                    with open(path, "ab") as f:
+                        f.write(b"\n")
+        if readonly:
+            self._f = None
+            return
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
         self._f = open(path, "a")
+
+    @staticmethod
+    def _ends_with_newline(path: str) -> bool:
+        with open(path, "rb") as f:
+            f.seek(-1, os.SEEK_END)
+            return f.read(1) == b"\n"
 
     def _ingest(self, rec: dict) -> None:
         kind = rec.get("kind")
@@ -92,18 +209,29 @@ class CampaignStore:
         elif kind == "done":
             self.done[key] = rec
         elif kind == "meta":
+            old = self.meta.get(key)
+            if old is not None and _meta_settings(old) != _meta_settings(rec):
+                # a settings change mid-file means the old pair was discarded
+                self._drop_measured(key)
             self.meta[key] = rec
         elif kind == "region":
             self.body_sizes[rec["region"]] = int(rec["body_size"])
+        elif kind == "pred":
+            self.preds[key] = rec
+        elif kind == "decan":
+            self.decan[(rec.get("region"), rec.get("variant"))] = rec
 
     def append(self, rec: dict) -> None:
+        if self._f is None:
+            raise RuntimeError(f"store {self.path} was opened readonly")
         with self._lock:
             self._ingest(rec)
             self._f.write(json.dumps(rec) + "\n")
             self._f.flush()
 
     def close(self) -> None:
-        self._f.close()
+        if self._f is not None:
+            self._f.close()
 
     # convenience views ----------------------------------------------------
     def stored_ts(self, region: str, mode: str) -> dict[int, float]:
@@ -112,11 +240,140 @@ class CampaignStore:
     def is_done(self, region: str, mode: str) -> bool:
         return (region, mode) in self.done
 
+    def _drop_measured(self, key: tuple[str, str]) -> None:
+        for d in (self.points, self.sens, self.done):
+            d.pop(key, None)
+
     def discard(self, region: str, mode: str) -> None:
-        """Drop a pair's in-memory data; the file keeps the old lines (this
-        run's fresh appends supersede them on the next load)."""
-        for d in (self.points, self.sens, self.done, self.meta):
-            d.pop((region, mode), None)
+        """Drop a pair's in-memory measured data (pred/decan records carry
+        their own settings and stay); the file keeps the old lines — this
+        run's fresh appends supersede them on the next load."""
+        self._drop_measured((region, mode))
+        self.meta.pop((region, mode), None)
+
+
+# ---------------------------------------------------------------------------
+# Multi-store fan-out: merge worker stores into one canonical store
+# ---------------------------------------------------------------------------
+
+_KIND_ORDER = {"meta": 0, "sens": 1, "point": 2, "done": 3, "region": 4,
+               "decan": 5, "pred": 6}
+
+
+def _canon_line(rec: dict) -> str:
+    return json.dumps(rec, sort_keys=True)
+
+
+def _canon_sort_key(rec: dict) -> tuple:
+    return (str(rec.get("region", "")),
+            str(rec.get("mode", rec.get("variant", ""))),
+            _KIND_ORDER.get(rec.get("kind"), 99),
+            int(rec.get("k", -1)),
+            _canon_line(rec))
+
+
+@dataclasses.dataclass
+class MergeStats:
+    sources: int = 0
+    records_in: int = 0
+    records_out: int = 0
+    conflicts: list = dataclasses.field(default_factory=list)  # (region, mode)
+
+    def __str__(self) -> str:
+        s = (f"merged {self.records_in} records from {self.sources} stores "
+             f"into {self.records_out}")
+        if self.conflicts:
+            s += (f"; {len(self.conflicts)} pair(s) re-measured under newer "
+                  f"settings won: {sorted(set(self.conflicts))}")
+        return s
+
+
+class _MergeView:
+    """Raw-record mirror of CampaignStore's supersede semantics: the same
+    ingest rules, but keeping the winning record verbatim so the merged file
+    reproduces byte-exact replays."""
+
+    def __init__(self, stats: MergeStats):
+        self.meta: dict[tuple, dict] = {}
+        self.sens: dict[tuple, dict] = {}
+        self.points: dict[tuple, dict[int, dict]] = {}
+        self.done: dict[tuple, dict] = {}
+        self.preds: dict[tuple, dict] = {}
+        self.regions: dict[str, dict] = {}
+        self.decan: dict[tuple, dict] = {}
+        self.other: dict[str, dict] = {}
+        self.stats = stats
+
+    def ingest(self, rec: dict) -> None:
+        self.stats.records_in += 1
+        kind = rec.get("kind")
+        key = (rec.get("region"), rec.get("mode"))
+        if kind == "point":
+            self.points.setdefault(key, {})[int(rec["k"])] = rec
+        elif kind == "sens":
+            self.sens[key] = rec
+        elif kind == "done":
+            self.done[key] = rec
+        elif kind == "meta":
+            old = self.meta.get(key)
+            if old is not None and _meta_settings(old) != _meta_settings(rec):
+                log.warning(
+                    "merge: %s/%s measured under %s and %s; keeping the "
+                    "later store's sweep", key[0], key[1],
+                    _meta_settings(old), _meta_settings(rec))
+                self.stats.conflicts.append(key)
+                for d in (self.points, self.sens, self.done):
+                    d.pop(key, None)
+            self.meta[key] = rec
+        elif kind == "region":
+            self.regions[rec["region"]] = rec
+        elif kind == "pred":
+            self.preds[key] = rec
+        elif kind == "decan":
+            self.decan[(rec.get("region"), rec.get("variant"))] = rec
+        else:
+            self.other[_canon_line(rec)] = rec   # unknown: keep, dedup exact
+
+    def records(self) -> list[dict]:
+        out: list[dict] = []
+        out.extend(self.meta.values())
+        out.extend(self.sens.values())
+        for per_k in self.points.values():
+            out.extend(per_k.values())
+        out.extend(self.done.values())
+        out.extend(self.regions.values())
+        out.extend(self.decan.values())
+        out.extend(self.preds.values())
+        out.extend(self.other.values())
+        return sorted(out, key=_canon_sort_key)
+
+
+def merge_stores(dest: str, sources: Sequence[str]) -> MergeStats:
+    """Fold worker stores into one canonical store at ``dest``.
+
+    Sources stream in argument order, so later sources supersede earlier ones
+    under the schema's supersede/meta-conflict rules. The output is written
+    with records in a canonical sort order and canonical key order, then
+    atomically renamed over ``dest`` — so merging is idempotent (re-merging
+    the output is a byte-level no-op), order-independent when sources'
+    keys are disjoint, and safe when ``dest`` is itself one of the sources.
+    """
+    stats = MergeStats(sources=len(sources))
+    view = _MergeView(stats)
+    for src in sources:
+        for rec in read_store_records(src)[0]:
+            view.ingest(rec)
+    records = view.records()
+    stats.records_out = len(records)
+    d = os.path.dirname(dest)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = dest + ".merge-tmp"
+    with open(tmp, "w") as f:
+        for rec in records:
+            f.write(_canon_line(rec) + "\n")
+    os.replace(tmp, dest)
+    return stats
 
 
 @dataclasses.dataclass
@@ -133,6 +390,10 @@ class Campaign:
     measurements on a shared machine must not overlap), so extra workers buy
     back the compile/verify time, which dominates on the trace-per-k fallback
     path and still bounds campaign latency on the compile-once path.
+
+    Multi-host fan-out: give each host its own store (``worker_store``) and a
+    disjoint slice of the grid via ``measure_shard``; ``merge_stores`` then
+    builds the canonical store any host can replay without measuring.
     """
 
     def __init__(self, store: CampaignStore | str,
@@ -249,10 +510,8 @@ class Campaign:
         return self._assemble_mode(mode, out_ks, out_ts, drift, stopped, inj)
 
     def _assemble_mode(self, mode, ks, ts, drift, stopped, inj) -> ModeResult:
-        if drift is not None:
-            ts = drift_corrected(ts, drift)
-        curve = AbsorptionCurve(mode=mode, ks=list(ks), ts=list(ts),
-                                stopped_early=stopped)
+        curve = assemble_curve(mode, ks, ts, drift=drift,
+                               stopped_early=stopped)
         return ModeResult(mode=mode, curve=curve,
                           fit=absorption(curve, tol=self.ctl.tol),
                           injection=inj)
@@ -272,6 +531,15 @@ class Campaign:
         return self._assemble_mode(mode, ks, [ts[k] for k in ks],
                                    rec.get("drift"),
                                    bool(rec.get("stopped_early")), inj)
+
+    # -- DECAN variants, store-backed ---------------------------------------
+    def run_decan(self, target, *, inner: int = 1):
+        """Measure (or replay) DECAN variant timings through this campaign's
+        store: ``decan`` records keyed (region, variant), superseded when
+        reps/inner change."""
+        return decan_mod.run_decan(target, reps=self.ctl.reps, inner=inner,
+                                   store=self.store,
+                                   lock=self._measure_lock, stats=self.stats)
 
     # -- region / campaign level --------------------------------------------
     def _body_size(self, target: RegionTarget) -> int:
@@ -315,3 +583,153 @@ class Campaign:
         return {t.name: self._assemble_region(
                     t, {m: res[(t.name, m)] for m in modes})
                 for t in targets}
+
+    def measure_shard(self, targets: Sequence[RegionTarget],
+                      modes: Sequence[str], *, index: int, count: int
+                      ) -> dict[tuple[str, str], ModeResult]:
+        """Measure this worker's slice of the (region, mode) grid.
+
+        The grid enumerates in (target-major, mode-minor) order and worker
+        ``index`` of ``count`` takes every count-th pair — every pair lands
+        on exactly one worker given identical (targets, modes) arguments.
+        No classification happens here: a shard sees only its slice;
+        ``merge_stores`` + ``characterize``/``run`` on the merged store
+        produce the cross-shard reports.
+        """
+        if not (0 <= index < count):
+            raise ValueError(f"shard index {index} not in [0, {count})")
+        pairs = [(t, m) for t in targets for m in modes]
+        mine = [p for i, p in enumerate(pairs) if i % count == index]
+        res = self._pooled_sweeps(mine)
+        # the worker owning a region's FIRST grid pair also records its body
+        # size, so the merged store replays without a single compile
+        for ti, t in enumerate(targets):
+            if modes and (ti * len(modes)) % count == index:
+                self._body_size(t)
+        return res
+
+
+# ---------------------------------------------------------------------------
+# Analytic campaign: predictions through the same store artifact
+# ---------------------------------------------------------------------------
+
+
+class AnalyticCampaign:
+    """Resumable *prediction* campaign: ``core.analytic`` absorption curves
+    through the same store machinery as measured sweeps.
+
+    Each (region, mode) prediction persists as ONE self-contained ``pred``
+    record (curve + fit + every setting that determined it: HardwareConfig,
+    roofline terms, alpha, tol, ks, k_max). Re-running with identical
+    settings replays the record byte-identically and computes nothing; any
+    settings change recomputes and supersedes. Because the record kinds are
+    disjoint, a pred campaign can share its store with a measured campaign —
+    measured and predicted curves for a region live in one artifact.
+    """
+
+    def __init__(self, store: CampaignStore | str, *, hw, tol: float = 0.05,
+                 alpha: float = 1.0, ks: Optional[Sequence[int]] = None,
+                 k_max: int = 1 << 20):
+        self.store = store if isinstance(store, CampaignStore) \
+            else CampaignStore(store)
+        self.hw = hw
+        self.tol = tol
+        self.alpha = alpha
+        self.ks = [int(k) for k in (ks if ks is not None else DEFAULT_KS)]
+        self.k_max = k_max
+        self.stats = CampaignStats()
+
+    def _settings(self, terms: StepTerms) -> dict:
+        return {"hw": dataclasses.asdict(self.hw), "terms": terms.as_dict(),
+                "alpha": self.alpha, "tol": self.tol, "ks": self.ks,
+                "k_max": self.k_max}
+
+    def predict_mode(self, region: str, terms: StepTerms, mode) -> ModeResult:
+        """Predict (or replay) the absorption curve of one noise mode."""
+        cur = self._settings(terms)
+        rec = self.store.preds.get((region, mode.name))
+        if rec is not None and all(rec.get(f) == cur[f] for f in cur):
+            self.stats.cached += len(rec["ks"])
+            curve = assemble_curve(mode.name, [int(k) for k in rec["ks"]],
+                                   [float(t) for t in rec["ts"]])
+            return ModeResult(mode=mode.name, curve=curve,
+                              fit=AbsorptionFit(**rec["fit"]))
+        fit = predict_absorption(terms, mode, self.hw, tol=self.tol,
+                                 alpha=self.alpha, k_max=self.k_max)
+        ts = [float(t) for t in
+              predict_curve(terms, mode, self.hw, self.ks, alpha=self.alpha)]
+        self.store.append({"kind": "pred", "region": region,
+                           "mode": mode.name, "ks": self.ks, "ts": ts,
+                           "fit": dataclasses.asdict(fit), **cur})
+        self.stats.measured += len(self.ks)
+        curve = assemble_curve(mode.name, self.ks, ts)
+        return ModeResult(mode=mode.name, curve=curve, fit=fit)
+
+    def characterize(self, region: str, terms: StepTerms,
+                     modes: Mapping[str, "object"], *,
+                     classify_fn: Optional[Callable[
+                         [dict[str, ModeResult]], BottleneckReport]] = None
+                     ) -> RegionReport:
+        """Predict every mode and classify — the analytic mirror of
+        ``Campaign.characterize``. ``classify_fn`` overrides the default
+        raw-absorption classification (the analytic probe classifies on
+        absorbed-work fractions instead)."""
+        results = {name: self.predict_mode(region, terms, mode)
+                   for name, mode in modes.items()}
+        if classify_fn is not None:
+            report = classify_fn(results)
+        else:
+            report = classify({m: r.fit.k1 for m, r in results.items()})
+        return RegionReport(region=region, results=results, bottleneck=report,
+                            body_size=0)
+
+
+# ---------------------------------------------------------------------------
+# CLI: merge / inspect stores (the fan-out hosts' rendezvous step)
+# ---------------------------------------------------------------------------
+
+
+def _cli(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.campaign",
+        description="campaign store maintenance (merge worker stores, "
+                    "inspect contents)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    mp = sub.add_parser("merge", help="fold worker stores into one "
+                                      "canonical store")
+    mp.add_argument("dest")
+    mp.add_argument("sources", nargs="+")
+    ip = sub.add_parser("inspect", help="summarize one store")
+    ip.add_argument("path")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "merge":
+        stats = merge_stores(args.dest, args.sources)
+        print(f"{args.dest}: {stats}")
+        return 0
+    try:   # readonly: inspecting must neither create nor heal the store
+        st = CampaignStore(args.path, readonly=True)
+    except FileNotFoundError as e:
+        print(e)
+        return 2
+    print(f"{args.path}:")
+    for key in sorted(set(st.meta) | set(st.points) | set(st.done)):
+        n = len(st.points.get(key, {}))
+        state = "done" if key in st.done else f"{n} point(s), in progress"
+        meta = _meta_settings(st.meta[key]) if key in st.meta else "?"
+        print(f"  measured {key[0]}/{key[1]}: {state}  [settings {meta}]")
+    for key, rec in sorted(st.preds.items()):
+        terms = StepTerms.from_dict(rec.get("terms", {}))
+        print(f"  pred     {key[0]}/{key[1]}: {len(rec['ks'])} point(s), "
+              f"hw={rec['hw'].get('name', '?')} dominant={terms.dominant} "
+              f"Abs={rec['fit']['k1']:.0f}")
+    for (region, variant), rec in sorted(st.decan.items()):
+        print(f"  decan    {region}/{variant}: t={rec['t']:.6f}s "
+              f"(reps={rec.get('reps')}, inner={rec.get('inner')})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_cli())

@@ -128,12 +128,24 @@ class Controller:
         self.stop_ratio = stop_ratio
         self.verify_payload = verify_payload
         self.compile_once = compile_once  # use build_rt when the region has it
+        # memoize runtime-k callables per (target, mode): build_rt returns a
+        # fresh jit wrapper each call, and jax's compile cache keys on the
+        # callable's identity — without this the sensitivity probe and the
+        # sweep would each trace their own copy of the SAME program. Keyed
+        # by target IDENTITY (two targets may share a name but close over
+        # different buffers); the entry pins the target so its id() cannot
+        # be recycled onto a stale executable.
+        self._rt_cache: dict[tuple[int, str],
+                             tuple[RegionTarget, Optional[Callable]]] = {}
 
     def _rt_fn(self, target: RegionTarget, mode: str) -> Optional[Callable]:
         """The region's runtime-k callable, or None -> trace-per-k fallback."""
         if not self.compile_once or target.build_rt is None:
             return None
-        return target.build_rt(mode)
+        key = (id(target), mode)
+        if key not in self._rt_cache:
+            self._rt_cache[key] = (target, target.build_rt(mode))
+        return self._rt_cache[key][1]
 
     # -- §3.2: one or two quantities first, to learn the sensitivity --------
     def probe_sensitivity(self, target: RegionTarget, mode: str) -> float:

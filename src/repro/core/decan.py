@@ -11,15 +11,32 @@ portability is structural to binary patching, not to the idea). The semantics
 caveat the paper raises (removal breaks dataflow) is handled the same way
 DECAN does: variants keep the control flow and write to dead buffers.
 
+Campaign integration: ``run_decan(..., store=...)`` persists the three
+variant timings as ``decan`` records keyed (region, variant) — the records
+carry their measurement settings (reps, inner) inline and are replayed on a
+re-run with matching settings, superseded otherwise. ``Campaign.run_decan``
+wires a campaign's store, measurement lock and stats in automatically, so
+one store file holds a region's decremental baseline AND its incremental
+noise sweeps.
+
+Noise cross-check: a target built with ``build_noisy`` (the ``loop_region``
+make_fn contract: ``build_noisy(noise_or_None, k)``) exposes ``region()``,
+a RegionTarget over the reference kernel whose noise sweeps ride the
+controller's compile-once runtime-k path — the whole (scenario, mode) sweep
+costs O(1) executables instead of one per k.
+
 Used by benchmarks/table3 (four overlap scenarios) and fig6 (the
 frontend-bottleneck case where noise injection and DECAN must be combined).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 from repro.core.absorption import measure
+
+# variant name -> (keep_fp, keep_ls); "ref" keeps both instruction classes
+VARIANTS = {"ref": (True, True), "fp": (True, False), "ls": (False, True)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,10 +46,28 @@ class DecanTarget:
     ``build(fp, ls)`` -> jitted callable; ``args_for()`` -> its arguments.
     build(True, True) is the reference; (True, False) the FP variant
     (memory ops removed); (False, True) the LS variant (FP ops removed).
+
+    ``build_noisy(noise_or_None, k)`` (optional) builds the REFERENCE kernel
+    with a loop-level noise slot, following the ``loop_region`` make_fn
+    contract (pass ``k`` straight through to ``noise.emit``); it unlocks
+    ``region()`` and with it compile-once noise sweeps over this kernel.
     """
     name: str
     build: Callable[[bool, bool], Callable]
     args_for: Callable[[], tuple]
+    build_noisy: Optional[Callable] = None
+    body_size: int = 0
+
+    def region(self, *, rng=None):
+        """RegionTarget over the reference kernel (both parts kept), with
+        ``build_rt`` — noise sweeps compile ≤2 executables per mode."""
+        if self.build_noisy is None:
+            raise ValueError(
+                f"DecanTarget {self.name!r} has no build_noisy; pass one to "
+                "run noise sweeps against this kernel")
+        from repro.core.controller import loop_region
+        return loop_region(self.name, self.build_noisy, self.args_for,
+                           body_size=self.body_size, rng=rng)
 
 
 @dataclasses.dataclass
@@ -68,10 +103,43 @@ class DecanResult:
         return "mixed"
 
 
-def run_decan(target: DecanTarget, *, reps: int = 5, inner: int = 1
-              ) -> DecanResult:
+def stored_variant_t(store, name: str, variant: str, *, reps: int,
+                     inner: int) -> Optional[float]:
+    """The stored timing for one variant, or None when the store has no
+    record measured under these settings (reps/inner mismatch = stale)."""
+    if store is None:
+        return None
+    rec = store.decan.get((name, variant))
+    if rec is None or rec.get("reps") != reps or rec.get("inner") != inner:
+        return None
+    return float(rec["t"])
+
+
+def run_decan(target: DecanTarget, *, reps: int = 5, inner: int = 1,
+              store=None, lock=None, stats=None) -> DecanResult:
+    """Time the three DECAN variants, replaying from ``store`` when it has
+    matching records. ``lock`` serializes the timed sections against
+    concurrent campaign measurements; ``stats`` (CampaignStats-shaped)
+    accumulates measured/cached counts."""
     args = target.args_for()
-    t_ref = measure(target.build(True, True), args, reps=reps, inner=inner)
-    t_fp = measure(target.build(True, False), args, reps=reps, inner=inner)
-    t_ls = measure(target.build(False, True), args, reps=reps, inner=inner)
-    return DecanResult(target.name, t_ref, t_fp, t_ls)
+    ts: dict[str, float] = {}
+    for vname, (fp, ls) in VARIANTS.items():
+        t = stored_variant_t(store, target.name, vname, reps=reps,
+                             inner=inner)
+        if t is None:
+            fn = target.build(fp, ls)
+            if lock is not None:
+                with lock:
+                    t = measure(fn, args, reps=reps, inner=inner)
+            else:
+                t = measure(fn, args, reps=reps, inner=inner)
+            if store is not None:
+                store.append({"kind": "decan", "region": target.name,
+                              "variant": vname, "t": t, "reps": reps,
+                              "inner": inner})
+            if stats is not None:
+                stats.measured += 1
+        elif stats is not None:
+            stats.cached += 1
+        ts[vname] = t
+    return DecanResult(target.name, ts["ref"], ts["fp"], ts["ls"])

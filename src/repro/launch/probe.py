@@ -11,9 +11,24 @@ executable per mode instead of one per sweep point):
         --kind train --modes fp_add32,vmem_ld,hbm_stream \
         [--store PATH] [--fresh] [--workers N] [--no-compile-once]
 
-Analytic mode (full config, TPU v5e target, reads the dry-run artifact):
+Multi-host fan-out: give each host/process ``--shard I/N`` — it measures a
+disjoint slice of the mode grid into its own per-worker store (the base
+store name with a ``.wIofN`` suffix). When all shards finish, merge and
+replay:
+
+    python -m repro.core.campaign merge STORE STORE.w0of2.jsonl STORE.w1of2.jsonl
+    python -m repro.launch.probe ... --store STORE --expect-no-measure
+
+``--expect-no-measure`` turns "the store fully covers this probe" into an
+exit code, so scripts and CI can assert the round-trip measured nothing.
+
+Analytic mode (full config, TPU v5e target, reads the dry-run artifact) runs
+through the SAME campaign machinery — predictions persist as ``pred``
+records (curve + fit + HardwareConfig/terms/settings) and replay on re-run:
+
     PYTHONPATH=src python -m repro.launch.probe --arch gemma-2b \
-        --shape train_4k --analytic [--dryrun-dir experiments/dryrun/16x16]
+        --shape train_4k --analytic [--dryrun-dir experiments/dryrun/16x16] \
+        [--store PATH] [--fresh]
 
 Both report Abs^raw per mode + the bottleneck classification; measured mode
 also verifies the payload statically (surviving noise ops in optimized HLO).
@@ -23,6 +38,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,13 +46,24 @@ import jax.numpy as jnp
 CAMPAIGN_DIR = "experiments/campaigns"
 
 
+def _finish(stats, expect_no_measure: bool) -> None:
+    print(f"  [{stats.measured} points measured, "
+          f"{stats.cached} replayed from store]")
+    if expect_no_measure and stats.measured:
+        raise SystemExit(
+            f"--expect-no-measure: store was incomplete, {stats.measured} "
+            "fresh measurements were needed")
+
+
 def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
                    batch: int, reps: int, store: str | None = None,
                    fresh: bool = False, workers: int = 1,
-                   compile_once: bool = True) -> None:
+                   compile_once: bool = True,
+                   shard: Optional[tuple[int, int]] = None,
+                   expect_no_measure: bool = False) -> None:
     from repro.configs import get_smoke_config
     from repro.configs.base import ShapeConfig
-    from repro.core import Campaign, Controller, step_region
+    from repro.core import Campaign, Controller, step_region, worker_store
     from repro.core.noise import NoiseScale, make_modes
     from repro.models.model import build
 
@@ -71,10 +98,28 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
     region = step_region(region_name, step, args,
                          {m: registry[m] for m in modes})
     store = store or os.path.join(CAMPAIGN_DIR, f"{region_name}.jsonl")
+    if shard is not None:
+        store = worker_store(store, *shard)
     if fresh and os.path.exists(store):
         os.unlink(store)
     ctl = Controller(reps=reps, compile_once=compile_once)
     camp = Campaign(store, ctl, workers=workers)
+
+    if shard is not None:
+        idx, cnt = shard
+        print(f"== measured probe [shard {idx}/{cnt}]: {cfg.name} {kind} "
+              f"seq={seq} batch={batch} (worker store: {store})")
+        res = camp.measure_shard([region], modes, index=idx, count=cnt)
+        for (_, m), r in sorted(res.items()):
+            print(f"  {m:14s} Abs^raw={r.fit.k1:7.1f} "
+                  f"t0={r.fit.t0*1e3:8.2f}ms")
+        if not res:
+            print(f"  (no pairs land on shard {idx} of {cnt})")
+        print("  [classification happens after `python -m repro.core.campaign"
+              " merge`; a shard sees only its slice]")
+        _finish(camp.stats, expect_no_measure)
+        return
+
     print(f"== measured probe: {cfg.name} {kind} seq={seq} batch={batch} "
           f"(campaign store: {store})")
     rep = camp.characterize(region, modes)
@@ -85,14 +130,15 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
         print(f"  {m:14s} Abs^raw={r.fit.k1:7.1f} t0={r.fit.t0*1e3:8.2f}ms "
               f"slope={r.fit.slope*1e6:9.2f}us/pat {pay}")
     print(f"  => {rep.bottleneck}")
-    print(f"  [{camp.stats.measured} points measured, "
-          f"{camp.stats.cached} replayed from store]")
+    _finish(camp.stats, expect_no_measure)
 
 
 def analytic_probe(arch: str, shape_name: str, dryrun_dir: str,
-                   modes: list[str], *, tol: float) -> None:
+                   modes: list[str], *, tol: float, store: str | None = None,
+                   fresh: bool = False, expect_no_measure: bool = False
+                   ) -> None:
     from repro.configs import TPU_V5E, canonical
-    from repro.core import StepTerms, classify, predict_absorption
+    from repro.core import AnalyticCampaign, StepTerms, classify
     from repro.core.analytic import pattern_deltas
     from repro.core.noise import make_modes
 
@@ -105,24 +151,47 @@ def analytic_probe(arch: str, shape_name: str, dryrun_dir: str,
     terms = StepTerms(compute=r["t_compute"], memory=r["t_memory"],
                       ici=r["t_ici"])
     registry = make_modes()
-    fracs = {}
+    region_name = f"{canonical(arch)}_{shape_name}"
+    store = store or os.path.join(CAMPAIGN_DIR, f"{region_name}_pred.jsonl")
+    if fresh and os.path.exists(store):
+        os.unlink(store)
+    camp = AnalyticCampaign(store, hw=TPU_V5E, tol=tol, k_max=1 << 44)
     print(f"== analytic probe: {arch} {shape_name} [{rec['mesh']}] "
           f"(terms from dry-run: Tc={terms.compute*1e3:.2f}ms "
           f"Tm={terms.memory*1e3:.2f}ms Ti={terms.ici*1e3:.2f}ms, "
-          f"dominant={r['dominant']})")
+          f"dominant={r['dominant']}; campaign store: {store})")
     t0 = terms.bound()
-    for m in modes:
-        fit = predict_absorption(terms, registry[m], TPU_V5E, tol=tol,
-                                 k_max=1 << 44)
-        # absorbed-work fraction: what share of the step time this mode's
+
+    def classify_fracs(results) -> "object":
+        # absorbed-work fraction: what share of the step time each mode's
         # noise occupies before detection — the step-scale-free absorption
         # (bound resource ~= tol; slack resources >> tol)
+        fracs = {}
+        for m, res in results.items():
+            delta = max(pattern_deltas(registry[m], TPU_V5E).values())
+            fracs[m] = 100.0 * res.fit.k1 * delta / t0
+        return classify(fracs, low=2.0 * 100 * tol, high=6.0 * 100 * tol)
+
+    rep = camp.characterize(region_name, terms,
+                            {m: registry[m] for m in modes},
+                            classify_fn=classify_fracs)
+    for m, res in rep.results.items():
         delta = max(pattern_deltas(registry[m], TPU_V5E).values())
-        frac = 100.0 * fit.k1 * delta / t0
-        fracs[m] = frac
-        print(f"  {m:14s} Abs^raw={fit.k1:14.0f} patterns "
+        frac = 100.0 * res.fit.k1 * delta / t0
+        print(f"  {m:14s} Abs^raw={res.fit.k1:14.0f} patterns "
               f"(~{frac:6.1f}% of step absorbable)")
-    print(f"  => {classify(fracs, low=2.0 * 100 * tol, high=6.0 * 100 * tol)}")
+    print(f"  => {rep.bottleneck}")
+    _finish(camp.stats, expect_no_measure)
+
+
+def _parse_shard(text: str) -> tuple[int, int]:
+    try:
+        idx, cnt = (int(p) for p in text.split("/"))
+    except ValueError:
+        raise SystemExit(f"--shard wants I/N (e.g. 0/2), got {text!r}")
+    if not (0 <= idx < cnt):
+        raise SystemExit(f"--shard index {idx} not in [0, {cnt})")
+    return idx, cnt
 
 
 def main() -> None:
@@ -144,20 +213,34 @@ def main() -> None:
     ap.add_argument("--fresh", action="store_true",
                     help="discard any existing campaign store first")
     ap.add_argument("--workers", type=int, default=1,
-                    help="fan independent mode sweeps over N workers")
+                    help="fan independent mode sweeps over N threads")
+    ap.add_argument("--shard", default=None, metavar="I/N",
+                    help="measure only worker I's slice of the mode grid "
+                         "into a per-worker store (multi-host fan-out; "
+                         "merge the worker stores afterwards)")
+    ap.add_argument("--expect-no-measure", action="store_true",
+                    help="exit non-zero if any fresh measurement was needed "
+                         "(assert a merged/complete store replays fully)")
     ap.add_argument("--no-compile-once", action="store_true",
                     help="force the trace-per-k fallback sweep path")
     args = ap.parse_args()
 
     modes = [m.strip() for m in args.modes.split(",") if m.strip()]
     if args.analytic:
+        if args.shard is not None:
+            raise SystemExit("--shard applies to measured mode only "
+                             "(predictions are too cheap to fan out)")
         analytic_probe(args.arch, args.shape, args.dryrun_dir, modes,
-                       tol=args.tol)
+                       tol=args.tol, store=args.store, fresh=args.fresh,
+                       expect_no_measure=args.expect_no_measure)
     else:
+        shard = _parse_shard(args.shard) if args.shard is not None else None
         measured_probe(args.arch, args.kind, modes, seq=args.seq,
                        batch=args.batch, reps=args.reps, store=args.store,
                        fresh=args.fresh, workers=args.workers,
-                       compile_once=not args.no_compile_once)
+                       compile_once=not args.no_compile_once,
+                       shard=shard,
+                       expect_no_measure=args.expect_no_measure)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,144 @@
+"""Regenerate the golden-signature fixtures.
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+Writes ``signatures.jsonl`` (a campaign store of tiny fixed-seed synthetic
+absorption signatures — one region per paper-style bottleneck class, with
+curves drawn from the three-phase model plus deterministic jitter) and
+``expected.json`` (the fit fields and BottleneckReport each region must
+replay to). ``tests/test_golden_signatures.py`` replays the store through
+the Campaign engine and compares against ``expected.json`` — a refactor of
+curve assembly, the hinge fit, or the classifier that changes any signature
+fails loudly instead of silently reclassifying.
+
+Regenerate ONLY when a change to curve assembly / fitting / classification
+is intentional, and say so in the commit that updates these files.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+STORE = os.path.join(HERE, "signatures.jsonl")
+EXPECTED = os.path.join(HERE, "expected.json")
+
+SEED = 20260731
+REPS = 2          # meta settings the replaying Controller must match
+JITTER = 0.003    # multiplicative noise on each point (deterministic rng)
+
+KS = [0, 1, 2, 4, 8, 12, 16, 24, 32, 48, 64]
+
+# region -> (expected label, drift factor recorded in "done",
+#            {mode: (t0_seconds, k1_knee, slope_fraction_per_pattern)})
+# Mode vocabularies deliberately mix loop-level and graph-level names so the
+# suite pins BOTH against the classifier's alias table.
+REGIONS = {
+    "golden_compute": ("compute", None, {            # HACCmk row (loop vocab)
+        "fp_add": (2.0e-3, 0.0, 0.30),
+        "l1_ld": (2.0e-3, 13.0, 0.20),
+        "mem_ld": (2.0e-3, 30.0, 0.15),
+    }),
+    "golden_bandwidth": ("bandwidth", 1.10, {        # STREAM row (graph vocab)
+        "fp_add32": (5.0e-3, 48.0, 0.25),
+        "vmem_ld": (5.0e-3, 9.0, 0.22),
+        "hbm_stream": (5.0e-3, 1.0, 0.40),
+    }),
+    "golden_latency": ("latency", None, {            # lat_mem_rd (graph vocab)
+        "fp_add32": (1.0e-3, 40.0, 0.20),
+        "hbm_stream": (1.0e-3, 11.0, 0.18),
+    }),
+    "golden_overlap": ("overlap", None, {            # Table 3 case 3
+        "fp_add": (3.0e-3, 0.0, 0.35),
+        "l1_ld": (3.0e-3, 1.0, 0.30),
+    }),
+    "golden_ici": ("ici", None, {                    # TPU extension
+        "ici_allreduce": (8.0e-3, 1.0, 0.30),
+        "fp_add32": (8.0e-3, 14.0, 0.20),
+        "vmem_ld": (8.0e-3, 12.0, 0.20),
+    }),
+    "golden_mixed": ("mixed", None, {                # Table 3 case 4
+        "fp_add": (4.0e-3, 8.0, 0.12),
+        "l1_ld": (4.0e-3, 7.0, 0.12),
+    }),
+}
+
+
+def synth_ts(rng: np.random.Generator, t0: float, k1: float,
+             slope_frac: float) -> list[float]:
+    """Three-phase model samples: flat to k1, then linear, ±JITTER."""
+    ts = []
+    for k in KS:
+        t = t0 * (1.0 + max(0.0, k - k1) * slope_frac)
+        ts.append(float(t * (1.0 + rng.uniform(-JITTER, JITTER))))
+    return ts
+
+
+def build_store() -> list[dict]:
+    rng = np.random.default_rng(SEED)
+    records: list[dict] = []
+    for region, (_, drift, modes) in REGIONS.items():
+        records.append({"kind": "region", "region": region, "body_size": 24})
+        for mode, (t0, k1, slope) in modes.items():
+            ts = synth_ts(rng, t0, k1, slope)
+            records.append({"kind": "meta", "region": region, "mode": mode,
+                            "reps": REPS, "compile_once": False})
+            records.append({"kind": "sens", "region": region, "mode": mode,
+                            "value": ts[-1] / ts[0]})
+            for k, t in zip(KS, ts):
+                records.append({"kind": "point", "region": region,
+                                "mode": mode, "k": k, "t": t})
+            records.append({"kind": "done", "region": region, "mode": mode,
+                            "ks": KS, "stopped_early": False,
+                            "drift": drift, "payload": None})
+    return records
+
+
+def replay(store_path: str) -> dict:
+    from repro.core import Campaign, Controller, RegionTarget
+
+    def _fail(*a, **k):
+        raise AssertionError("golden replay must never build or measure")
+
+    out = {}
+    for region, (label, _, modes) in REGIONS.items():
+        camp = Campaign(store_path, Controller(reps=REPS,
+                                               verify_payload=False))
+        target = RegionTarget(name=region, build=_fail, args_for=_fail)
+        rep = camp.characterize(target, list(modes))
+        assert camp.stats.measured == 0, region
+        assert rep.bottleneck.label == label, (
+            f"{region}: synthetic signature classified as "
+            f"{rep.bottleneck.label!r}, wanted {label!r} — retune REGIONS")
+        out[region] = {
+            "label": rep.bottleneck.label,
+            "confidence": rep.bottleneck.confidence,
+            "body_size": rep.body_size,
+            "modes": {m: {f: getattr(r.fit, f) for f in
+                          ("k1", "k2", "t0", "slope", "k1_threshold", "sse")}
+                      for m, r in rep.results.items()},
+        }
+    return out
+
+
+def main() -> None:
+    records = build_store()
+    with open(STORE, "w") as f:
+        for rec in records:
+            f.write(json.dumps(rec) + "\n")
+    expected = replay(STORE)
+    with open(EXPECTED, "w") as f:
+        json.dump(expected, f, indent=1, sort_keys=True)
+        f.write("\n")
+    n_modes = sum(len(m) for _, _, m in REGIONS.values())
+    print(f"wrote {STORE} ({len(records)} records, {len(REGIONS)} regions, "
+          f"{n_modes} signatures) and {EXPECTED}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,23 @@
 """Campaign engine + compile-once sweep path: trace-count guarantees,
-static/runtime-k equivalence, store resume semantics."""
+static/runtime-k equivalence, store resume semantics, multi-store
+fan-out/merge, store-backed DECAN."""
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Campaign, CampaignStore, Controller, step_region
+from repro.core import (Campaign, CampaignStore, CampaignStoreError,
+                        Controller, DecanTarget, merge_stores, step_region,
+                        worker_store)
 from repro.core.absorption import DEFAULT_KS
 from repro.core.controller import loop_region
 from repro.core.loopnoise import make_loop_modes
 from repro.core.noise import NoiseScale, make_modes
 
 MODES = make_modes(NoiseScale(hbm_mib=4, chase_len=1 << 16, mxu_dim=32))
-
 
 def _make_counting_region(name="tiny"):
     """A tiny region whose step counts Python traces — each jit compilation
@@ -77,7 +82,10 @@ def test_sweep_compiles_at_most_two_executables():
 
 def test_fallback_compiles_per_k():
     region, traces = _make_counting_region()
-    ctl = Controller(reps=2, compile_once=False, verify_payload=False)
+    # stop_ratio high: a wall-clock spike on a loaded container must not
+    # trigger the online stop and truncate the sweep under test
+    ctl = Controller(reps=2, compile_once=False, verify_payload=False,
+                     stop_ratio=100.0)
     ctl.run_mode(region, "fp_add32", ks=(0, 2, 4, 8))
     assert traces["n"] >= 4          # the paper's cost model: one per k
 
@@ -88,8 +96,10 @@ def test_compile_once_and_fallback_same_classification():
     wobble, absorption fit fields must exist on both)."""
     region, _ = _make_counting_region("ab_region")
     ks = (0, 2, 4, 8, 16)
-    fast = Controller(reps=2, compile_once=True)
-    slow = Controller(reps=2, compile_once=False)
+    # stop_ratio high: load spikes must not early-stop either sweep (the
+    # ks[:3] assertion below relies on all three points being measured)
+    fast = Controller(reps=2, compile_once=True, stop_ratio=100.0)
+    slow = Controller(reps=2, compile_once=False, stop_ratio=100.0)
     r_fast = fast.run_mode(region, "fp_add32", ks=ks)
     r_slow = slow.run_mode(region, "fp_add32", ks=ks)
     assert r_fast.curve.ks[:3] == r_slow.curve.ks[:3] == [0, 2, 4]
@@ -232,3 +242,345 @@ def test_probe_sensitivity_zero_baseline(monkeypatch):
     with pytest.warns(RuntimeWarning, match="timer resolution"):
         s = c.probe_sensitivity(region, "fp_add32")
     assert np.isfinite(s)
+
+
+# ---------------------------------------------------------------------------
+# truncated / corrupt stores (the "loses at most one point" guarantee)
+# ---------------------------------------------------------------------------
+
+def _cut_final_record(path, src, nbytes=9):
+    data = open(src, "rb").read()
+    assert data.endswith(b"\n")
+    with open(path, "wb") as f:
+        f.write(data[:-nbytes])     # torn mid-append: partial last record
+
+
+def test_truncated_final_line_resumes_with_one_point_lost(tmp_path):
+    """A process killed mid-append leaves a partial last record; reopening
+    the store must warn, drop ONLY that record, and resume."""
+    full = str(tmp_path / "full.jsonl")
+    region, _ = _make_counting_region("trunc_region")
+    ctl = Controller(reps=2, verify_payload=False)
+    res = Campaign(full, ctl).sweep_mode(region, "fp_add32")
+    n_points = len(res.curve.ks)
+
+    # cut mid-"done": the sweep resumes from its points, remeasures nothing
+    trunc = str(tmp_path / "t1.jsonl")
+    _cut_final_record(trunc, full)
+    region2, traces2 = _make_counting_region("trunc_region")
+    c2 = Campaign(trunc, ctl)
+    assert not c2.store.is_done("trunc_region", "fp_add32")
+    res2 = c2.sweep_mode(region2, "fp_add32")
+    assert c2.stats.measured == 0 and c2.stats.cached == n_points
+    assert res2.curve.ks == res.curve.ks
+
+    # cut mid-"point" (strip the done line first): exactly one k remeasured
+    lines = open(full).read().strip().split("\n")
+    assert json.loads(lines[-1])["kind"] == "done"
+    trunc2 = str(tmp_path / "t2.jsonl")
+    with open(trunc2, "w") as f:
+        f.write("\n".join(lines[:-1]) + "\n")
+    _cut_final_record(trunc2, trunc2)
+    region3, _ = _make_counting_region("trunc_region")
+    c3 = Campaign(trunc2, ctl)
+    c3.sweep_mode(region3, "fp_add32")
+    assert c3.stats.measured == 1                 # the torn point only
+    assert c3.stats.cached == n_points - 1
+    # and the store is fully healed: a fresh campaign replays everything
+    region4, _ = _make_counting_region("trunc_region")
+    c4 = Campaign(trunc2, ctl)
+    c4.sweep_mode(region4, "fp_add32")
+    assert c4.stats.measured == 0
+
+
+def test_corruption_before_final_record_hard_fails(tmp_path):
+    path = str(tmp_path / "bad.jsonl")
+    st = CampaignStore(path)
+    st.append({"kind": "sens", "region": "r", "mode": "m", "value": 1.5})
+    st.append({"kind": "point", "region": "r", "mode": "m", "k": 0, "t": 0.5})
+    st.append({"kind": "point", "region": "r", "mode": "m", "k": 2, "t": 0.6})
+    st.close()
+    lines = open(path).read().strip().split("\n")
+    with open(path, "w") as f:   # damage a MIDDLE record, keep the tail
+        f.write(lines[0] + "\n" + lines[1][:-4] + "\n" + lines[2] + "\n")
+    with pytest.raises(CampaignStoreError, match="corrupt record"):
+        CampaignStore(path)
+
+
+# ---------------------------------------------------------------------------
+# multi-store fan-out + merge (acceptance: split across >=2 stores, merged,
+# replays with ZERO new measurements and identical classification)
+# ---------------------------------------------------------------------------
+
+def _fake_measure(fn, args=(), **kw):
+    """Deterministic synthetic wall-clock: t(k) has a knee at k=6. The
+    fan-out/merge tests compare two independently-run campaigns, so timing
+    must be a pure function of k (args[0] on the runtime-k path)."""
+    k = int(args[0]) if args else 0
+    return 1e-3 * (1.0 + max(0, k - 6) * 0.05)
+
+
+@pytest.fixture
+def fake_measure(monkeypatch):
+    import repro.core.campaign as campaign_mod
+    import repro.core.controller as ctl_mod
+
+    monkeypatch.setattr(campaign_mod, "measure", _fake_measure)
+    monkeypatch.setattr(ctl_mod, "measure", _fake_measure)
+
+
+def test_fanout_merge_replay_matches_single_store(tmp_path, fake_measure):
+    """Acceptance: a campaign split across 2 worker stores, merged with
+    merge_stores(), replays with ZERO new measurements, byte-identical
+    ModeResults, and the same classification as the single-store run."""
+    modes = ["fp_add32", "vmem_ld", "hbm_stream"]
+
+    def fresh(name="fan_region"):
+        region, traces = _make_counting_region(name)
+        return region, traces, Controller(reps=2, verify_payload=False)
+
+    # reference: one store, one process
+    region, _, ctl = fresh()
+    single = Campaign(str(tmp_path / "single.jsonl"), ctl)
+    ref = single.characterize(region, modes)
+
+    # fan-out: every (region, mode) pair measured by exactly one worker
+    base = str(tmp_path / "fan.jsonl")
+    worker_results = {}
+    for i in (0, 1):
+        region, _, ctl = fresh()
+        c = Campaign(worker_store(base, i, 2), ctl)
+        res = c.measure_shard([region], modes, index=i, count=2)
+        assert c.stats.cached == 0 and c.stats.measured > 0
+        assert not set(res) & set(worker_results)    # disjoint slices
+        worker_results.update(res)
+    assert set(worker_results) == {("fan_region", m) for m in modes}
+
+    stats = merge_stores(base, [worker_store(base, i, 2) for i in (0, 1)])
+    assert not stats.conflicts
+
+    region, traces, ctl = fresh()
+    merged = Campaign(base, ctl)
+    rep = merged.characterize(region, modes)
+    assert merged.stats.measured == 0               # ZERO new measurements
+    assert traces["n"] == 0                         # not even a compile
+    for m in modes:                                 # byte-identical replay
+        assert rep.results[m] == worker_results[("fan_region", m)]
+        assert rep.results[m] == ref.results[m]     # == single-store run
+    assert rep.bottleneck.label == ref.bottleneck.label
+
+
+def test_merge_is_idempotent_and_order_independent(tmp_path, fake_measure):
+    a = str(tmp_path / "a.jsonl")
+    b = str(tmp_path / "b.jsonl")
+    for path, name in ((a, "rA"), (b, "rB")):     # disjoint key sets
+        region, _, = _make_counting_region(name)[:2]
+        Campaign(path, Controller(reps=2, verify_payload=False)) \
+            .sweep_mode(region, "fp_add32")
+    ab = str(tmp_path / "ab.jsonl")
+    ba = str(tmp_path / "ba.jsonl")
+    merge_stores(ab, [a, b])
+    merge_stores(ba, [b, a])
+    assert open(ab).read() == open(ba).read()     # order-independent
+    again = str(tmp_path / "again.jsonl")
+    merge_stores(again, [ab])
+    assert open(again).read() == open(ab).read()  # idempotent
+    merge_stores(ab, [ab, ba])                    # dest may be a source
+    assert open(again).read() == open(ab).read()
+
+
+def test_merge_meta_conflict_later_store_wins(tmp_path):
+    """The same pair measured under different settings in two stores must
+    not splice: the later source supersedes the earlier pair entirely."""
+    a, b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    for path, reps, t in ((a, 2, 0.5), (b, 3, 0.9)):
+        st = CampaignStore(path)
+        st.append({"kind": "meta", "region": "r", "mode": "m",
+                   "reps": reps, "compile_once": True})
+        st.append({"kind": "point", "region": "r", "mode": "m",
+                   "k": 0, "t": t})
+        st.append({"kind": "point", "region": "r", "mode": "m",
+                   "k": 4 if reps == 2 else 8, "t": t})
+        st.close()
+    out = str(tmp_path / "m.jsonl")
+    stats = merge_stores(out, [a, b])
+    assert ("r", "m") in stats.conflicts
+    st = CampaignStore(out)
+    st.close()
+    assert st.meta[("r", "m")]["reps"] == 3
+    assert st.stored_ts("r", "m") == {0: 0.9, 8: 0.9}   # a's points dropped
+
+
+def test_merge_cli_round_trip(tmp_path, capsys):
+    from repro.core.campaign import _cli
+
+    a, b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    for path, region in ((a, "r1"), (b, "r2")):
+        st = CampaignStore(path)
+        st.append({"kind": "point", "region": region, "mode": "m",
+                   "k": 0, "t": 0.25})
+        st.close()
+    out = str(tmp_path / "merged.jsonl")
+    assert _cli(["merge", out, a, b]) == 0
+    st = CampaignStore(out)
+    st.close()
+    assert st.stored_ts("r1", "m") == {0: 0.25}
+    assert st.stored_ts("r2", "m") == {0: 0.25}
+    assert _cli(["inspect", out]) == 0
+    assert "r1/m" in capsys.readouterr().out
+
+
+def test_measure_shard_covers_grid_exactly_once(tmp_path, fake_measure):
+    regions = [_make_counting_region(f"g{i}")[0] for i in range(2)]
+    modes = ["fp_add32", "vmem_ld"]
+    seen = []
+    for i in range(3):
+        c = Campaign(str(tmp_path / f"w{i}.jsonl"),
+                     Controller(reps=2, verify_payload=False))
+        seen += list(c.measure_shard(regions, modes, index=i, count=3))
+    assert sorted(seen) == sorted((r.name, m) for r in regions for m in modes)
+    with pytest.raises(ValueError, match="shard index"):
+        Campaign(str(tmp_path / "w9.jsonl")).measure_shard(
+            regions, modes, index=3, count=3)
+
+
+# ---------------------------------------------------------------------------
+# store-backed DECAN + the compile-once noise arm of a DecanTarget
+# ---------------------------------------------------------------------------
+
+def _counting_decan(name="dec"):
+    traces = {"n": 0}
+    X = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+
+    def kernel(fp, ls, noise=None, k=0):
+        def fn(x, *nc):
+            traces["n"] += 1
+            out = jnp.float32(0)
+            if fp:
+                out = out + jnp.sum(jnp.tanh(x) * 0.5)
+            if ls:
+                out = out + jnp.sum(x[::4])
+            if noise is not None:
+                c = jax.lax.fori_loop(
+                    0, 8, lambda i, c: noise.emit(c, k, i), nc[0])
+                return out, noise.finalize(c)
+            return out
+        return jax.jit(fn)
+
+    target = DecanTarget(name, kernel, lambda: (X,),
+                         build_noisy=lambda noise, k:
+                             kernel(True, True, noise, k))
+    return target, traces
+
+
+def test_run_decan_replays_from_store(tmp_path):
+    target, _ = _counting_decan()
+    c1 = Campaign(str(tmp_path / "d.jsonl"),
+                  Controller(reps=2, verify_payload=False))
+    r1 = c1.run_decan(target)
+    assert c1.stats.measured == 3 and c1.stats.cached == 0
+
+    target2, traces2 = _counting_decan()
+    c2 = Campaign(str(tmp_path / "d.jsonl"),
+                  Controller(reps=2, verify_payload=False))
+    r2 = c2.run_decan(target2)
+    assert c2.stats.measured == 0 and c2.stats.cached == 3
+    assert traces2["n"] == 0                       # replay never compiles
+    assert r2 == r1                                # byte-identical timings
+
+    # different settings supersede instead of replaying
+    target3, _ = _counting_decan()
+    c3 = Campaign(str(tmp_path / "d.jsonl"),
+                  Controller(reps=3, verify_payload=False))
+    c3.run_decan(target3)
+    assert c3.stats.measured == 3
+
+
+def test_decan_region_noise_arm_compiles_at_most_two(tmp_path):
+    """Acceptance (table3 pattern): the noise arm of a DecanTarget sweeps a
+    whole (scenario, mode) grid point on ≤2 executables — including the
+    sensitivity probe — instead of one per k."""
+    target, traces = _counting_decan("dec_rt")
+    region = target.region()
+    camp = Campaign(str(tmp_path / "d.jsonl"),
+                    Controller(reps=2, verify_payload=False))
+    res = camp.sweep_mode(region, "fp_add")
+    assert traces["n"] <= 2, f"{traces['n']} executables for one sweep"
+    assert len(res.curve.ks) >= 3
+
+    # second mode: its own runtime-k executable, still ≤2 more
+    camp.sweep_mode(region, "l1_ld")
+    assert traces["n"] <= 4
+
+
+def test_decan_region_requires_build_noisy():
+    target = DecanTarget("bare", lambda fp, ls: (lambda: 0), lambda: ())
+    with pytest.raises(ValueError, match="build_noisy"):
+        target.region()
+
+
+def test_campaign_sweep_with_sensitivity_compiles_at_most_two():
+    """The memoized runtime-k callable: sensitivity probe + sweep + drift
+    check share ONE executable (payload verification adds the second)."""
+    region, traces = _make_counting_region("memo_region")
+    camp = Campaign(CampaignStore(os.devnull), Controller(reps=2))
+    camp.sweep_mode(region, "fp_add32")
+    assert traces["n"] <= 2, f"{traces['n']} executables incl. sensitivity"
+
+
+def test_final_record_missing_newline_is_healed(tmp_path):
+    """A torn append that flushed the whole record but not its '\\n' must
+    not glue the next append onto the same line: the loader heals the
+    terminator and keeps the record (zero points lost)."""
+    path = str(tmp_path / "s.jsonl")
+    st = CampaignStore(path)
+    st.append({"kind": "point", "region": "r", "mode": "m", "k": 0, "t": 0.5})
+    st.append({"kind": "point", "region": "r", "mode": "m", "k": 2, "t": 0.6})
+    st.close()
+    with open(path, "r+b") as f:        # strip ONLY the final newline
+        f.truncate(os.path.getsize(path) - 1)
+
+    st2 = CampaignStore(path)
+    assert st2.stored_ts("r", "m") == {0: 0.5, 2: 0.6}   # nothing lost
+    st2.append({"kind": "point", "region": "r", "mode": "m", "k": 4, "t": 0.7})
+    st2.close()
+    st3 = CampaignStore(path)            # and the file stayed line-per-record
+    st3.close()
+    assert st3.stored_ts("r", "m") == {0: 0.5, 2: 0.6, 4: 0.7}
+
+
+def test_readonly_store_neither_creates_nor_heals(tmp_path):
+    missing = str(tmp_path / "nope.jsonl")
+    with pytest.raises(FileNotFoundError):
+        CampaignStore(missing, readonly=True)
+    assert not os.path.exists(missing)   # inspection must not create stores
+
+    path = str(tmp_path / "s.jsonl")
+    st = CampaignStore(path)
+    st.append({"kind": "point", "region": "r", "mode": "m", "k": 0, "t": 0.5})
+    st.close()
+    with open(path, "ab") as f:          # torn tail
+        f.write(b'{"kind": "poi')
+    before = open(path, "rb").read()
+    ro = CampaignStore(path, readonly=True)
+    ro.close()
+    assert ro.stored_ts("r", "m") == {0: 0.5}
+    assert open(path, "rb").read() == before     # readonly: file untouched
+    with pytest.raises(RuntimeError, match="readonly"):
+        ro.append({"kind": "sens", "region": "r", "mode": "m", "value": 1.0})
+    CampaignStore(path).close()                  # writable open heals it
+    assert open(path, "rb").read() != before
+
+
+def test_rt_cache_is_per_target_not_per_name():
+    """Two same-named targets on one Controller must not share a runtime-k
+    executable: the cache keys on target identity."""
+    ctl = Controller(reps=2, verify_payload=False)
+    region_a, traces_a = _make_counting_region("same_name")
+    region_b, traces_b = _make_counting_region("same_name")
+    fn_a = ctl._rt_fn(region_a, "fp_add32")
+    fn_b = ctl._rt_fn(region_b, "fp_add32")
+    assert fn_a is ctl._rt_fn(region_a, "fp_add32")   # memoized per target
+    assert fn_a is not fn_b                           # not shared by name
+    fn_b(jnp.int32(1), *region_b.args_for_rt("fp_add32"))
+    assert traces_b["n"] == 1 and traces_a["n"] == 0  # b's fn runs b's step

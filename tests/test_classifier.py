@@ -1,0 +1,139 @@
+"""Classifier decision table (paper §4.2 / Table 3), pinned label by label.
+
+The campaign/golden regression suite locks curve ASSEMBLY; this module locks
+the DECISION step: every label reachable from a synthetic signature, exact
+behaviour at the LOW/HIGH thresholds, confidence always a probability, and
+the loop-level and graph-level mode vocabularies hitting the same labels.
+"""
+import pytest
+
+from repro.core import classify, cross_check_with_decan
+from repro.core.classifier import HIGH, LOW
+
+# Signature -> expected label, in BOTH vocabularies. Values chosen from the
+# paper's rows (HACCmk 0/13/-, STREAM, lat_mem_rd) scaled to the thresholds.
+LABEL_CASES = [
+    # compute: fp degrades immediately, L1 noise absorbed (HACCmk)
+    ("compute", {"fp_add": 0.0, "l1_ld": 13.0},
+                {"fp_add32": 0.0, "vmem_ld": 13.0}),
+    # bandwidth: stream noise not absorbed while fp (and some l1) are
+    ("bandwidth", {"fp_add": 30.0, "l1_ld": 8.0, "mem_ld": 1.0},
+                  {"fp_add32": 30.0, "vmem_ld": 8.0, "hbm_stream": 1.0}),
+    # latency: substantial memory noise absorbed alongside large fp noise
+    ("latency", {"fp_add": 40.0, "mem_ld": 10.0},
+                {"fp_add32": 40.0, "hbm_stream": 10.0}),
+    # overlap: nothing absorbed anywhere (Table 3 case 3 / case 4 ambiguity)
+    ("overlap", {"fp_add": 1.0, "l1_ld": 2.0, "mem_ld": 0.0},
+                {"fp_add32": 1.0, "vmem_ld": 2.0, "hbm_stream": 0.0}),
+    # ici: collective noise collapses while core resources have slack
+    ("ici", {"ici_allreduce": 1.0, "fp_add": 15.0, "l1_ld": 12.0},
+            {"ici_allreduce": 1.0, "fp_add32": 15.0, "vmem_ld": 12.0}),
+    # mixed: moderate absorption everywhere (Table 3 case 4)
+    ("mixed", {"fp_add": 8.0, "l1_ld": 8.0},
+              {"fp_add32": 8.0, "vmem_ld": 8.0}),
+]
+
+
+@pytest.mark.parametrize(
+    "label,loop_sig,graph_sig",
+    LABEL_CASES, ids=[c[0] for c in LABEL_CASES])
+def test_label_reachable_in_both_vocabularies(label, loop_sig, graph_sig):
+    assert classify(loop_sig).label == label
+    assert classify(graph_sig).label == label
+
+
+# ---------------------------------------------------------------------------
+# Exact behaviour AT the thresholds (<= LOW is saturated, >= HIGH is clear)
+# ---------------------------------------------------------------------------
+
+def test_fp_exactly_low_is_still_compute():
+    # fp == LOW counts as saturated (<=), so the compute signature holds
+    assert classify({"fp_add": LOW, "l1_ld": HIGH}).label == "compute"
+
+
+def test_fp_just_above_low_is_not_compute():
+    r = classify({"fp_add": LOW + 0.1, "l1_ld": HIGH})
+    assert r.label != "compute"
+
+
+def test_mem_exactly_low_with_fp_exactly_high_is_bandwidth():
+    # mem == LOW saturated AND fp == HIGH clear: the STREAM signature
+    sig = {"fp_add": HIGH, "l1_ld": LOW + 1.0, "mem_ld": LOW}
+    assert classify(sig).label == "bandwidth"
+
+
+def test_fp_below_high_breaks_the_bandwidth_signature():
+    sig = {"fp_add": HIGH - 0.1, "l1_ld": LOW + 1.0, "mem_ld": LOW}
+    assert classify(sig).label != "bandwidth"
+
+
+def test_mem_just_above_low_flips_bandwidth_to_latency():
+    base = {"fp_add": HIGH, "l1_ld": LOW + 1.0}
+    assert classify({**base, "mem_ld": LOW}).label == "bandwidth"
+    assert classify({**base, "mem_ld": LOW + 0.1}).label == "latency"
+
+
+def test_everything_exactly_low_is_overlap():
+    sig = {"fp_add": LOW, "l1_ld": LOW, "mem_ld": LOW}
+    assert classify(sig).label == "overlap"
+
+
+def test_ici_threshold_on_core_slack():
+    # ici saturated; core modes need >= HIGH/2 slack for the ici verdict
+    ok = {"ici_allreduce": LOW, "fp_add": HIGH / 2, "l1_ld": HIGH / 2}
+    assert classify(ok).label == "ici"
+    starved = {"ici_allreduce": LOW, "fp_add": HIGH / 2 - 0.1,
+               "l1_ld": HIGH / 2}
+    assert classify(starved).label != "ici"
+
+
+def test_custom_thresholds_are_respected():
+    # the analytic probe classifies absorbed-work FRACTIONS with scaled
+    # thresholds — the decision logic must follow the arguments, not LOW/HIGH
+    sig = {"fp_add": 5.0, "l1_ld": 90.0}
+    assert classify(sig, low=10.0, high=60.0).label == "compute"
+    assert classify(sig).label != "compute"   # 5.0 > default LOW
+
+
+# ---------------------------------------------------------------------------
+# Confidence is a probability, on every reachable branch
+# ---------------------------------------------------------------------------
+
+CONF_CASES = [c[1] for c in LABEL_CASES] + [c[2] for c in LABEL_CASES] + [
+    {"fp_add": 0.0, "l1_ld": 10_000.0},          # huge separation: clamps to 1
+    {"fp_add": 0.0, "mem_ld": HIGH},             # compute via the mem clause
+    {"l1_ld": 0.0, "fp_add": LOW + 1.0},         # l1/LSU branch (Fig. 4a)
+    {"ici_allreduce": 0.0},                      # ici with no core modes
+    {"chase": 12.0},                             # chase-only: falls to mixed
+    {},                                          # empty signature
+]
+
+
+@pytest.mark.parametrize("sig", CONF_CASES)
+def test_confidence_always_in_unit_interval(sig):
+    r = classify(sig)
+    assert 0.0 <= r.confidence <= 1.0
+    assert r.label in ("compute", "bandwidth", "latency", "ici", "overlap",
+                       "l1", "mixed")
+    assert r.absorptions == dict(sig)
+
+
+# ---------------------------------------------------------------------------
+# DECAN cross-check resolves the overlap ambiguity (Fig. 6)
+# ---------------------------------------------------------------------------
+
+def test_cross_check_confirms_genuine_overlap():
+    r = classify({"fp_add": 1.0, "l1_ld": 1.0})
+    out = cross_check_with_decan(r, sat_fp=0.95, sat_ls=0.92)
+    assert out.label == "overlap" and out.decan_hint is not None
+
+
+def test_cross_check_rules_out_overlap_to_frontend():
+    r = classify({"fp_add": 1.0, "l1_ld": 1.0})
+    out = cross_check_with_decan(r, sat_fp=0.81, sat_ls=0.12)
+    assert out.label == "frontend" and "rules out" in out.decan_hint
+
+
+def test_cross_check_leaves_other_labels_alone():
+    r = classify({"fp_add": 0.0, "l1_ld": 13.0})
+    assert cross_check_with_decan(r, 0.5, 0.5).label == "compute"

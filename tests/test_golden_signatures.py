@@ -1,0 +1,74 @@
+"""Golden-signature regression suite.
+
+``tests/golden/signatures.jsonl`` is a checked-in campaign store of tiny
+fixed-seed synthetic absorption signatures (one region per paper bottleneck
+class); ``tests/golden/expected.json`` holds the fit fields and
+BottleneckReport each must replay to. Replaying the store through the
+Campaign engine exercises the full curve-assembly path — stored raw points,
+recorded drift correction, hinge fit, threshold cross-check, classification
+— so a refactor that changes any of those FAILS HERE instead of silently
+reclassifying the paper's decision table.
+
+Intentional changes: regenerate with
+``PYTHONPATH=src python tests/golden/regen.py`` and say why in the commit.
+"""
+import json
+import os
+import shutil
+
+import pytest
+
+from repro.core import Campaign, Controller, RegionTarget
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+with open(os.path.join(GOLDEN_DIR, "expected.json")) as f:
+    EXPECTED = json.load(f)
+
+
+def _fail_build(*a, **k):
+    raise AssertionError("golden replay must never build or measure")
+
+
+@pytest.fixture()
+def golden_store(tmp_path):
+    # copy: replaying opens the store for append, and the checked-in
+    # fixture must never be touched by a test run
+    dst = str(tmp_path / "signatures.jsonl")
+    shutil.copy(os.path.join(GOLDEN_DIR, "signatures.jsonl"), dst)
+    return dst
+
+
+@pytest.mark.parametrize("region", sorted(EXPECTED), ids=sorted(EXPECTED))
+def test_golden_signature_replays_identically(golden_store, region):
+    exp = EXPECTED[region]
+    camp = Campaign(golden_store, Controller(reps=2, verify_payload=False))
+    target = RegionTarget(name=region, build=_fail_build,
+                          args_for=_fail_build)
+    rep = camp.characterize(target, sorted(exp["modes"]))
+
+    assert camp.stats.measured == 0
+    assert rep.bottleneck.label == exp["label"]
+    assert rep.bottleneck.confidence == pytest.approx(exp["confidence"],
+                                                      rel=1e-6, abs=1e-9)
+    assert rep.body_size == exp["body_size"]
+    for mode, fields in exp["modes"].items():
+        fit = rep.results[mode].fit
+        for name, want in fields.items():
+            got = getattr(fit, name)
+            assert got == pytest.approx(want, rel=1e-6, abs=1e-12), (
+                f"{region}/{mode}.{name}: replayed {got!r}, golden {want!r} "
+                "— curve assembly / fit / classifier changed; if intended, "
+                "regenerate via tests/golden/regen.py")
+
+
+def test_golden_covers_every_decision_label():
+    labels = {e["label"] for e in EXPECTED.values()}
+    assert labels == {"compute", "bandwidth", "latency", "ici", "overlap",
+                      "mixed"}
+
+
+def test_golden_mixes_both_mode_vocabularies():
+    modes = {m for e in EXPECTED.values() for m in e["modes"]}
+    assert modes & {"fp_add", "l1_ld", "mem_ld"}          # loop-level
+    assert modes & {"fp_add32", "vmem_ld", "hbm_stream"}  # graph-level

@@ -58,7 +58,9 @@ def test_probe_end_to_end_measured():
 
 
 def test_analytic_probe_from_record(tmp_path):
-    """launch.probe --analytic consumes a dry-run record."""
+    """launch.probe --analytic consumes a dry-run record, persists pred
+    records to its campaign store, and replays them on a re-run (the
+    --expect-no-measure contract)."""
     from repro.launch.probe import analytic_probe
 
     rec = {"status": "ok", "mesh": "16x16",
@@ -68,8 +70,18 @@ def test_analytic_probe_from_record(tmp_path):
     d.mkdir()
     with open(d / "gemma_2b_train_4k.json", "w") as f:
         json.dump(rec, f)
+    store = str(tmp_path / "pred.jsonl")
     analytic_probe("gemma-2b", "train_4k", str(d),
-                   ["fp_add32", "hbm_stream"], tol=0.05)
+                   ["fp_add32", "hbm_stream"], tol=0.05, store=store)
+    # second run must be pure replay — expect_no_measure raises otherwise
+    analytic_probe("gemma-2b", "train_4k", str(d),
+                   ["fp_add32", "hbm_stream"], tol=0.05, store=store,
+                   expect_no_measure=True)
+    # a tol change invalidates the stored predictions
+    with pytest.raises(SystemExit, match="expect-no-measure"):
+        analytic_probe("gemma-2b", "train_4k", str(d),
+                       ["fp_add32", "hbm_stream"], tol=0.02, store=store,
+                       expect_no_measure=True)
 
 
 def test_benchmark_analytic_suite():
