@@ -6,15 +6,52 @@ paper's finding: on the large matrix, performance only decreases with q while
 absorption first DROPS (bandwidth regime tightening) then RISES again
 (latency regime: stalls reappear as dependency slack) — a regime transition
 invisible to plain performance numbers.
+
+``--pallas``: additionally run the q-sweep on the REAL ELL SPMV Pallas
+kernel (interpret mode off-TPU) through the campaign spine, and report the
+compile-once vs trace-per-k sweep cost (executables built + wall-clock).
 """
 from __future__ import annotations
 
-from benchmarks.common import banner, characterize, save
+import argparse
+
+from benchmarks.common import banner, characterize, pallas_sweep_ab, save
 from repro.bench.kernels import spmxv_region
 from repro.core import Controller, measure
 
 
-def run(quick: bool = True) -> dict:
+def run_pallas(quick: bool = True) -> dict:
+    """The q-study on the real Pallas ELL SPMV kernel."""
+    from repro.kernels.region import pallas_region
+
+    banner("Fig 7 (pallas) — ELL SPMV kernel: performance vs absorption")
+    qs = (0.0, 0.5, 1.0) if quick else (0.0, 0.25, 0.5, 0.75, 1.0)
+    n = 512 if quick else 2048
+    nnz = 16
+    ctl = Controller(reps=2 if quick else 3)
+    rows = []
+    for q in qs:
+        region = pallas_region("spmxv", backend="interpret", n=n,
+                               nnz_per_row=nnz, q=q)
+        t0 = measure(region.build("", 0), region.args_for("", 0),
+                     reps=2 if quick else 3)
+        gflops = 2.0 * n * nnz / t0 / 1e9
+        rep = characterize(ctl, region, ("fp", "vmem"))
+        rows.append({"q": q, "region": region.name, "gflops": gflops,
+                     "abs_fp": rep.results["fp"].fit.k1,
+                     "abs_vmem": rep.results["vmem"].fit.k1,
+                     "label": rep.bottleneck.label})
+        r = rows[-1]
+        print(f"  pallas q={q:4.2f}  {gflops:6.3f} GFLOP/s  "
+              f"Abs_FP={r['abs_fp']:6.1f} Abs_VMEM={r['abs_vmem']:6.1f} "
+              f"-> {r['label']}")
+    ks = (0, 1, 2, 4, 8, 16) if quick else (0, 1, 2, 4, 8, 16, 32, 64)
+    ab = pallas_sweep_ab("spmxv", "fp", ks, reps=2 if quick else 3,
+                         n=n, nnz_per_row=nnz)
+    return {"rows": rows, "sweep_cost": ab}
+
+
+def run(quick: bool = True, pallas: bool = False) -> dict:
     banner("Fig 7/8 — SPMXV: performance vs absorption across q")
     qs = (0.0, 0.25, 0.5, 1.0) if quick else (0.0, 0.1, 0.25, 0.5, 0.75, 1.0)
     sizes = {"small": 1 << 17, "large": 1 << 21}
@@ -50,9 +87,15 @@ def run(quick: bool = True) -> dict:
           f"absorption non-monotonic (regime transition): {non_monotonic}")
     out["findings"] = {"perf_monotonic": perf_monotonic,
                        "absorption_non_monotonic": non_monotonic}
+    if pallas:
+        out["pallas"] = run_pallas(quick)
     save("fig7_spmxv", out)
     return out
 
 
 if __name__ == "__main__":
-    run(quick=True)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--pallas", action="store_true")
+    a = ap.parse_args()
+    run(quick=not a.full, pallas=a.pallas)

@@ -30,6 +30,10 @@ def main() -> None:
                     help="JSONL store directory for resumable sweeps")
     ap.add_argument("--no-campaign", action="store_true",
                     help="measure every point afresh (no persistence)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="also run fig4/fig7 on the real Pallas kernels "
+                         "(interpret mode off-TPU) and report the "
+                         "compile-once vs trace-per-k sweep cost")
     args = ap.parse_args()
     if args.quick and args.full:
         ap.error("--quick and --full are mutually exclusive")
@@ -48,12 +52,14 @@ def main() -> None:
                             table4_memsys)
 
     suite = {
-        "fig4": fig4_matmul.run,
+        "fig4": lambda quick: fig4_matmul.run(quick=quick,
+                                              pallas=args.pallas),
         "fig5": fig5_hwchar.run,
         "table1": table1_systems.run,
         "table3": table3_decan.run,
         "fig6": fig6_overlap.run,
-        "fig7": fig7_spmxv.run,
+        "fig7": lambda quick: fig7_spmxv.run(quick=quick,
+                                             pallas=args.pallas),
         "table4": table4_memsys.run,
     }
     only = {s.strip() for s in args.only.split(",") if s.strip()}

@@ -130,3 +130,25 @@ def mesh_axis_sizes(mesh) -> dict[str, int]:
     if hasattr(mesh, "axis_sizes"):
         return dict(zip(mesh.axis_names, mesh.axis_sizes))
     return dict(mesh.shape.items())
+
+
+def prefetch_scalar_grid_spec(*, num_scalar_prefetch: int, grid,
+                              in_specs, out_specs, scratch_shapes=()):
+    """A Pallas grid spec whose first ``num_scalar_prefetch`` operands are
+    scalar-prefetch refs (SMEM-resident before the kernel body runs) — the
+    delivery channel for the runtime-k noise quantity.
+
+    Feature-detects the classic ``pltpu.PrefetchScalarGridSpec``; newer JAX
+    folds scalar prefetch into ``pl.GridSpec(num_scalar_prefetch=...)``.
+    """
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "PrefetchScalarGridSpec", None)
+    if cls is not None:
+        return cls(num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+                   in_specs=in_specs, out_specs=out_specs,
+                   scratch_shapes=list(scratch_shapes))
+    return pl.GridSpec(num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+                       in_specs=in_specs, out_specs=out_specs,
+                       scratch_shapes=list(scratch_shapes))

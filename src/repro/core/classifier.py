@@ -53,13 +53,14 @@ def classify(absorptions: Mapping[str, float], *, low: float = LOW,
              high: float = HIGH) -> BottleneckReport:
     """Map {mode: absorption} to a bottleneck class.
 
-    Mode names accept both loop-level (fp_add/l1_ld/mem_ld/chase) and
-    graph-level (fp_add32/mxu_fma128/vmem_ld/hbm_stream/hbm_latency/ici_*)
-    vocabularies, plus the paper aliases.
+    Mode names accept loop-level (fp_add/l1_ld/mem_ld/chase), graph-level
+    (fp_add32/mxu_fma128/vmem_ld/hbm_stream/hbm_latency/ici_*) and Pallas
+    kernel-level (fp/mxu/vmem — repro.kernels.noise_slots) vocabularies,
+    plus the paper aliases.
     """
     fp = _get(absorptions, "fp_add", "fp_add32", "fp_fma", "mxu_fma128",
-              "fp_add64")
-    l1 = _get(absorptions, "l1_ld", "vmem_ld", "l1_ld64")
+              "fp_add64", "fp", "mxu")
+    l1 = _get(absorptions, "l1_ld", "vmem_ld", "l1_ld64", "vmem")
     mem = _get(absorptions, "mem_ld", "hbm_stream", "memory_ld64")
     chase = _get(absorptions, "chase", "hbm_latency", "memory_chase")
     icis = {m: a for m, a in absorptions.items() if m.startswith("ici")}

@@ -45,6 +45,11 @@ class RegionTarget:
     operand (or None when the mode doesn't support it); the controller then
     sweeps k without retracing. Regions without ``build_rt`` use the
     trace-per-k fallback.
+
+    ``payload_check(mode_name, k)`` (optional) overrides the default
+    HLO-scope-counting payload verification with a region-specific static
+    check — Pallas regions use it to compare the noise accumulator against
+    its exact oracle (scope metadata does not survive Pallas lowering).
     """
     name: str
     build: Callable[[str, int], Callable]
@@ -53,6 +58,7 @@ class RegionTarget:
     payload_target: dict[str, str] = dataclasses.field(default_factory=dict)
     build_rt: Optional[Callable[[str], Optional[Callable]]] = None
     args_for_rt: Optional[Callable[[str], tuple]] = None
+    payload_check: Optional[Callable[[str, int], object]] = None
 
 
 @dataclasses.dataclass
@@ -200,8 +206,17 @@ class Controller:
                             ks: Sequence[int]):
         """Static payload check (§2.3) on a trace-per-k executable — the HLO
         of the runtime-k path holds ONE pattern in a loop body, so surviving
-        ops must be counted on a static unrolled trace."""
+        ops must be counted on a static unrolled trace. Regions with a
+        ``payload_check`` override (Pallas kernels) verify against their own
+        oracle instead."""
         k_chk = next((k for k in reversed(list(ks)) if k), 8)
+        if target.payload_check is not None:
+            try:
+                return target.payload_check(mode, k_chk)
+            except Exception:
+                log.warning("payload check failed for %s/%s k=%d",
+                            target.name, mode, k_chk, exc_info=True)
+                return None
         fn = target.build(mode, k_chk)
         if not hasattr(fn, "lower"):
             # expected: region builds a plain (non-jitted) callable with no
@@ -250,7 +265,10 @@ def _default_target(mode: str) -> str:
         return modes[mode].target
     return {"fp_add32": "compute", "mxu_fma128": "compute",
             "vmem_ld": "vmem", "hbm_stream": "memory",
-            "hbm_latency": "latency"}.get(mode, "compute")
+            "hbm_latency": "latency",
+            # Pallas kernel-level vocabulary (repro.kernels.noise_slots)
+            "fp": "compute", "mxu": "compute", "vmem": "vmem",
+            }.get(mode, "compute")
 
 
 def loop_region(name: str, make_fn: Callable[[Optional[LoopNoise], int], Callable],

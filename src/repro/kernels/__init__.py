@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer: instruction-granularity noise injection (the TPU
+analogue of the paper's inline-asm patterns).
+
+Each kernel package pairs a Pallas implementation (``kernel.py``, with a
+static-k and a runtime-k entry point — see ``noise_slots`` for the protocol)
+with a jitted public wrapper (``ops.py``) and a pure-jnp oracle (``ref.py``).
+``region.pallas_region`` adapts any of them to the Controller/Campaign spine.
+"""
+from repro.kernels.noise_slots import (  # noqa: F401
+    K_MAX,
+    MODES,
+    emit_noise,
+    emit_noise_rt,
+)
+from repro.kernels.region import KERNEL_MODES, pallas_region  # noqa: F401

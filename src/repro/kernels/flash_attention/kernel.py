@@ -9,6 +9,11 @@ kernels — scalar-per-row state is stored broadcast along lanes).
 Causal skip: kv blocks entirely above the diagonal are skipped (pl.when), so
 compiled FLOPs stay ~S²/2 — visible in the roofline accounting. Sliding
 window additionally skips blocks entirely below the window.
+
+``flash_attention_pallas_rt`` is the compile-once twin: the noise quantity is
+a scalar-prefetch int32 operand and patterns come from the bounded runtime-k
+loop (noise_slots.emit_noise_rt) — one executable per (mode,) serves the
+whole k-sweep, bitwise identical to the static path.
 """
 from __future__ import annotations
 
@@ -20,14 +25,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
 from repro.kernels import noise_slots as ns
 
 NEG_INF = -1e30
 
 
-def _fa_kernel(q_ref, k_ref, v_ref, noise_ref, o_ref, nacc_ref,
-               m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
-               window: int, bq: int, bk: int, mode: str, k_noise: int):
+def _fa_body(q_ref, k_ref, v_ref, noise_ref, o_ref, nacc_ref,
+             m_ref, l_ref, acc_ref, emit, *, scale: float, causal: bool,
+             window: int, bq: int, bk: int):
     bh, qi, ki = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -76,8 +82,7 @@ def _fa_kernel(q_ref, k_ref, v_ref, noise_ref, o_ref, nacc_ref,
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
-        ns.emit_noise(mode, k_noise, nacc_ref, noise_ref, src_ref=None,
-                      step=bh * 131 + qi * 17 + ki)
+        emit(nacc_ref, noise_ref, bh * 131 + qi * 17 + ki)
 
     @pl.when(ki == nk - 1)
     def _():
@@ -86,11 +91,27 @@ def _fa_kernel(q_ref, k_ref, v_ref, noise_ref, o_ref, nacc_ref,
         o_ref[0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
 
 
-def flash_attention_pallas(q, k, v, noise, *, causal: bool = True,
-                           window: int = 0, bq: int = 128, bk: int = 128,
-                           mode: str = "none", k_noise: int = 0,
-                           interpret: bool = False):
-    """q (B,H,Sq,hd); k,v (B,KH,Sk,hd) -> (out (B,H,Sq,hd), nacc (8,128))."""
+def _fa_kernel(q_ref, k_ref, v_ref, noise_ref, o_ref, nacc_ref,
+               m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+               window: int, bq: int, bk: int, mode: str, k_noise: int):
+    _fa_body(q_ref, k_ref, v_ref, noise_ref, o_ref, nacc_ref,
+             m_ref, l_ref, acc_ref,
+             lambda nacc, nz, step: ns.emit_noise(
+                 mode, k_noise, nacc, nz, src_ref=None, step=step),
+             scale=scale, causal=causal, window=window, bq=bq, bk=bk)
+
+
+def _fa_kernel_rt(kq_ref, q_ref, k_ref, v_ref, noise_ref, o_ref, nacc_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+                  window: int, bq: int, bk: int, mode: str):
+    _fa_body(q_ref, k_ref, v_ref, noise_ref, o_ref, nacc_ref,
+             m_ref, l_ref, acc_ref,
+             lambda nacc, nz, step: ns.emit_noise_rt(
+                 mode, kq_ref[0], nacc, nz, src_ref=None, step=step),
+             scale=scale, causal=causal, window=window, bq=bq, bk=bk)
+
+
+def _fa_setup(q, k, v, bq, bk):
     B, H, Sq, hd = q.shape
     _, KH, Sk, _ = k.shape
     assert H % KH == 0, (H, KH)
@@ -105,10 +126,41 @@ def flash_attention_pallas(q, k, v, noise, *, causal: bool = True,
     kf = k.reshape(B * KH, Sk, hd)
     vf = v.reshape(B * KH, Sk, hd)
 
-    def kv_idx(bh, qi, ki):
+    def kv_idx(bh, qi, ki, *_):
         b = bh // H
         h = bh % H
         return (b * KH + h // G, ki, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, bq, hd), lambda bh, qi, ki, *_: (bh, qi, 0)),
+        pl.BlockSpec((1, bk, hd), kv_idx),
+        pl.BlockSpec((1, bk, hd), kv_idx),
+        ns.noise_in_spec(3),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, bq, hd), lambda bh, qi, ki, *_: (bh, qi, 0)),
+        ns.noise_out_spec(3),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        ns.noise_out_shape(),
+    ]
+    scratch = [
+        pltpu.VMEM((bq, 128), jnp.float32),   # running max
+        pltpu.VMEM((bq, 128), jnp.float32),   # running sum
+        pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+    ]
+    return (B, H, Sq, hd, bq, bk, grid, scale, (qf, kf, vf),
+            in_specs, out_specs, out_shape, scratch)
+
+
+def flash_attention_pallas(q, k, v, noise, *, causal: bool = True,
+                           window: int = 0, bq: int = 128, bk: int = 128,
+                           mode: str = "none", k_noise: int = 0,
+                           interpret: bool = False):
+    """q (B,H,Sq,hd); k,v (B,KH,Sk,hd) -> (out (B,H,Sq,hd), nacc (8,128))."""
+    (B, H, Sq, hd, bq, bk, grid, scale, flat, in_specs, out_specs,
+     out_shape, scratch) = _fa_setup(q, k, v, bq, bk)
 
     kernel = functools.partial(_fa_kernel, scale=scale, causal=causal,
                                window=window, bq=bq, bk=bk, mode=mode,
@@ -116,25 +168,35 @@ def flash_attention_pallas(q, k, v, noise, *, causal: bool = True,
     out, nacc = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, bk, hd), kv_idx),
-            pl.BlockSpec((1, bk, hd), kv_idx),
-            ns.noise_in_spec(3),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
-            ns.noise_out_spec(3),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
-            ns.noise_out_shape(),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((bq, 128), jnp.float32),   # running max
-            pltpu.VMEM((bq, 128), jnp.float32),   # running sum
-            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(qf, kf, vf, noise)
+    )(*flat, noise)
+    return out.reshape(B, H, Sq, hd), nacc
+
+
+def flash_attention_pallas_rt(kq, q, k, v, noise, *, causal: bool = True,
+                              window: int = 0, bq: int = 128, bk: int = 128,
+                              mode: str = "fp", interpret: bool = False):
+    """Runtime-k twin of ``flash_attention_pallas`` (``kq``: the traced
+    noise quantity; named to avoid clashing with the key tensor ``k``)."""
+    (B, H, Sq, hd, bq, bk, grid, scale, flat, in_specs, out_specs,
+     out_shape, scratch) = _fa_setup(q, k, v, bq, bk)
+
+    grid_spec = compat.prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    out, nacc = pl.pallas_call(
+        functools.partial(_fa_kernel_rt, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ns.k_operand(kq), *flat, noise)
     return out.reshape(B, H, Sq, hd), nacc

@@ -6,7 +6,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.kernel import (flash_attention_pallas,
+                                                  flash_attention_pallas_rt)
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.noisy_matmul.ops import default_noise_operand
 
@@ -29,3 +30,20 @@ def flash_attention(q, k, v, noise=None, *, causal: bool = True,
                                   window=window, bq=bq, bk=bk, mode=mode,
                                   k_noise=k_noise,
                                   interpret=(backend == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "mode",
+                                   "backend"))
+def flash_attention_rt(kq, q, k, v, noise=None, *, causal: bool = True,
+                       window: int = 0, bq: int = 128, bk: int = 128,
+                       mode: str = "fp", backend: str = "auto"):
+    """Runtime-k blocked attention: ``kq`` is a traced int32 noise quantity
+    (compile-once sweeps), pattern-identical to
+    ``flash_attention(..., k_noise=kq)`` for kq ≤ noise_slots.K_MAX."""
+    if noise is None:
+        noise = default_noise_operand(jnp.float32)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    return flash_attention_pallas_rt(kq, q, k, v, noise, causal=causal,
+                                     window=window, bq=bq, bk=bk, mode=mode,
+                                     interpret=(backend == "interpret"))

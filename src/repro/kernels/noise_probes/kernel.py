@@ -6,15 +6,19 @@ saturation model needs (core.analytic.pattern_deltas provides spec-sheet
 values; this kernel measures them). On CPU the kernel validates in interpret
 mode: the accumulated value is exactly predictable, proving each pattern
 executed exactly once (static payload check at the arithmetic level).
+
+``probe_pallas_rt`` is the compile-once twin: the noise quantity is a
+scalar-prefetch int32 operand (runtime-k protocol, see noise_slots) — the
+calibration sweep over k reuses ONE executable per mode.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import compat
 from repro.kernels import noise_slots as ns
 
 
@@ -23,6 +27,13 @@ def _probe_kernel(noise_ref, nacc_ref, *, mode: str, k_noise: int):
     ns.init_noise(nacc_ref, i == 0)
     ns.emit_noise(mode, k_noise, nacc_ref, noise_ref, src_ref=noise_ref,
                   step=i)
+
+
+def _probe_kernel_rt(k_ref, noise_ref, nacc_ref, *, mode: str):
+    i = pl.program_id(0)
+    ns.init_noise(nacc_ref, i == 0)
+    ns.emit_noise_rt(mode, k_ref[0], nacc_ref, noise_ref, src_ref=noise_ref,
+                     step=i)
 
 
 def probe_pallas(noise, *, mode: str, k_noise: int, n_steps: int,
@@ -36,3 +47,19 @@ def probe_pallas(noise, *, mode: str, k_noise: int, n_steps: int,
         out_shape=ns.noise_out_shape(),
         interpret=interpret,
     )(noise)
+
+
+def probe_pallas_rt(k, noise, *, mode: str, n_steps: int,
+                    interpret: bool = False):
+    grid_spec = compat.prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(n_steps,),
+        in_specs=[ns.noise_in_spec(1)],
+        out_specs=ns.noise_out_spec(1),
+    )
+    return pl.pallas_call(
+        functools.partial(_probe_kernel_rt, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=ns.noise_out_shape(),
+        interpret=interpret,
+    )(ns.k_operand(k), noise)

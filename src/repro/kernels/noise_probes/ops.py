@@ -5,7 +5,7 @@ from functools import partial
 
 import jax
 
-from repro.kernels.noise_probes.kernel import probe_pallas
+from repro.kernels.noise_probes.kernel import probe_pallas, probe_pallas_rt
 from repro.kernels.noise_probes.ref import probe_ref
 from repro.kernels.noisy_matmul.ops import default_noise_operand
 
@@ -21,3 +21,16 @@ def run_probe(noise=None, *, mode: str = "fp", k_noise: int = 1,
         return probe_ref(noise, mode=mode, k_noise=k_noise, n_steps=n_steps)
     return probe_pallas(noise, mode=mode, k_noise=k_noise, n_steps=n_steps,
                         interpret=(backend == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("mode", "n_steps", "backend"))
+def run_probe_rt(k, noise=None, *, mode: str = "fp", n_steps: int = 128,
+                 backend: str = "auto"):
+    """Runtime-k calibration probe: ``k`` is a traced int32 operand, so the
+    per-pattern-cost sweep reuses one executable per mode."""
+    if noise is None:
+        noise = default_noise_operand()
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    return probe_pallas_rt(k, noise, mode=mode, n_steps=n_steps,
+                           interpret=(backend == "interpret"))

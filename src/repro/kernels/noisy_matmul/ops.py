@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.noise_slots import NOISE_REF_SHAPE
-from repro.kernels.noisy_matmul.kernel import matmul_pallas
+from repro.kernels.noisy_matmul.kernel import matmul_pallas, matmul_pallas_rt
 from repro.kernels.noisy_matmul.ref import matmul_ref
 
 
@@ -36,3 +36,18 @@ def noisy_matmul(a, b, noise=None, *, mode: str = "none", k_noise: int = 0,
     return matmul_pallas(a, b, noise, mode=mode, k_noise=k_noise,
                          bm=bm, bn=bn, bk=bk,
                          interpret=(backend == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk", "backend"))
+def noisy_matmul_rt(k, a, b, noise=None, *, mode: str = "fp",
+                    bm: int = 256, bn: int = 256, bk: int = 256,
+                    backend: str = "auto"):
+    """Runtime-k matmul: ``k`` is a traced int32 operand (compile-once
+    sweeps). Pattern-for-pattern identical to ``noisy_matmul(..., k_noise=k)``
+    for k ≤ noise_slots.K_MAX."""
+    if noise is None:
+        noise = default_noise_operand(a.dtype)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    return matmul_pallas_rt(k, a, b, noise, mode=mode, bm=bm, bn=bn, bk=bk,
+                            interpret=(backend == "interpret"))

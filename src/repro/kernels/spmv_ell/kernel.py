@@ -14,6 +14,16 @@ study sizes (N ≤ ~1M f32 = 4 MiB... for larger N shard rows over the grid and
 x over a second grid axis; see ops.py). y written as (nb, br) so the lane dim
 stays 128-aligned. Vector gather lowering on TPU requires a recent Mosaic;
 correctness is validated in interpret mode on CPU (the container has no TPU).
+
+Noise: this kernel has no dedicated noise operand — fp noise derives its
+addend from a RUNTIME block of ``vals`` (first rows of the current block;
+``noise_slots._fp_c``). A compile-time-constant addend would let the
+compiler strength-reduce the k-iteration add chain to one ``nacc += k*c``,
+silently deleting the payload the sweep measures; the data-dependent addend
+keeps every add live and keeps the exact ``nacc`` oracle
+(``ref.fp_noise_ell_ref``). vmem noise re-reads the vals block at rotating
+offsets. ``spmv_ell_pallas_rt`` is the compile-once twin (runtime-k protocol,
+see noise_slots).
 """
 from __future__ import annotations
 
@@ -23,11 +33,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro import compat
 from repro.kernels import noise_slots as ns
 
 
-def _spmv_kernel(vals_ref, cols_ref, x_ref, y_ref, nacc_ref, *,
-                 mode: str, k_noise: int):
+def _spmv_body(vals_ref, cols_ref, x_ref, y_ref, nacc_ref, emit):
     i = pl.program_id(0)
     ns.init_noise(nacc_ref, i == 0)
 
@@ -37,43 +47,87 @@ def _spmv_kernel(vals_ref, cols_ref, x_ref, y_ref, nacc_ref, *,
     g = jnp.take(x, cols, axis=0).astype(jnp.float32)
     y_ref[0, ...] = jnp.sum(vals * g, axis=1).astype(y_ref.dtype)
 
-    # noise slot: vmem mode re-reads the vals block (this kernel has no
-    # dedicated noise operand — fp noise synthesizes its constant in VREGs).
-    if mode == "vmem" and k_noise:
-        ns.emit_noise("vmem", k_noise, nacc_ref, vals_ref, src_ref=vals_ref,
-                      step=i)
-    elif mode == "fp" and k_noise:
-        c = jnp.full((8, 128), 1e-6, jnp.float32)
-        for _ in range(k_noise):
-            nacc_ref[...] += c
+    # noise slot: both modes feed off the vals block (fp derives its addend
+    # from it, vmem re-reads it) — R_n ∩ R_s = ∅ still holds: nacc is a
+    # dedicated output, vals is only ever read.
+    emit(nacc_ref, vals_ref, i)
+
+
+def _spmv_kernel(vals_ref, cols_ref, x_ref, y_ref, nacc_ref, *,
+                 mode: str, k_noise: int):
+    _spmv_body(vals_ref, cols_ref, x_ref, y_ref, nacc_ref,
+               lambda nacc, vals, step: ns.emit_noise(
+                   mode, k_noise, nacc, None, src_ref=vals, step=step))
+
+
+def _spmv_kernel_rt(k_ref, vals_ref, cols_ref, x_ref, y_ref, nacc_ref, *,
+                    mode: str):
+    _spmv_body(vals_ref, cols_ref, x_ref, y_ref, nacc_ref,
+               lambda nacc, vals, step: ns.emit_noise_rt(
+                   mode, k_ref[0], nacc, None, src_ref=vals, step=step))
+
+
+def _spmv_shapes(vals, x, br):
+    R, L = vals.shape
+    br = min(br, R)
+    assert R % br == 0, (R, br)
+    assert br >= 8, (br, "noise patterns read 8-row groups of the block")
+    return R, L, br, R // br, x.shape[0]
+
+
+def _spmv_specs(br, L, N):
+    return (
+        [
+            pl.BlockSpec((br, L), lambda i, *_: (i, 0)),
+            pl.BlockSpec((br, L), lambda i, *_: (i, 0)),
+            pl.BlockSpec((1, N), lambda i, *_: (0, 0)),
+        ],
+        [
+            pl.BlockSpec((1, br), lambda i, *_: (i, 0)),
+            ns.noise_out_spec(1),
+        ],
+    )
 
 
 def spmv_ell_pallas(vals, cols, x, *, br: int = 128, mode: str = "none",
                     k_noise: int = 0, interpret: bool = False):
-    """vals,cols (R,L); x (N,) -> (y (R,), nacc)."""
-    R, L = vals.shape
-    br = min(br, R)
-    assert R % br == 0, (R, br)
-    nb = R // br
-    N = x.shape[0]
-
+    """vals,cols (R,L); x (N,) -> (y (R,), nacc). Static k."""
+    R, L, br, nb, N = _spmv_shapes(vals, x, br)
+    in_specs, out_specs = _spmv_specs(br, L, N)
     kernel = functools.partial(_spmv_kernel, mode=mode, k_noise=k_noise)
     y, nacc = pl.pallas_call(
         kernel,
         grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((br, L), lambda i: (i, 0)),
-            pl.BlockSpec((br, L), lambda i: (i, 0)),
-            pl.BlockSpec((1, N), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, br), lambda i: (i, 0)),
-            ns.noise_out_spec(1),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
         out_shape=[
             jax.ShapeDtypeStruct((nb, br), x.dtype),
             ns.noise_out_shape(),
         ],
         interpret=interpret,
     )(vals, cols, x[None, :])
+    return y.reshape(R), nacc
+
+
+def spmv_ell_pallas_rt(k, vals, cols, x, *, br: int = 128, mode: str = "fp",
+                       interpret: bool = False):
+    """Runtime-k twin of ``spmv_ell_pallas``: one executable per mode serves
+    the whole k-sweep (scalar-prefetch delivery)."""
+    R, L, br, nb, N = _spmv_shapes(vals, x, br)
+    in_specs, out_specs = _spmv_specs(br, L, N)
+    grid_spec = compat.prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    y, nacc = pl.pallas_call(
+        functools.partial(_spmv_kernel_rt, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, br), x.dtype),
+            ns.noise_out_shape(),
+        ],
+        interpret=interpret,
+    )(ns.k_operand(k), vals, cols, x[None, :])
     return y.reshape(R), nacc

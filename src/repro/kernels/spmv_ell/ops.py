@@ -6,7 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.spmv_ell.kernel import spmv_ell_pallas
+from repro.kernels.spmv_ell.kernel import spmv_ell_pallas, spmv_ell_pallas_rt
 from repro.kernels.spmv_ell.ref import spmv_ell_ref
 
 
@@ -20,3 +20,15 @@ def spmv_ell(vals, cols, x, *, br: int = 128, mode: str = "none",
         return spmv_ell_ref(vals, cols, x), jnp.zeros((8, 128), jnp.float32)
     return spmv_ell_pallas(vals, cols, x, br=br, mode=mode, k_noise=k_noise,
                            interpret=(backend == "interpret"))
+
+
+@partial(jax.jit, static_argnames=("br", "mode", "backend"))
+def spmv_ell_rt(k, vals, cols, x, *, br: int = 128, mode: str = "fp",
+                backend: str = "auto"):
+    """Runtime-k ELL SPMV: ``k`` is a traced int32 operand (compile-once
+    sweeps), pattern-identical to ``spmv_ell(..., k_noise=k)`` for
+    k ≤ noise_slots.K_MAX."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    return spmv_ell_pallas_rt(k, vals, cols, x, br=br, mode=mode,
+                              interpret=(backend == "interpret"))

@@ -13,6 +13,35 @@ def spmv_ell_ref(vals, cols, x):
                    axis=1).astype(x.dtype)
 
 
+def fp_noise_ell_ref(vals, k_noise: int, br: int = 128):
+    """Exact nacc oracle for spmv_ell mode='fp'.
+
+    The kernel has no noise operand; block i's addend is its first 8 rows'
+    first column broadcast across lanes (noise_slots._fp_c with a src_ref),
+    so nacc = k * sum_i broadcast(vals[i*br : i*br+8, 0]).
+    """
+    R = vals.shape[0]
+    br = min(br, R)
+    c = sum(vals[i * br:i * br + 8, 0:1].astype(jnp.float32)
+            for i in range(R // br))
+    return k_noise * jnp.broadcast_to(c, (8, 128))
+
+
+def vmem_noise_ell_ref(vals, k_noise: int, br: int = 128):
+    """Exact nacc oracle for spmv_ell mode='vmem': block i re-reads its own
+    (8, min(L,128)) row groups at rotating offsets (step index = i)."""
+    R, L = vals.shape
+    br = min(br, R)
+    w = min(L, 128)
+    acc = jnp.zeros((8, 128), jnp.float32)
+    for i in range(R // br):
+        blk = vals[i * br:(i + 1) * br].astype(jnp.float32)
+        for j in range(k_noise):
+            off = (i * 7 + j * 13) % max(br - 8, 1)
+            acc = acc.at[:, 0:w].add(blk[off:off + 8, 0:w])
+    return acc
+
+
 def make_band_ell(n: int, nnz_per_row: int, q: float, seed: int = 0,
                   dtype=np.float32):
     """Banded sparse matrix in ELL with the paper's swap-probability q.

@@ -1,5 +1,5 @@
 """Noise-injection bottleneck probe — the paper's tool applied to this
-framework's own train/serve steps.
+framework's own train/serve steps and to the Pallas kernel layer.
 
 Measured mode (default; reduced config, host backend) runs as a resumable
 CAMPAIGN: every (mode, k, t) point persists to a JSONL store under
@@ -10,6 +10,14 @@ executable per mode instead of one per sweep point):
     PYTHONPATH=src python -m repro.launch.probe --arch gemma-2b --smoke \
         --kind train --modes fp_add32,vmem_ld,hbm_stream \
         [--store PATH] [--fresh] [--workers N] [--no-compile-once]
+
+Pallas mode probes one of the real kernels (matmul / spmxv / attention /
+probe; interpret mode off-TPU) through the SAME campaign machinery — the
+noise quantity is a runtime operand of the kernel itself, so the whole
+sweep compiles ≤2 Pallas executables per mode:
+
+    PYTHONPATH=src python -m repro.launch.probe --pallas spmxv \
+        [--modes fp,vmem] [--store PATH] [--expect-no-measure]
 
 Multi-host fan-out: give each host/process ``--shard I/N`` — it measures a
 disjoint slice of the mode grid into its own per-worker store (the base
@@ -30,9 +38,9 @@ records (curve + fit + HardwareConfig/terms/settings) and replay on re-run:
         --shape train_4k --analytic [--dryrun-dir experiments/dryrun/16x16] \
         [--store PATH] [--fresh]
 
-Both report Abs^raw per mode + the bottleneck classification; measured mode
-also verifies the payload statically (surviving noise ops in optimized HLO).
-"""
+All paths report Abs^raw per mode + the bottleneck classification; measured
+modes also verify the payload statically (surviving noise ops in optimized
+HLO, or the exact nacc oracle for Pallas kernels)."""
 from __future__ import annotations
 
 import argparse
@@ -45,6 +53,9 @@ import jax.numpy as jnp
 
 CAMPAIGN_DIR = "experiments/campaigns"
 
+# default graph-level mode set for the measured and analytic probes
+DEFAULT_GRAPH_MODES = ("fp_add32", "mxu_fma128", "vmem_ld", "hbm_stream")
+
 
 def _finish(stats, expect_no_measure: bool) -> None:
     print(f"  [{stats.measured} points measured, "
@@ -55,6 +66,47 @@ def _finish(stats, expect_no_measure: bool) -> None:
             "fresh measurements were needed")
 
 
+def _campaign_probe(region, modes: list[str], *, reps: int,
+                    store: str | None, fresh: bool, workers: int,
+                    compile_once: bool, shard: Optional[tuple[int, int]],
+                    expect_no_measure: bool, header: str) -> None:
+    """The shared campaign tail: store naming, shard dispatch, reporting."""
+    from repro.core import Campaign, Controller, worker_store
+
+    store = store or os.path.join(CAMPAIGN_DIR, f"{region.name}.jsonl")
+    if shard is not None:
+        store = worker_store(store, *shard)
+    if fresh and os.path.exists(store):
+        os.unlink(store)
+    ctl = Controller(reps=reps, compile_once=compile_once)
+    camp = Campaign(store, ctl, workers=workers)
+
+    if shard is not None:
+        idx, cnt = shard
+        print(f"== {header} [shard {idx}/{cnt}] (worker store: {store})")
+        res = camp.measure_shard([region], modes, index=idx, count=cnt)
+        for (_, m), r in sorted(res.items()):
+            print(f"  {m:14s} Abs^raw={r.fit.k1:7.1f} "
+                  f"t0={r.fit.t0*1e3:8.2f}ms")
+        if not res:
+            print(f"  (no pairs land on shard {idx} of {cnt})")
+        print("  [classification happens after `python -m repro.core.campaign"
+              " merge`; a shard sees only its slice]")
+        _finish(camp.stats, expect_no_measure)
+        return
+
+    print(f"== {header} (campaign store: {store})")
+    rep = camp.characterize(region, modes)
+    for m, r in rep.results.items():
+        inj = r.injection
+        pay = (f"payload={inj.payload}/{inj.expected} overhead={inj.overhead}"
+               if inj else "payload=n/a")
+        print(f"  {m:14s} Abs^raw={r.fit.k1:7.1f} t0={r.fit.t0*1e3:8.2f}ms "
+              f"slope={r.fit.slope*1e6:9.2f}us/pat {pay}")
+    print(f"  => {rep.bottleneck}")
+    _finish(camp.stats, expect_no_measure)
+
+
 def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
                    batch: int, reps: int, store: str | None = None,
                    fresh: bool = False, workers: int = 1,
@@ -63,7 +115,7 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
                    expect_no_measure: bool = False) -> None:
     from repro.configs import get_smoke_config
     from repro.configs.base import ShapeConfig
-    from repro.core import Campaign, Controller, step_region, worker_store
+    from repro.core import step_region
     from repro.core.noise import NoiseScale, make_modes
     from repro.models.model import build
 
@@ -97,40 +149,56 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
     region_name = f"{cfg.name}_{kind}_s{seq}_b{batch}"
     region = step_region(region_name, step, args,
                          {m: registry[m] for m in modes})
-    store = store or os.path.join(CAMPAIGN_DIR, f"{region_name}.jsonl")
-    if shard is not None:
-        store = worker_store(store, *shard)
-    if fresh and os.path.exists(store):
-        os.unlink(store)
-    ctl = Controller(reps=reps, compile_once=compile_once)
-    camp = Campaign(store, ctl, workers=workers)
+    _campaign_probe(region, modes, reps=reps, store=store, fresh=fresh,
+                    workers=workers, compile_once=compile_once, shard=shard,
+                    expect_no_measure=expect_no_measure,
+                    header=f"measured probe: {cfg.name} {kind} seq={seq} "
+                           f"batch={batch}")
 
-    if shard is not None:
-        idx, cnt = shard
-        print(f"== measured probe [shard {idx}/{cnt}]: {cfg.name} {kind} "
-              f"seq={seq} batch={batch} (worker store: {store})")
-        res = camp.measure_shard([region], modes, index=idx, count=cnt)
-        for (_, m), r in sorted(res.items()):
-            print(f"  {m:14s} Abs^raw={r.fit.k1:7.1f} "
-                  f"t0={r.fit.t0*1e3:8.2f}ms")
-        if not res:
-            print(f"  (no pairs land on shard {idx} of {cnt})")
-        print("  [classification happens after `python -m repro.core.campaign"
-              " merge`; a shard sees only its slice]")
-        _finish(camp.stats, expect_no_measure)
-        return
 
-    print(f"== measured probe: {cfg.name} {kind} seq={seq} batch={batch} "
-          f"(campaign store: {store})")
-    rep = camp.characterize(region, modes)
-    for m, r in rep.results.items():
-        inj = r.injection
-        pay = (f"payload={inj.payload}/{inj.expected} overhead={inj.overhead}"
-               if inj else "payload=n/a")
-        print(f"  {m:14s} Abs^raw={r.fit.k1:7.1f} t0={r.fit.t0*1e3:8.2f}ms "
-              f"slope={r.fit.slope*1e6:9.2f}us/pat {pay}")
-    print(f"  => {rep.bottleneck}")
-    _finish(camp.stats, expect_no_measure)
+# per-kernel meaning of the --pallas-n size knob, and the block size it must
+# be a multiple of (sizes below one block are allowed: the block shrinks)
+_PALLAS_SIZE_KW = {"matmul": "n", "spmxv": "n", "attention": "seq",
+                   "probe": "n_steps"}
+_PALLAS_ALIGN = {"matmul": 128, "spmxv": 128, "attention": 64, "probe": 1}
+
+
+def pallas_probe(kernel: str, modes: Optional[list[str]], *, reps: int,
+                 n: Optional[int] = None, store: str | None = None,
+                 fresh: bool = False, workers: int = 1,
+                 compile_once: bool = True,
+                 shard: Optional[tuple[int, int]] = None,
+                 expect_no_measure: bool = False) -> None:
+    """Run the paper's methodology against a real Pallas kernel (interpret
+    mode off-TPU). The sweep rides the compile-once runtime-k path: ≤2
+    Pallas executables per (kernel, mode)."""
+    from repro.kernels.region import KERNEL_MODES, pallas_region
+
+    if kernel not in KERNEL_MODES:
+        raise SystemExit(f"unknown pallas kernel {kernel!r}; one of "
+                         f"{', '.join(sorted(KERNEL_MODES))}")
+    modes = modes or list(KERNEL_MODES[kernel])
+    unknown = [m for m in modes if m not in KERNEL_MODES[kernel]]
+    if unknown:
+        raise SystemExit(f"kernel {kernel!r} supports modes "
+                         f"{KERNEL_MODES[kernel]}, not {unknown}")
+    if n is not None:
+        align = _PALLAS_ALIGN[kernel]
+        if n < 1:
+            raise SystemExit(f"--pallas-n must be positive; got {n}")
+        # blocked kernels: noise patterns read 8-row groups, and sizes past
+        # one block must tile evenly ('probe' counts grid steps — any n ok)
+        if align > 1 and (n < 8 or (n > align and n % align)):
+            raise SystemExit(
+                f"--pallas-n for {kernel!r} must be >= 8 and a multiple of "
+                f"its {align}-wide block (or smaller than one block); "
+                f"got {n}")
+    sizes = {} if n is None else {_PALLAS_SIZE_KW[kernel]: n}
+    region = pallas_region(kernel, **sizes)
+    _campaign_probe(region, modes, reps=reps, store=store, fresh=fresh,
+                    workers=workers, compile_once=compile_once, shard=shard,
+                    expect_no_measure=expect_no_measure,
+                    header=f"pallas probe: {region.name}")
 
 
 def analytic_probe(arch: str, shape_name: str, dryrun_dir: str,
@@ -196,13 +264,25 @@ def _parse_shard(text: str) -> tuple[int, int]:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="model architecture (required unless --pallas)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--kind", default="train", choices=("train", "decode"))
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--analytic", action="store_true")
+    ap.add_argument("--pallas", default=None,
+                    metavar="{matmul,spmxv,attention,probe}",
+                    help="probe a Pallas kernel region instead of a model "
+                         "step (interpret mode off-TPU; modes default to "
+                         "the kernel's fp/mxu/vmem set)")
+    ap.add_argument("--pallas-n", type=int, default=None,
+                    help="kernel size knob (rows for matmul/spmxv, seq for "
+                         "attention, grid steps for probe)")
     ap.add_argument("--dryrun-dir", default="experiments/dryrun/16x16")
-    ap.add_argument("--modes", default="fp_add32,mxu_fma128,vmem_ld,hbm_stream")
+    ap.add_argument("--modes", default=None,
+                    help="noise modes (default: "
+                         f"{','.join(DEFAULT_GRAPH_MODES)}, or the "
+                         "kernel's fp/mxu/vmem set under --pallas)")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--reps", type=int, default=3)
@@ -225,19 +305,34 @@ def main() -> None:
                     help="force the trace-per-k fallback sweep path")
     args = ap.parse_args()
 
-    modes = [m.strip() for m in args.modes.split(",") if m.strip()]
+    modes = ([m.strip() for m in args.modes.split(",") if m.strip()]
+             if args.modes else None)
+    shard = _parse_shard(args.shard) if args.shard is not None else None
+    if args.pallas is not None:
+        if args.analytic:
+            raise SystemExit("--pallas and --analytic are mutually exclusive")
+        pallas_probe(args.pallas, modes, reps=args.reps, n=args.pallas_n,
+                     store=args.store, fresh=args.fresh,
+                     workers=args.workers,
+                     compile_once=not args.no_compile_once, shard=shard,
+                     expect_no_measure=args.expect_no_measure)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --pallas is given")
     if args.analytic:
-        if args.shard is not None:
+        if shard is not None:
             raise SystemExit("--shard applies to measured mode only "
                              "(predictions are too cheap to fan out)")
-        analytic_probe(args.arch, args.shape, args.dryrun_dir, modes,
+        analytic_probe(args.arch, args.shape, args.dryrun_dir,
+                       modes or list(DEFAULT_GRAPH_MODES),
                        tol=args.tol, store=args.store, fresh=args.fresh,
                        expect_no_measure=args.expect_no_measure)
     else:
-        shard = _parse_shard(args.shard) if args.shard is not None else None
-        measured_probe(args.arch, args.kind, modes, seq=args.seq,
-                       batch=args.batch, reps=args.reps, store=args.store,
-                       fresh=args.fresh, workers=args.workers,
+        measured_probe(args.arch, args.kind,
+                       modes or list(DEFAULT_GRAPH_MODES),
+                       seq=args.seq, batch=args.batch, reps=args.reps,
+                       store=args.store, fresh=args.fresh,
+                       workers=args.workers,
                        compile_once=not args.no_compile_once,
                        shard=shard,
                        expect_no_measure=args.expect_no_measure)

@@ -36,8 +36,9 @@ KS = [0, 1, 2, 4, 8, 12, 16, 24, 32, 48, 64]
 
 # region -> (expected label, drift factor recorded in "done",
 #            {mode: (t0_seconds, k1_knee, slope_fraction_per_pattern)})
-# Mode vocabularies deliberately mix loop-level and graph-level names so the
-# suite pins BOTH against the classifier's alias table.
+# Mode vocabularies deliberately mix loop-level, graph-level and Pallas
+# kernel-level names so the suite pins ALL THREE against the classifier's
+# alias table.
 REGIONS = {
     "golden_compute": ("compute", None, {            # HACCmk row (loop vocab)
         "fp_add": (2.0e-3, 0.0, 0.30),
@@ -65,6 +66,10 @@ REGIONS = {
     "golden_mixed": ("mixed", None, {                # Table 3 case 4
         "fp_add": (4.0e-3, 8.0, 0.12),
         "l1_ld": (4.0e-3, 7.0, 0.12),
+    }),
+    "golden_pallas_lsu": ("l1", 1.05, {              # Fig 4a -O0 matmul row
+        "fp": (1.5e-3, 30.0, 0.18),                  # (Pallas kernel vocab)
+        "vmem": (1.5e-3, 1.0, 0.35),
     }),
 }
 

@@ -65,10 +65,11 @@ def test_golden_signature_replays_identically(golden_store, region):
 def test_golden_covers_every_decision_label():
     labels = {e["label"] for e in EXPECTED.values()}
     assert labels == {"compute", "bandwidth", "latency", "ici", "overlap",
-                      "mixed"}
+                      "mixed", "l1"}
 
 
-def test_golden_mixes_both_mode_vocabularies():
+def test_golden_mixes_all_mode_vocabularies():
     modes = {m for e in EXPECTED.values() for m in e["modes"]}
     assert modes & {"fp_add", "l1_ld", "mem_ld"}          # loop-level
     assert modes & {"fp_add32", "vmem_ld", "hbm_stream"}  # graph-level
+    assert modes & {"fp", "mxu", "vmem"}                  # Pallas kernel-level

@@ -1,18 +1,23 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps,
-and exact noise-payload accounting."""
+exact noise-payload accounting, and static-k vs runtime-k equivalence
+(bitwise) for every kernel and noise mode."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               flash_attention_rt)
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.noise_probes.ops import run_probe
+from repro.kernels.noise_probes.ops import run_probe, run_probe_rt
 from repro.kernels.noise_probes.ref import probe_ref
-from repro.kernels.noisy_matmul.ops import default_noise_operand, noisy_matmul
+from repro.kernels.noise_slots import K_MAX
+from repro.kernels.noisy_matmul.ops import (default_noise_operand,
+                                            noisy_matmul, noisy_matmul_rt)
 from repro.kernels.noisy_matmul.ref import fp_noise_ref, matmul_ref
-from repro.kernels.spmv_ell.ops import spmv_ell
-from repro.kernels.spmv_ell.ref import make_band_ell, spmv_ell_ref
+from repro.kernels.spmv_ell.ops import spmv_ell, spmv_ell_rt
+from repro.kernels.spmv_ell.ref import (fp_noise_ell_ref, make_band_ell,
+                                        spmv_ell_ref, vmem_noise_ell_ref)
 
 
 @pytest.mark.parametrize("M,N,K", [(256, 256, 256), (512, 256, 384),
@@ -102,3 +107,97 @@ def test_probe_exact(mode, k, n_steps):
                      n_steps=n_steps)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# runtime-k protocol: for every kernel and mode, the scalar-prefetch path
+# must be BITWISE identical to the static-k path (same pattern arithmetic in
+# the same order), including k=0, so compile-once sweeps measure the same
+# injected work as the paper's trace-per-k cost model.
+# ---------------------------------------------------------------------------
+
+def _assert_pair_equal(static_out, rt_out):
+    for s, r in zip(static_out, rt_out):
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(r))
+
+
+@pytest.mark.parametrize("mode", ["fp", "mxu", "vmem"])
+@pytest.mark.parametrize("k", [0, 1, 5])
+def test_matmul_runtime_k_matches_static(mode, k):
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 256), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
+    _assert_pair_equal(
+        noisy_matmul(a, b, mode=mode, k_noise=k, bm=128, bn=128, bk=128),
+        noisy_matmul_rt(jnp.int32(k), a, b, mode=mode,
+                        bm=128, bn=128, bk=128))
+
+
+@pytest.mark.parametrize("mode", ["fp", "vmem"])
+@pytest.mark.parametrize("n,L,k", [(512, 16, 1), (512, 16, 5), (256, 128, 3)])
+def test_spmv_runtime_k_matches_static(mode, n, L, k):
+    vals, cols = make_band_ell(n, L, 0.5, seed=1)
+    x = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32)
+    _assert_pair_equal(
+        spmv_ell(vals, cols, x, br=128, mode=mode, k_noise=k),
+        spmv_ell_rt(jnp.int32(k), vals, cols, x, br=128, mode=mode))
+
+
+@pytest.mark.parametrize("mode", ["fp", "mxu", "vmem"])
+@pytest.mark.parametrize("k", [1, 4])
+def test_attention_runtime_k_matches_static(mode, k):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64), jnp.float32)
+    kk = jax.random.normal(ks[1], (1, 2, 128, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64), jnp.float32)
+    _assert_pair_equal(
+        flash_attention(q, kk, v, mode=mode, k_noise=k, bq=64, bk=64),
+        flash_attention_rt(jnp.int32(k), q, kk, v, mode=mode, bq=64, bk=64))
+
+
+@pytest.mark.parametrize("mode", ["fp", "mxu", "vmem"])
+@pytest.mark.parametrize("k", [0, 1, 3])
+def test_probe_runtime_k_matches_static(mode, k):
+    np.testing.assert_array_equal(
+        np.asarray(run_probe(mode=mode, k_noise=k, n_steps=8)),
+        np.asarray(run_probe_rt(jnp.int32(k), mode=mode, n_steps=8)))
+
+
+def test_runtime_k_clamps_at_k_max():
+    """The bounded fori_loop: k > K_MAX emits exactly K_MAX patterns."""
+    got = run_probe_rt(jnp.int32(K_MAX + 7), mode="fp", n_steps=2)
+    want = run_probe(mode="fp", k_noise=K_MAX, n_steps=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# spmv fp payload integrity: the addend derives from a RUNTIME block of
+# vals (a compile-time constant could be strength-reduced to nacc += k*c,
+# deleting the payload), and the exact oracle still holds.
+# ---------------------------------------------------------------------------
+
+def test_spmv_fp_noise_exact_and_data_dependent():
+    vals, cols = make_band_ell(512, 16, 0.25, seed=3)
+    x = jax.random.normal(jax.random.PRNGKey(4), (512,), jnp.float32)
+    k = 4
+    _, nacc = spmv_ell(vals, cols, x, br=128, mode="fp", k_noise=k)
+    np.testing.assert_allclose(np.asarray(nacc),
+                               np.asarray(fp_noise_ell_ref(vals, k, 128)),
+                               rtol=1e-5, atol=1e-6)
+    # the addend is data, not a constant: scaling vals scales nacc linearly
+    _, nacc2 = spmv_ell(vals * 2.0, cols, x, br=128, mode="fp", k_noise=k)
+    np.testing.assert_allclose(np.asarray(nacc2), 2.0 * np.asarray(nacc),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_spmv_vmem_noise_exact_narrow_block():
+    """vmem patterns on a narrow ELL block (L < 128) add into the first L
+    lanes only; the exact oracle pins offsets and widths."""
+    vals, cols = make_band_ell(512, 16, 0.0, seed=5)
+    x = jax.random.normal(jax.random.PRNGKey(6), (512,), jnp.float32)
+    _, nacc = spmv_ell(vals, cols, x, br=128, mode="vmem", k_noise=3)
+    nacc = np.asarray(nacc)
+    np.testing.assert_allclose(nacc,
+                               np.asarray(vmem_noise_ell_ref(vals, 3, 128)),
+                               rtol=1e-5, atol=1e-6)
+    assert np.abs(nacc[:, :16]).sum() > 0
+    np.testing.assert_array_equal(nacc[:, 16:], 0.0)

@@ -1,0 +1,127 @@
+"""The Pallas layer on the Controller/Campaign spine: compile-count
+guarantees (≤2 executables per (kernel, mode) sweep), oracle payload
+verification, and campaign persist/replay with zero new measurements."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Campaign, Controller
+from repro.kernels.region import KERNEL_MODES, pallas_region
+
+
+def _counting_region(kernel, **sizes):
+    traces = {"n": 0}
+    region = pallas_region(
+        kernel, backend="interpret",
+        trace_hook=lambda: traces.__setitem__("n", traces["n"] + 1), **sizes)
+    return region, traces
+
+
+# small interpret-mode shapes so sweeps stay fast
+SIZES = {
+    "matmul": {"n": 128},
+    "spmxv": {"n": 256},
+    "attention": {"seq": 128, "heads": 2, "kv_heads": 2, "bq": 64, "bk": 64},
+    "probe": {"n_steps": 8},
+}
+
+
+@pytest.mark.parametrize("kernel", sorted(KERNEL_MODES))
+def test_pallas_sweep_compiles_at_most_two_per_mode(kernel):
+    """Acceptance: a full k-sweep over a Pallas region builds ≤2 executables
+    per (kernel, mode) — the runtime-k sweep + the static payload check —
+    extending the ≤2-executables guarantee from the loop/graph layers."""
+    region, traces = _counting_region(kernel, **SIZES[kernel])
+    ctl = Controller(reps=2, compile_once=True)
+    before = 0
+    for mode in KERNEL_MODES[kernel]:
+        res = ctl.run_mode(region, mode, ks=(0, 1, 2, 4, 8, 16))
+        built = traces["n"] - before
+        before = traces["n"]
+        assert built <= 2, f"{kernel}/{mode}: {built} executables for a sweep"
+        assert len(res.curve.ks) >= 3
+        assert res.injection is not None          # oracle payload check ran
+        assert res.injection.payload == res.injection.expected > 0
+
+
+def test_pallas_fallback_compiles_per_k():
+    region, traces = _counting_region("probe", n_steps=8)
+    ctl = Controller(reps=2, compile_once=False, verify_payload=False,
+                     stop_ratio=100.0)
+    ctl.run_mode(region, "fp", ks=(0, 2, 4, 8))
+    assert traces["n"] >= 4          # the paper's cost model: one per k
+
+
+def test_pallas_static_and_runtime_sweeps_agree():
+    """A/B: both sweep paths measure the same program (payload verdicts
+    identical; fit fields exist on both)."""
+    region, _ = _counting_region("spmxv", n=256)
+    ks = (0, 2, 4, 8)
+    fast = Controller(reps=2, compile_once=True, stop_ratio=100.0)
+    slow = Controller(reps=2, compile_once=False, stop_ratio=100.0)
+    r_fast = fast.run_mode(region, "fp", ks=ks)
+    r_slow = slow.run_mode(region, "fp", ks=ks)
+    assert r_fast.curve.ks[:3] == r_slow.curve.ks[:3] == [0, 2, 4]
+    assert r_fast.injection.payload == r_slow.injection.payload
+    assert r_fast.fit.t0 > 0 and r_slow.fit.t0 > 0
+
+
+def test_pallas_payload_check_oracle():
+    """The Pallas payload check verifies the nacc oracle on a static trace:
+    full survival for every supported mode, reported per the §2.3 schema."""
+    region, _ = _counting_region("matmul", n=128)
+    for mode in KERNEL_MODES["matmul"]:
+        rep = region.payload_check(mode, 6)
+        assert rep.expected == rep.payload == 6
+        assert rep.overhead == 0 and rep.survival_fraction == 1.0
+        assert rep.ok()
+
+
+def test_pallas_region_rejects_unknown_mode():
+    region, _ = _counting_region("spmxv", n=256)
+    with pytest.raises(ValueError, match="supports noise modes"):
+        region.build("mxu", 2)       # spmv has no noise operand -> no mxu
+    with pytest.raises(ValueError, match="unknown pallas kernel"):
+        pallas_region("nope")
+
+
+def test_pallas_campaign_replays_with_zero_measurements(tmp_path):
+    """Acceptance: a completed Pallas campaign replays from its store with
+    ZERO new measurements, zero compiles, and identical classification."""
+    store = str(tmp_path / "pallas.jsonl")
+    modes = list(KERNEL_MODES["spmxv"])
+
+    region1, _ = _counting_region("spmxv", n=256)
+    c1 = Campaign(store, Controller(reps=2))
+    rep1 = c1.characterize(region1, modes)
+    assert c1.stats.measured > 0
+
+    region2, traces2 = _counting_region("spmxv", n=256)
+    c2 = Campaign(store, Controller(reps=2))
+    rep2 = c2.characterize(region2, modes)
+    assert c2.stats.measured == 0
+    assert traces2["n"] == 0                      # not even a compile
+    assert rep2.bottleneck.label == rep1.bottleneck.label
+    for m in modes:
+        assert rep2.results[m].curve.ks == rep1.results[m].curve.ks
+        assert rep2.results[m].curve.ts == rep1.results[m].curve.ts
+        assert rep2.results[m].injection.payload \
+            == rep1.results[m].injection.payload
+
+
+def test_pallas_region_clean_build_is_noise_free():
+    region, _ = _counting_region("matmul", n=128)
+    out, nacc = region.build("", 0)(*region.args_for("", 0))
+    assert out.shape == (128, 128)
+    np.testing.assert_array_equal(np.asarray(nacc), 0.0)
+
+
+def test_pallas_rt_callable_is_memoized_on_controller():
+    """The controller's _rt_cache must hand the sensitivity probe and the
+    sweep the SAME Pallas executable (one compile, not two)."""
+    region, traces = _counting_region("probe", n_steps=8)
+    ctl = Controller(reps=2, verify_payload=False)
+    fn = ctl._rt_fn(region, "fp")
+    assert fn is ctl._rt_fn(region, "fp")
+    fn(jnp.int32(2), *region.args_for_rt("fp"))
+    assert traces["n"] == 1
