@@ -15,19 +15,17 @@ CAMPAIGN_DIR_VAR = "REPRO_CAMPAIGN_DIR"
 
 
 def characterize(ctl, region, modes) -> Any:
-    """``Controller.characterize`` through the campaign engine when a store
-    directory is configured, plain (non-persistent) otherwise."""
+    """``Controller.characterize`` through the fleet executor's store-backed
+    spine when a store directory is configured (the same code path fleet
+    finalize runs), plain (non-persistent) otherwise."""
     campaign_dir = os.environ.get(CAMPAIGN_DIR_VAR, "")
     if not campaign_dir:
         return ctl.characterize(region, modes=modes)
-    from repro.core import Campaign
+    from repro.fleet.executor import characterize_region
 
-    camp = Campaign(os.path.join(campaign_dir, f"{region.name}.jsonl"), ctl)
-    rep = camp.characterize(region, modes)
-    if camp.stats.cached:
-        print(f"  [{region.name}: {camp.stats.cached} points from store, "
-              f"{camp.stats.measured} measured]")
-    return rep
+    return characterize_region(
+        region, modes, controller=ctl,
+        store=os.path.join(campaign_dir, f"{region.name}.jsonl"))
 
 
 def run_decan_stored(target, *, reps: int, inner: int = 1) -> Any:

@@ -9,12 +9,51 @@ Characterization sweeps run as resumable campaigns by default: every measured
 re-run (after a crash, a ctrl-C, or to add modes) only measures what is
 missing. ``--no-campaign`` restores the old measure-everything-every-time
 behaviour; delete the store directory to force fresh numbers.
+
+``--emit-fleet-plan PATH`` turns the harness into a plan builder: instead of
+measuring, it writes a ``repro.fleet`` SweepPlan spanning the fig4/fig7
+Pallas size/q FAMILIES (the whole grid the ``--pallas`` studies sample), to
+be fanned out across subprocess shards or hosts:
+
+    PYTHONPATH=src python -m benchmarks.run --emit-fleet-plan plan.json
+    PYTHONPATH=src python -m repro.fleet run --plan plan.json
 """
 from __future__ import annotations
 
 import argparse
 import os
 import time
+
+
+def build_fleet_plan(quick: bool, *, store: str, shards: int = 2,
+                     out: str = "fleet_plan.json") -> str:
+    """The fig4/fig7 Pallas grids as one declarative SweepPlan: the matmul
+    size family and the spmxv (size × q) family share one store, one fleet,
+    one merged classification."""
+    from repro.fleet.plan import SweepPlan, TargetSpec
+
+    if quick:
+        m_sizes, s_sizes, qs = [128, 256], [256, 512], [0.0, 1.0]
+    else:
+        m_sizes, s_sizes, qs = [256, 512], [512, 2048], [0.0, 0.5, 1.0]
+    plan = SweepPlan(
+        name=f"bench_pallas_{'quick' if quick else 'full'}",
+        store=store,
+        targets=[
+            TargetSpec("pallas", ("fp", "vmem"),
+                       {"kernel": "matmul", "sizes": m_sizes}),
+            TargetSpec("pallas", ("fp", "vmem"),
+                       {"kernel": "spmxv", "sizes": s_sizes, "qs": qs,
+                        "nnz_per_row": 16}),
+        ],
+        reps=2 if quick else 3, shards=shards, backend="interpret")
+    plan.save(out)
+    grid = plan.grid()
+    print(f"wrote fleet plan {plan.name!r} [{plan.digest()}] -> {out}")
+    print(f"  {len(grid)} (region, mode) pair(s) over {shards} shard(s); "
+          f"store: {store}")
+    print(f"run it:   PYTHONPATH=src python -m repro.fleet run --plan {out}")
+    return out
 
 
 def main() -> None:
@@ -34,9 +73,23 @@ def main() -> None:
                     help="also run fig4/fig7 on the real Pallas kernels "
                          "(interpret mode off-TPU) and report the "
                          "compile-once vs trace-per-k sweep cost")
+    ap.add_argument("--emit-fleet-plan", default=None, metavar="PATH",
+                    help="write a repro.fleet SweepPlan covering the "
+                         "fig4/fig7 Pallas size/q families to PATH and "
+                         "exit (run it with python -m repro.fleet run)")
+    ap.add_argument("--fleet-shards", type=int, default=2,
+                    help="shard count baked into --emit-fleet-plan")
     args = ap.parse_args()
     if args.quick and args.full:
         ap.error("--quick and --full are mutually exclusive")
+    if args.emit_fleet_plan:
+        build_fleet_plan(
+            not args.full, out=args.emit_fleet_plan,
+            shards=args.fleet_shards,
+            store=os.path.join(args.campaign_dir,
+                               "full" if args.full else "quick",
+                               "bench_pallas_fleet.jsonl"))
+        return
 
     from benchmarks.common import CAMPAIGN_DIR_VAR
     if args.no_campaign:

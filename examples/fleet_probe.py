@@ -1,0 +1,48 @@
+"""Fleet orchestration end to end, from Python: declare a SweepPlan spanning
+a Pallas kernel's whole size/q family, fan it out over 2 real subprocess
+shards, merge the worker stores, classify — then prove the completed fleet
+replays with ZERO new measurements.
+
+    PYTHONPATH=src python examples/fleet_probe.py
+
+Everything here also exists as a CLI (see docs/orchestration.md):
+
+    python -m repro.fleet plan / run / status
+    python -m repro.launch.probe --plan PLAN --shard I/N   (the worker)
+"""
+import os
+
+from repro.fleet import SweepPlan, TargetSpec, run_fleet
+
+PLAN_PATH = "experiments/campaigns/fleet/example_plan.json"
+
+# one plan = one store = the kernel's whole (size, q) grid: 2 sizes x 2 swap
+# probabilities x 2 noise modes = 8 (region, mode) sweeps, split over 2 shards
+plan = SweepPlan(
+    name="example_spmxv_family",
+    store="experiments/campaigns/fleet/example_spmxv.jsonl",
+    targets=[
+        TargetSpec("pallas", ("fp", "vmem"),
+                   {"kernel": "spmxv", "sizes": [128, 256],
+                    "qs": [0.0, 1.0], "nnz_per_row": 8}),
+    ],
+    reps=2, shards=2, backend="interpret")
+plan.save(PLAN_PATH)
+print(f"plan {plan.name!r} [{plan.digest()}]: "
+      f"{len(plan.grid())} (region, mode) pairs -> {PLAN_PATH}\n")
+
+# spawn 2 subprocess shards, stream their output, merge, classify. A killed
+# shard would leave a truncated worker store; re-running this exact call with
+# resume=True relaunches only the incomplete shard and heals it.
+result = run_fleet(PLAN_PATH, resume=os.path.exists(plan.fleet_path()))
+
+print("\nclassifications:")
+for name, rep in sorted(result.reports.items()):
+    print(f"  {name}: {rep.bottleneck}")
+
+# the completed fleet is a durable artifact: replaying it measures nothing
+replay = run_fleet(PLAN_PATH, resume=True)
+assert replay.launched == [] and replay.stats.measured == 0
+print(f"\nreplay: 0 launched, 0 measured, "
+      f"{replay.stats.cached} points from the merged store")
+print(f"report: {plan.report_path()}")

@@ -25,7 +25,7 @@ from repro.core.analytic import (  # noqa: F401
 )
 from repro.core.campaign import (AnalyticCampaign, Campaign, CampaignStats,  # noqa: F401
                                  CampaignStore, CampaignStoreError,
-                                 merge_stores, read_store_records,
+                                 PairStatus, merge_stores, read_store_records,
                                  worker_store)
 from repro.core.classifier import BottleneckReport, classify, cross_check_with_decan  # noqa: F401
 from repro.core.controller import Controller, RegionReport, RegionTarget, loop_region  # noqa: F401

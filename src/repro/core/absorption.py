@@ -10,6 +10,7 @@ renormalizes by the size of the original loop body.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import warnings
 from typing import Any, Callable, Optional, Sequence
@@ -20,6 +21,28 @@ import numpy as np
 # ---------------------------------------------------------------------------
 # Timing
 # ---------------------------------------------------------------------------
+
+# Deterministic stand-in clock for orchestration tests and CI smoke: when this
+# env var is set (to the baseline in seconds, e.g. "1e-3"), ``measure`` does
+# not run or time anything — it returns a pure function of the noise quantity
+# k (args[0] on the runtime-k path), so independently-run processes produce
+# byte-identical stores and classifications that can be compared exactly.
+# Never set it for real measurements.
+SYNTH_MEASURE_VAR = "REPRO_SYNTH_MEASURE"
+
+
+def _synth_time(args: tuple, base: float) -> float:
+    """t(k) with a knee at k=6 — flat absorption then a linear ramp, enough
+    structure for the fit/classifier to produce stable, non-trivial output."""
+    k = 0
+    if args:
+        try:
+            a0 = np.asarray(args[0])
+            if a0.ndim == 0 and np.issubdtype(a0.dtype, np.integer):
+                k = int(a0)
+        except (TypeError, ValueError):
+            pass
+    return base * (1.0 + 0.05 * max(0, k - 6))
 
 # Coarse timers (or a fully cached call) can report 0.0 s; every ratio in this
 # module divides by a baseline, so baselines are floored to one timer tick.
@@ -45,6 +68,9 @@ def measure(fn: Callable, args: tuple = (), *, reps: int = 5, warmup: int = 2,
     ``inner`` repeats the call inside the timed region for very short kernels.
     Min-of-reps is the standard noise-robust estimator for dedicated machines.
     """
+    synth = os.environ.get(SYNTH_MEASURE_VAR)
+    if synth:
+        return _synth_time(args, float(synth))
     for _ in range(warmup):
         out = fn(*args)
     jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")

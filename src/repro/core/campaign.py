@@ -151,6 +151,23 @@ def worker_store(path: str, index: int, count: int) -> str:
     return f"{base}.w{index}of{count}{ext or '.jsonl'}"
 
 
+@dataclasses.dataclass(frozen=True)
+class PairStatus:
+    """Grid completeness of one (region, mode) pair — what a fleet executor
+    (or a human at the ``inspect`` CLI) needs to decide whether the pair must
+    be (re)measured: the points present, the points the sweep's ``done``
+    marker promised, and which of those are missing (a truncated store)."""
+    points: int                       # point records present
+    expected: Optional[int]           # len(done ks); None until done-marked
+    done: bool                        # a "done" marker exists
+    missing: tuple[int, ...] = ()     # done-promised ks with no point record
+
+    @property
+    def complete(self) -> bool:
+        """Replayable with zero new measurements."""
+        return self.done and not self.missing
+
+
 class CampaignStore:
     """Append-only JSONL measurement store, loaded eagerly on open.
 
@@ -239,6 +256,24 @@ class CampaignStore:
 
     def is_done(self, region: str, mode: str) -> bool:
         return (region, mode) in self.done
+
+    def pair_status(self, region: str, mode: str) -> PairStatus:
+        """Completeness of one (region, mode) pair (see ``PairStatus``)."""
+        key = (region, mode)
+        pts = self.points.get(key, {})
+        rec = self.done.get(key)
+        if rec is None:
+            return PairStatus(points=len(pts), expected=None, done=False)
+        ks = [int(k) for k in rec["ks"]]
+        return PairStatus(points=len(pts), expected=len(ks), done=True,
+                          missing=tuple(k for k in ks if k not in pts))
+
+    def grid_status(self, pairs: Sequence[tuple[str, str]]
+                    ) -> dict[tuple[str, str], PairStatus]:
+        """Completeness of every (region, mode) pair in an expected grid —
+        the query a fleet executor runs against worker stores to decide
+        which shards still need (re)launching."""
+        return {(r, m): self.pair_status(r, m) for r, m in pairs}
 
     def _drop_measured(self, key: tuple[str, str]) -> None:
         for d in (self.points, self.sens, self.done):
@@ -360,19 +395,27 @@ def merge_stores(dest: str, sources: Sequence[str]) -> MergeStats:
     """
     stats = MergeStats(sources=len(sources))
     view = _MergeView(stats)
-    for src in sources:
-        for rec in read_store_records(src)[0]:
-            view.ingest(rec)
-    records = view.records()
-    stats.records_out = len(records)
     d = os.path.dirname(dest)
     if d:
         os.makedirs(d, exist_ok=True)
     tmp = dest + ".merge-tmp"
-    with open(tmp, "w") as f:
-        for rec in records:
-            f.write(_canon_line(rec) + "\n")
-    os.replace(tmp, dest)
+    try:
+        with open(tmp, "w") as f:
+            # sources stream with the tmp already open, so a corrupt source
+            # (CampaignStoreError) aborts mid-merge; the finally guarantees
+            # the aborted tmp never outlives the call — ``dest`` only ever
+            # sees the atomic rename of a COMPLETE merge
+            for src in sources:
+                for rec in read_store_records(src)[0]:
+                    view.ingest(rec)
+            records = view.records()
+            stats.records_out = len(records)
+            for rec in records:
+                f.write(_canon_line(rec) + "\n")
+        os.replace(tmp, dest)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
     return stats
 
 
@@ -584,29 +627,40 @@ class Campaign:
                     t, {m: res[(t.name, m)] for m in modes})
                 for t in targets}
 
-    def measure_shard(self, targets: Sequence[RegionTarget],
-                      modes: Sequence[str], *, index: int, count: int
+    def measure_pairs(self, pairs: Sequence[tuple[RegionTarget, str]], *,
+                      index: int = 0, count: int = 1
                       ) -> dict[tuple[str, str], ModeResult]:
-        """Measure this worker's slice of the (region, mode) grid.
+        """Measure this worker's slice of an explicit (target, mode) grid.
 
-        The grid enumerates in (target-major, mode-minor) order and worker
-        ``index`` of ``count`` takes every count-th pair — every pair lands
-        on exactly one worker given identical (targets, modes) arguments.
-        No classification happens here: a shard sees only its slice;
-        ``merge_stores`` + ``characterize``/``run`` on the merged store
-        produce the cross-shard reports.
+        ``pairs`` is the FULL grid in a canonical order every worker agrees
+        on (a SweepPlan's ``pairs()``, or target-major/mode-minor for
+        ``measure_shard``); worker ``index`` of ``count`` takes every
+        count-th pair, so every pair lands on exactly one worker given
+        identical arguments. No classification happens here: a shard sees
+        only its slice; ``merge_stores`` + ``characterize``/``run`` on the
+        merged store produce the cross-shard reports.
         """
         if not (0 <= index < count):
             raise ValueError(f"shard index {index} not in [0, {count})")
-        pairs = [(t, m) for t in targets for m in modes]
         mine = [p for i, p in enumerate(pairs) if i % count == index]
         res = self._pooled_sweeps(mine)
         # the worker owning a region's FIRST grid pair also records its body
         # size, so the merged store replays without a single compile
-        for ti, t in enumerate(targets):
-            if modes and (ti * len(modes)) % count == index:
-                self._body_size(t)
+        seen: set[int] = set()
+        for i, (t, _) in enumerate(pairs):
+            if id(t) not in seen:
+                seen.add(id(t))
+                if i % count == index:
+                    self._body_size(t)
         return res
+
+    def measure_shard(self, targets: Sequence[RegionTarget],
+                      modes: Sequence[str], *, index: int, count: int
+                      ) -> dict[tuple[str, str], ModeResult]:
+        """``measure_pairs`` over the homogeneous (targets × modes) grid in
+        target-major, mode-minor order."""
+        return self.measure_pairs([(t, m) for t in targets for m in modes],
+                                  index=index, count=count)
 
 
 # ---------------------------------------------------------------------------
@@ -701,8 +755,13 @@ def _cli(argv: Optional[Sequence[str]] = None) -> int:
                                       "canonical store")
     mp.add_argument("dest")
     mp.add_argument("sources", nargs="+")
-    ip = sub.add_parser("inspect", help="summarize one store")
+    ip = sub.add_parser("inspect", help="summarize one store with per-"
+                                        "(region, mode) grid completeness")
     ip.add_argument("path")
+    ip.add_argument("--plan", default=None, metavar="PLAN.json",
+                    help="a repro.fleet SweepPlan: also check the store "
+                         "against the plan's full expected grid (exit 1 "
+                         "when any pair is missing or incomplete)")
     args = ap.parse_args(argv)
 
     if args.cmd == "merge":
@@ -715,9 +774,17 @@ def _cli(argv: Optional[Sequence[str]] = None) -> int:
         print(e)
         return 2
     print(f"{args.path}:")
-    for key in sorted(set(st.meta) | set(st.points) | set(st.done)):
-        n = len(st.points.get(key, {}))
-        state = "done" if key in st.done else f"{n} point(s), in progress"
+    measured_keys = sorted(set(st.meta) | set(st.points) | set(st.done))
+    n_complete = 0
+    for key in measured_keys:
+        ps = st.pair_status(*key)
+        n_complete += ps.complete
+        if ps.done:
+            state = f"{ps.points}/{ps.expected} point(s), done"
+            if ps.missing:
+                state += f", MISSING ks {sorted(ps.missing)}"
+        else:
+            state = f"{ps.points} point(s), in progress"
         meta = _meta_settings(st.meta[key]) if key in st.meta else "?"
         print(f"  measured {key[0]}/{key[1]}: {state}  [settings {meta}]")
     for key, rec in sorted(st.preds.items()):
@@ -728,6 +795,23 @@ def _cli(argv: Optional[Sequence[str]] = None) -> int:
     for (region, variant), rec in sorted(st.decan.items()):
         print(f"  decan    {region}/{variant}: t={rec['t']:.6f}s "
               f"(reps={rec.get('reps')}, inner={rec.get('inner')})")
+    if measured_keys:
+        print(f"  grid: {n_complete}/{len(measured_keys)} measured pair(s) "
+              "complete")
+    if args.plan:
+        from repro.fleet.plan import SweepPlan   # lazy: fleet sits above core
+        plan = SweepPlan.load(args.plan)
+        grid = plan.grid()
+        status = st.grid_status(grid)
+        missing = [key for key in grid if not status[key].complete]
+        print(f"  plan {plan.name!r}: {len(grid) - len(missing)}/{len(grid)} "
+              "pair(s) complete")
+        for r, m in missing:
+            ps = status[(r, m)]
+            what = (f"{ps.points} point(s), in progress" if ps.points or ps.done
+                    else "absent")
+            print(f"    missing {r}/{m} ({what})")
+        return 1 if missing else 0
     return 0
 
 

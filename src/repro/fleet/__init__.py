@@ -1,0 +1,11 @@
+"""Fleet orchestration: one launcher that plans, spawns, merges, classifies.
+
+``SweepPlan`` (plan.py) declares the full grid — regions × modes × kernel
+size/q families — and ``run_fleet`` (executor.py) drives it end to end:
+spawn N subprocess shards, survive crashes, merge worker stores, classify
+from the merged store. ``python -m repro.fleet`` is the CLI.
+"""
+from repro.fleet.executor import (FleetError, FleetResult, FleetState,  # noqa: F401
+                                  in_process_launcher, run_fleet,
+                                  run_worker, subprocess_launcher)
+from repro.fleet.plan import PlanError, SweepPlan, TargetSpec  # noqa: F401

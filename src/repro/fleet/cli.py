@@ -1,0 +1,229 @@
+"""Fleet CLI — build plans, run fleets, inspect fleet state.
+
+    # declare a whole size/q family as one plan (2 subprocess shards)
+    PYTHONPATH=src python -m repro.fleet plan --out plan.json \
+        --pallas spmxv --sizes 256,512 --qs 0,1 --modes fp,vmem \
+        --shards 2 --reps 2 --backend interpret
+
+    # plan -> spawn -> merge -> classify (resumable; stores are ground truth)
+    PYTHONPATH=src python -m repro.fleet run --plan plan.json
+    PYTHONPATH=src python -m repro.fleet run --plan plan.json --resume
+    PYTHONPATH=src python -m repro.fleet run --plan plan.json --resume \
+        --expect-no-measure          # assert a completed fleet replays free
+
+    # where is my fleet?
+    PYTHONPATH=src python -m repro.fleet status --plan plan.json
+
+Multi-host: run ``python -m repro.launch.probe --plan plan.json --shard i/N``
+on each host against a shared filesystem (or copy the worker stores back),
+then ``run --resume`` anywhere to merge + classify. docs/orchestration.md
+has the full walkthrough.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Optional, Sequence
+
+CAMPAIGN_DIR = "experiments/campaigns/fleet"
+
+
+def _csv(text: str, cast) -> list:
+    return [cast(p.strip()) for p in text.split(",") if p.strip()]
+
+
+def _build_plan(args) -> "object":
+    from repro.fleet.plan import PlanError, SweepPlan, TargetSpec
+
+    if bool(args.pallas) == bool(args.arch):
+        raise SystemExit("plan: give exactly one of --pallas KERNEL or "
+                         "--arch ARCH")
+    if args.pallas:
+        from repro.kernels.region import KERNEL_MODES, SIZE_DEFAULT
+        if args.pallas not in KERNEL_MODES:
+            raise SystemExit(f"unknown pallas kernel {args.pallas!r}; one of "
+                             f"{', '.join(sorted(KERNEL_MODES))}")
+        modes = (_csv(args.modes, str) if args.modes
+                 else list(KERNEL_MODES[args.pallas]))
+        params = {"kernel": args.pallas,
+                  "sizes": (_csv(args.sizes, int) if args.sizes
+                            else [SIZE_DEFAULT[args.pallas]])}
+        if args.qs:
+            params["qs"] = _csv(args.qs, float)
+        if args.nnz_per_row is not None:
+            params["nnz_per_row"] = args.nnz_per_row
+        spec = TargetSpec("pallas", tuple(modes), params)
+        default_name = f"fleet_{args.pallas}"
+    else:
+        from repro.launch.probe import DEFAULT_GRAPH_MODES
+        modes = (_csv(args.modes, str) if args.modes
+                 else list(DEFAULT_GRAPH_MODES))
+        spec = TargetSpec("step", tuple(modes),
+                          {"arch": args.arch, "kind": args.kind,
+                           "seq": args.seq, "batch": args.batch})
+        default_name = f"fleet_{args.arch}_{args.kind}"
+    name = args.name or default_name
+    plan = SweepPlan(name=name,
+                     store=args.store or os.path.join(CAMPAIGN_DIR,
+                                                      f"{name}.jsonl"),
+                     targets=[spec], reps=args.reps, shards=args.shards,
+                     workers=args.workers,
+                     compile_once=not args.no_compile_once,
+                     backend=args.backend)
+    try:
+        plan.validate()
+    except PlanError as e:
+        raise SystemExit(f"plan: {e}")
+    return plan
+
+
+def _cmd_plan(args) -> int:
+    from repro.fleet.plan import PlanError
+
+    plan = _build_plan(args)
+    try:
+        grid = plan.grid()       # reject (e.g. duplicate pairs) BEFORE the
+    except PlanError as e:       # invalid plan file lands on disk
+        raise SystemExit(f"plan: {e}")
+    plan.save(args.out)
+    print(f"wrote plan {plan.name!r} [{plan.digest()}] -> {args.out}")
+    print(f"  {len(grid)} (region, mode) pair(s) over {plan.shards} "
+          f"shard(s); store: {plan.store}")
+    for r, m in grid:
+        print(f"    {r}/{m}")
+    print(f"run it:   PYTHONPATH=src python -m repro.fleet run "
+          f"--plan {args.out}")
+    return 0
+
+
+def _cmd_run(args) -> int:
+    from repro.fleet.executor import (FleetError, in_process_launcher,
+                                      run_fleet)
+
+    try:
+        res = run_fleet(args.plan, resume=args.resume, fresh=args.fresh,
+                        expect_no_measure=args.expect_no_measure,
+                        launcher=(in_process_launcher if args.in_process
+                                  else None))
+    except FleetError as e:
+        raise SystemExit(f"fleet: {e}")
+    print(f"fleet {res.plan.name!r} complete: {len(res.reports)} region(s) "
+          f"classified, shard(s) launched this run: "
+          f"{res.launched or 'none'}")
+    return 0
+
+
+def _cmd_status(args) -> int:
+    from repro.core import CampaignStore
+    from repro.fleet.executor import FleetState
+    from repro.fleet.plan import SweepPlan
+
+    plan = SweepPlan.load(args.plan)
+    grid = plan.grid()
+    print(f"plan {plan.name!r} [{plan.digest()}]: {len(grid)} pair(s), "
+          f"{plan.shards} shard(s), store {plan.store}")
+    fleet_path = plan.fleet_path()
+    if os.path.exists(fleet_path):
+        state = FleetState.load(fleet_path)
+        tag = ("" if state.plan_digest == plan.digest()
+               else f" (STALE: fleet built by {state.plan_digest})")
+        print(f"fleet state {fleet_path}{tag}:")
+        for i, ss in sorted(state.shards.items()):
+            extra = ""
+            if ss.measured is not None:
+                extra = f", {ss.measured} measured / {ss.cached} replayed"
+            print(f"  shard {i}: {ss.status} (attempts={ss.attempts}"
+                  f"{extra})")
+        if state.classification:
+            for name, c in sorted(state.classification.items()):
+                print(f"  {name}: {c['label']} ({c['confidence']})")
+    else:
+        print(f"fleet state {fleet_path}: not created yet")
+    incomplete_pairs = 0
+    if os.path.exists(plan.store):
+        st = CampaignStore(plan.store, readonly=True)
+        status = st.grid_status(grid)
+        incomplete_pairs = sum(not ps.complete for ps in status.values())
+        print(f"canonical store: {len(grid) - incomplete_pairs}/{len(grid)} "
+              "pair(s) complete")
+    else:
+        incomplete_pairs = len(grid)
+        print("canonical store: absent")
+    for i in range(plan.shards):
+        ws = plan.worker_stores()[i]
+        mine = grid[i::plan.shards]
+        if not os.path.exists(ws):
+            print(f"  worker store {i}: absent ({len(mine)} pair slice)")
+            continue
+        st = CampaignStore(ws, readonly=True)
+        done = sum(ps.complete for ps in st.grid_status(mine).values())
+        print(f"  worker store {i}: {done}/{len(mine)} slice pair(s) "
+              "complete")
+    return 1 if incomplete_pairs else 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fleet",
+        description="fleet orchestrator: plan, spawn, merge, classify")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    pp = sub.add_parser("plan", help="build a SweepPlan JSON")
+    pp.add_argument("--out", required=True, help="plan JSON path to write")
+    pp.add_argument("--name", default=None)
+    pp.add_argument("--store", default=None,
+                    help=f"campaign store (default: under {CAMPAIGN_DIR}/)")
+    pp.add_argument("--pallas", default=None, metavar="KERNEL",
+                    help="pallas kernel family target "
+                         "(matmul|spmxv|attention|probe)")
+    pp.add_argument("--sizes", default=None,
+                    help="comma list for the kernel's size knob "
+                         "(rows / seq / grid steps)")
+    pp.add_argument("--qs", default=None,
+                    help="comma list of swap probabilities (spmxv only)")
+    pp.add_argument("--nnz-per-row", type=int, default=None,
+                    help="spmxv nonzeros per row")
+    pp.add_argument("--arch", default=None,
+                    help="model-step target architecture")
+    pp.add_argument("--kind", default="train", choices=("train", "decode"))
+    pp.add_argument("--seq", type=int, default=128)
+    pp.add_argument("--batch", type=int, default=4)
+    pp.add_argument("--modes", default=None,
+                    help="comma list (default: the target's full mode set)")
+    pp.add_argument("--reps", type=int, default=2)
+    pp.add_argument("--shards", type=int, default=2)
+    pp.add_argument("--workers", type=int, default=1,
+                    help="threads per shard")
+    pp.add_argument("--backend", default="auto",
+                    choices=("auto", "interpret", "pallas"))
+    pp.add_argument("--no-compile-once", action="store_true")
+    pp.set_defaults(fn=_cmd_plan)
+
+    rp = sub.add_parser("run", help="plan -> spawn shards -> merge -> "
+                                    "classify (resumable)")
+    rp.add_argument("--plan", required=True)
+    rp.add_argument("--resume", action="store_true",
+                    help="continue an existing fleet: re-launch only "
+                         "incomplete shards; a complete fleet replays with "
+                         "zero new measurements")
+    rp.add_argument("--fresh", action="store_true",
+                    help="delete this plan's stores and fleet state first")
+    rp.add_argument("--expect-no-measure", action="store_true",
+                    help="exit non-zero if the finalize replay had to "
+                         "measure anything")
+    rp.add_argument("--in-process", action="store_true",
+                    help="run shards sequentially in this process instead "
+                         "of spawning subprocesses")
+    rp.set_defaults(fn=_cmd_run)
+
+    sp = sub.add_parser("status", help="show fleet/shard/store completeness "
+                                       "(exit 1 while incomplete)")
+    sp.add_argument("--plan", required=True)
+    sp.set_defaults(fn=_cmd_status)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

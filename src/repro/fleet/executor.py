@@ -1,0 +1,502 @@
+"""Fleet executor — plan in, classified report out, no hands in between.
+
+``run_fleet`` drives the whole pipeline the ROADMAP called the NEXT step:
+
+  spawn    N real subprocess shards (``python -m repro.launch.probe --plan P
+           --shard i/N``), each measuring its slice of the plan's grid into
+           its own worker store, output streamed line-prefixed;
+  survive  a killed shard leaves a truncated worker store; resume re-launches
+           ONLY the shards whose slice is incomplete, and the campaign layer
+           heals the torn tail and re-measures only the missing points;
+  merge    worker stores fold into the plan's canonical store
+           (``merge_stores`` — idempotent, atomic);
+  classify one ``Campaign.characterize`` per region replays the merged store
+           (a complete fleet classifies with ZERO new measurements) and the
+           cross-region report lands in ``<store>.report.json``.
+
+Ground truth is the stores, not the bookkeeping: shard completeness is
+decided by ``CampaignStore.grid_status`` against the plan's grid, so a lying
+or lost ``fleet.json`` can never cause double measurement or a hole.
+``fleet.json`` (next to the store) records the plan digest, per-shard
+status/attempts/stats, the merge manifest, and the final classification —
+the fleet's observable state for humans and the ``status`` CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import subprocess
+import sys
+import threading
+from typing import Callable, Optional, Sequence
+
+from repro.fleet.plan import SweepPlan
+
+log = logging.getLogger("repro.fleet")
+
+FLEET_SCHEMA = 1
+
+
+class FleetError(RuntimeError):
+    """Fleet-level failure the caller must act on (bad state, dead shards)."""
+
+
+# ---------------------------------------------------------------------------
+# reporting helpers (shared by the executor, the fleet CLI, and probe)
+# ---------------------------------------------------------------------------
+
+
+def finish_stats(stats, expect_no_measure: bool) -> None:
+    """The campaign tail every entry point prints; ``--expect-no-measure``
+    turns "the store fully covers this run" into an exit code."""
+    print(f"  [{stats.measured} points measured, "
+          f"{stats.cached} replayed from store]")
+    if expect_no_measure and stats.measured:
+        raise SystemExit(
+            f"--expect-no-measure: store was incomplete, {stats.measured} "
+            "fresh measurements were needed")
+
+
+def print_report(rep, *, name_line: bool = False) -> None:
+    if name_line:
+        print(f"  -- {rep.region} (|body|={rep.body_size})")
+    for m, r in rep.results.items():
+        inj = r.injection
+        pay = (f"payload={inj.payload}/{inj.expected} overhead={inj.overhead}"
+               if inj else "payload=n/a")
+        print(f"  {m:14s} Abs^raw={r.fit.k1:7.1f} t0={r.fit.t0*1e3:8.2f}ms "
+              f"slope={r.fit.slope*1e6:9.2f}us/pat {pay}")
+    print(f"  => {rep.bottleneck}")
+
+
+def report_json(reports: dict) -> str:
+    """Canonical serialization of {region: RegionReport} — sorted keys and
+    regions, so two runs of the same plan produce byte-comparable files."""
+    return json.dumps({name: json.loads(rep.to_json())
+                       for name, rep in sorted(reports.items())},
+                      indent=1, sort_keys=True)
+
+
+def write_report(path: str, reports: dict) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(report_json(reports) + "\n")
+    os.replace(tmp, path)
+    return path
+
+
+def characterize_region(region, modes: Sequence[str], *, controller,
+                        store: str, echo_stats: bool = True):
+    """Store-backed characterize of ONE region — the spine the benchmark
+    harness rides (``benchmarks.common.characterize``)."""
+    from repro.core import Campaign
+
+    camp = Campaign(store, controller)
+    try:
+        rep = camp.characterize(region, list(modes))
+    finally:
+        camp.store.close()
+    if echo_stats and camp.stats.cached:
+        print(f"  [{region.name}: {camp.stats.cached} points from store, "
+              f"{camp.stats.measured} measured]")
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# the single-process worker entry (probe --plan lands here)
+# ---------------------------------------------------------------------------
+
+
+def _stats_path(store: str) -> str:
+    return store + ".stats.json"
+
+
+def _write_worker_stats(store: str, stats) -> None:
+    with open(_stats_path(store), "w") as f:
+        json.dump({"measured": stats.measured, "cached": stats.cached}, f)
+
+
+def _read_worker_stats(store: str) -> Optional[dict]:
+    try:
+        with open(_stats_path(store)) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
+               count: Optional[int] = None, fresh: bool = False,
+               expect_no_measure: bool = False,
+               header: Optional[str] = None):
+    """Execute a plan (or one shard of it) in THIS process.
+
+    ``index``/``count`` given: measure shard ``index`` of ``count``'s slice
+    of the plan's pair grid into its worker store and stop — classification
+    happens after the merge. Without a shard: run the whole grid into the
+    canonical store, classify every region, and write the report file.
+
+    Returns ``(results_or_reports, CampaignStats)``.
+    """
+    from repro.core import Campaign, Controller, worker_store
+
+    if index is not None:
+        count = plan.shards if count is None else count
+        if count != plan.shards:
+            raise FleetError(f"--shard I/N count {count} does not match the "
+                             f"plan's shards={plan.shards}; the slice "
+                             "assignment is part of the plan")
+        store = worker_store(plan.store, index, count)
+    else:
+        store = plan.store
+    if fresh and os.path.exists(store):
+        os.unlink(store)
+    title = header or f"fleet plan {plan.name!r} [{plan.digest()}]"
+    plan.grid()     # rejects plans whose targets enumerate duplicate pairs
+    ctl = Controller(reps=plan.reps, compile_once=plan.compile_once)
+    camp = Campaign(store, ctl, workers=plan.workers)
+    try:
+        pairs = plan.pairs()
+        if index is not None:
+            print(f"== {title} [shard {index}/{count}] ({len(pairs)}-pair "
+                  f"grid; worker store: {store})")
+            res = camp.measure_pairs(pairs, index=index, count=count)
+            for (r, m), mr in sorted(res.items()):
+                print(f"  {r}/{m}: Abs^raw={mr.fit.k1:7.1f} "
+                      f"t0={mr.fit.t0*1e3:8.2f}ms")
+            if not res:
+                print(f"  (no pairs land on shard {index} of {count})")
+            print("  [classification happens after the merge; a shard sees "
+                  "only its slice]")
+            _write_worker_stats(store, camp.stats)
+            finish_stats(camp.stats, expect_no_measure)
+            return res, camp.stats
+
+        print(f"== {title} (campaign store: {store})")
+        reports = {}
+        many = sum(len(regions) for _, regions in plan.resolve()) > 1
+        for spec, regions in plan.resolve():
+            for region in regions:
+                rep = camp.characterize(region, list(spec.modes))
+                reports[region.name] = rep
+                print_report(rep, name_line=many)
+        write_report(plan.report_path(), reports)
+        finish_stats(camp.stats, expect_no_measure)
+        return reports, camp.stats
+    finally:
+        camp.store.close()
+
+
+# ---------------------------------------------------------------------------
+# fleet state (fleet.json)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardState:
+    index: int
+    store: str
+    status: str = "pending"      # pending | running | done | failed
+    returncode: Optional[int] = None
+    attempts: int = 0
+    measured: Optional[int] = None
+    cached: Optional[int] = None
+
+
+class FleetState:
+    """The durable fleet ledger. Advisory (stores are ground truth), but it
+    is what ``status`` shows and what resume uses to report history."""
+
+    def __init__(self, path: str, plan_digest: str,
+                 shard_stores: Sequence[str]):
+        self.path = path
+        self.plan_digest = plan_digest
+        self.shards = {i: ShardState(i, s)
+                       for i, s in enumerate(shard_stores)}
+        self.merge: Optional[dict] = None
+        self.classification: Optional[dict] = None
+        self.stats: Optional[dict] = None
+
+    def to_dict(self) -> dict:
+        return {"fleet": FLEET_SCHEMA, "plan": self.plan_digest,
+                "shards": {str(i): dataclasses.asdict(s)
+                           for i, s in self.shards.items()},
+                "merge": self.merge, "classification": self.classification,
+                "stats": self.stats}
+
+    def save(self) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self.path)
+
+    @classmethod
+    def load(cls, path: str) -> "FleetState":
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("fleet") != FLEET_SCHEMA:
+            raise FleetError(f"{path}: not a fleet state file "
+                             f"(fleet={d.get('fleet')!r})")
+        state = cls(path, d.get("plan", ""), [])
+        state.shards = {int(i): ShardState(**s)
+                        for i, s in d.get("shards", {}).items()}
+        state.merge = d.get("merge")
+        state.classification = d.get("classification")
+        state.stats = d.get("stats")
+        return state
+
+
+# ---------------------------------------------------------------------------
+# shard launchers
+# ---------------------------------------------------------------------------
+
+
+def _worker_env() -> dict:
+    """The parent's environment, with this repro's src dir on PYTHONPATH so
+    ``-m repro.launch.probe`` resolves in the subprocess regardless of how
+    the parent itself was launched (installed, PYTHONPATH, conftest hack)."""
+    import repro
+
+    # repro is a namespace package: __file__ is None, __path__ holds the dir
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ)
+    parts = [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+    if src not in parts:
+        env["PYTHONPATH"] = os.pathsep.join([src] + parts)
+    return env
+
+
+def _pump(pipe, prefix: str) -> None:
+    for line in pipe:
+        print(prefix + line.rstrip("\n"), flush=True)
+
+
+def subprocess_launcher(plan_path: str, plan: SweepPlan,
+                        indices: Sequence[int]) -> dict[int, int]:
+    """Spawn one ``python -m repro.launch.probe --plan P --shard i/N`` per
+    index — all concurrently (the grid is embarrassingly parallel; wall-clock
+    interference between co-located shards is the fan-out's price and the
+    per-host recipe in docs/orchestration.md is the escape). Output streams
+    line-prefixed; returns {index: returncode}."""
+    procs: dict[int, tuple] = {}
+    env = _worker_env()
+    for i in indices:
+        cmd = [sys.executable, "-m", "repro.launch.probe",
+               "--plan", plan_path, "--shard", f"{i}/{plan.shards}"]
+        p = subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                             stderr=subprocess.STDOUT, text=True, bufsize=1,
+                             env=env)
+        t = threading.Thread(target=_pump,
+                             args=(p.stdout, f"[shard {i}/{plan.shards}] "),
+                             daemon=True)
+        t.start()
+        procs[i] = (p, t)
+    rcs: dict[int, int] = {}
+    for i, (p, t) in procs.items():
+        rcs[i] = p.wait()
+        t.join(timeout=5)
+    return rcs
+
+
+def in_process_launcher(plan_path: str, plan: SweepPlan,
+                        indices: Sequence[int]) -> dict[int, int]:
+    """Run shards sequentially in THIS process — ``run --in-process`` for
+    spawn-restricted environments, and the executor tests' fast path. Each
+    shard still re-loads the plan from disk, like a real worker would."""
+    rcs: dict[int, int] = {}
+    for i in indices:
+        try:
+            run_worker(SweepPlan.load(plan_path), index=i, count=plan.shards)
+            rcs[i] = 0
+        except SystemExit as e:
+            rcs[i] = int(bool(e.code))
+        except Exception:
+            log.warning("in-process shard %d failed", i, exc_info=True)
+            rcs[i] = 1
+    return rcs
+
+
+# ---------------------------------------------------------------------------
+# the fleet pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetResult:
+    plan: SweepPlan
+    reports: dict
+    stats: object                    # CampaignStats of the finalize replay
+    state: FleetState
+    launched: list[int]              # shard indices (re)launched this run
+
+
+def _incomplete_shards(plan: SweepPlan, grid) -> list[int]:
+    """Which shards still owe measurements — decided from the stores alone.
+
+    The canonical store is consulted first: once a fleet has merged (or the
+    same plan ran single-process), a complete canonical store means NO shard
+    has anything left to do, even if worker stores were deleted."""
+    from repro.core import CampaignStore
+
+    if os.path.exists(plan.store):
+        st = CampaignStore(plan.store, readonly=True)
+        if all(ps.complete for ps in st.grid_status(grid).values()):
+            return []
+    out = []
+    for i in range(plan.shards):
+        mine = grid[i::plan.shards]
+        if not mine:
+            continue
+        ws = plan.worker_stores()[i]
+        if not os.path.exists(ws):
+            out.append(i)
+            continue
+        # readonly: completeness probing must not heal anything — the worker
+        # owns its store and heals the torn tail itself on relaunch
+        st = CampaignStore(ws, readonly=True)
+        if not all(ps.complete for ps in st.grid_status(mine).values()):
+            out.append(i)
+    return out
+
+
+def _classify(plan: SweepPlan):
+    """Merge-side finalize: replay the canonical store into one RegionReport
+    per region (a complete store measures nothing here)."""
+    from repro.core import Campaign, Controller
+
+    ctl = Controller(reps=plan.reps, compile_once=plan.compile_once)
+    camp = Campaign(plan.store, ctl, workers=plan.workers)
+    try:
+        reports = {}
+        for spec, regions in plan.resolve():
+            for region in regions:
+                reports[region.name] = camp.characterize(region,
+                                                         list(spec.modes))
+    finally:
+        camp.store.close()
+    return reports, camp.stats
+
+
+def _clean_fleet(plan: SweepPlan) -> None:
+    paths = [plan.store, plan.fleet_path(), plan.report_path()]
+    for ws in plan.worker_stores():
+        paths += [ws, _stats_path(ws)]
+    for p in paths:
+        if os.path.exists(p):
+            os.unlink(p)
+
+
+def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
+              expect_no_measure: bool = False,
+              launcher: Optional[Callable] = None) -> FleetResult:
+    """Plan → spawn → merge → classify, resumably.
+
+    * first run: launches every shard whose slice is incomplete (all of
+      them), merges, classifies;
+    * ``resume`` after a crash: re-launches ONLY incomplete shards (their
+      worker stores heal and re-measure only missing points), then merges
+      and classifies as usual;
+    * ``resume`` on a completed fleet: launches nothing and the classify
+      step replays the canonical store with ZERO new measurements;
+    * ``fresh``: delete every store/state file of this plan first.
+
+    Raises ``FleetError`` when fleet state exists for a different plan
+    digest, when state exists and neither flag was given, or when launched
+    shards still owe measurements afterwards.
+    """
+    plan = SweepPlan.load(plan_path)
+    if fresh:
+        _clean_fleet(plan)
+    fleet_path = plan.fleet_path()
+    state = None
+    if os.path.exists(fleet_path):
+        state = FleetState.load(fleet_path)
+        if state.plan_digest != plan.digest():
+            raise FleetError(
+                f"{fleet_path} belongs to plan digest {state.plan_digest}, "
+                f"this plan is {plan.digest()}; a changed plan must not "
+                "splice into old shards — use --fresh to restart")
+        if not resume:
+            raise FleetError(
+                f"{fleet_path} already exists; use --resume to continue (or "
+                "replay) this fleet, or --fresh to restart it")
+    grid = plan.grid()
+    if state is None:
+        state = FleetState(fleet_path, plan.digest(), plan.worker_stores())
+
+    incomplete = _incomplete_shards(plan, grid)
+    for i, ss in state.shards.items():
+        ss.status = "pending" if i in incomplete else "done"
+    state.save()
+
+    launched = list(incomplete)
+    if incomplete:
+        print(f"== fleet {plan.name!r} [{plan.digest()}]: "
+              f"{len(grid)}-pair grid, launching shard(s) "
+              f"{incomplete} of {plan.shards}")
+        for i in incomplete:
+            state.shards[i].status = "running"
+            state.shards[i].attempts += 1
+        state.save()
+        rcs = (launcher or subprocess_launcher)(plan_path, plan, incomplete)
+        still = set(_incomplete_shards(plan, grid))
+        for i in incomplete:
+            ss = state.shards[i]
+            ss.returncode = rcs.get(i)
+            ss.status = "failed" if i in still else "done"
+            wstats = _read_worker_stats(ss.store)
+            if wstats:
+                ss.measured = wstats.get("measured")
+                ss.cached = wstats.get("cached")
+        state.save()
+        if still:
+            codes = {i: rcs.get(i) for i in sorted(still)}
+            raise FleetError(
+                f"shard(s) {sorted(still)} did not complete (returncodes "
+                f"{codes}); completed work is preserved in the worker "
+                "stores — re-run with --resume to heal and finish them")
+    else:
+        print(f"== fleet {plan.name!r} [{plan.digest()}]: all "
+              f"{plan.shards} shard slice(s) already complete, "
+              "nothing to launch")
+
+    from repro.core import merge_stores
+
+    sources = [ws for ws in plan.worker_stores() if os.path.exists(ws)]
+    if sources:
+        # the canonical store (when present) streams FIRST so freshly
+        # re-measured worker records supersede any stale merged ones
+        if os.path.exists(plan.store):
+            sources = [plan.store] + sources
+        mstats = merge_stores(plan.store, sources)
+        state.merge = {"dest": plan.store, "sources": sources,
+                       "records_in": mstats.records_in,
+                       "records_out": mstats.records_out,
+                       "conflicts": sorted(set(map(tuple, mstats.conflicts)))}
+        state.merge["conflicts"] = [list(c) for c in
+                                    state.merge["conflicts"]]
+        print(f"== merge: {mstats}")
+
+    reports, cstats = _classify(plan)
+    state.classification = {
+        name: {"label": rep.bottleneck.label,
+               "confidence": rep.bottleneck.confidence,
+               "abs": rep.absorptions()}
+        for name, rep in sorted(reports.items())}
+    state.stats = {"measured": cstats.measured, "cached": cstats.cached}
+    state.save()
+    write_report(plan.report_path(), reports)
+    print(f"== classification ({plan.report_path()}):")
+    for name, rep in sorted(reports.items()):
+        print(f"  {name}: {rep.bottleneck}")
+    finish_stats(cstats, expect_no_measure)
+    return FleetResult(plan=plan, reports=reports, stats=cstats, state=state,
+                       launched=launched)

@@ -1,0 +1,250 @@
+"""SweepPlan — the declarative unit of fleet work.
+
+A plan enumerates the FULL measurement grid up front — regions × modes × ks
+× reps × kernel size/q families — and serializes to JSON next to the store,
+so every participant (the launcher, each worker subprocess, a human at the
+``inspect`` CLI) agrees on exactly the same grid in exactly the same order:
+
+  * ``targets`` is a list of declarative ``TargetSpec``s, not live objects —
+    a spec resolves to one or more RegionTargets in whatever process needs
+    them (the whole point: a subprocess shard rebuilds its regions from the
+    plan file alone);
+  * a "pallas" spec spans a whole size/q FAMILY (``kernels.region.
+    pallas_family``): one plan — and one campaign store — holds a kernel's
+    entire grid;
+  * ``pairs()``/``grid()`` fix the canonical (region, mode) enumeration
+    (region-major, mode-minor, targets in declaration order). Worker ``i`` of
+    ``N`` measures every N-th pair — the same slicing as
+    ``Campaign.measure_pairs`` — so the plan file IS the shard assignment;
+  * ``digest()`` hashes the canonical JSON; fleet state pins it so a resumed
+    fleet can refuse to splice shards measured under a different plan.
+
+Plan JSON (one object, schema-versioned):
+
+  {"sweep_plan": 1, "name": ..., "store": ..., "reps": 2, "shards": 2,
+   "workers": 1, "compile_once": true, "backend": "interpret",
+   "targets": [{"kind": "pallas", "modes": ["fp", "vmem"],
+                "params": {"kernel": "spmxv", "sizes": [256, 512],
+                           "qs": [0.0, 1.0], "nnz_per_row": 16}},
+               {"kind": "step", "modes": ["fp_add32", "vmem_ld"],
+                "params": {"arch": "gemma_2b", "kind": "train",
+                           "seq": 64, "batch": 2}}]}
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+
+PLAN_SCHEMA = 1
+
+
+class PlanError(ValueError):
+    """A plan file (or plan construction) is invalid."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetSpec:
+    """One declarative target family: what to measure and under which modes.
+
+    kinds:
+      * "pallas" — params {kernel, sizes[, qs, ...spec kwargs]}; resolves via
+        ``pallas_family`` to one RegionTarget per size/q;
+      * "step"   — params {arch[, kind, seq, batch]}; resolves via
+        ``repro.launch.probe.build_step_region`` to one model-step region.
+    """
+    kind: str
+    modes: tuple[str, ...]
+    params: dict
+
+    def validate(self) -> None:
+        if not self.modes:
+            raise PlanError(f"target {self.kind!r} has no modes")
+        if self.kind == "pallas":
+            from repro.kernels.region import KERNEL_MODES, check_family_args
+            kernel = self.params.get("kernel")
+            if kernel not in KERNEL_MODES:
+                raise PlanError(f"unknown pallas kernel {kernel!r}; one of "
+                                f"{sorted(KERNEL_MODES)}")
+            sizes = self.params.get("sizes")
+            if not sizes:
+                raise PlanError(f"pallas target {kernel!r} needs a non-empty "
+                                "sizes list")
+            try:
+                # full family-argument rules (qs scope, unknown spec params,
+                # size alignment) — a bad family must fail at plan BUILD
+                # time, not in every worker subprocess at resolve time
+                check_family_args(kernel, sizes, self.params.get("qs"),
+                                  self._extra_params())
+            except ValueError as e:
+                raise PlanError(str(e)) from e
+            bad = [m for m in self.modes if m not in KERNEL_MODES[kernel]]
+            if bad:
+                raise PlanError(f"kernel {kernel!r} supports modes "
+                                f"{KERNEL_MODES[kernel]}, not {bad}")
+        elif self.kind == "step":
+            if not self.params.get("arch"):
+                raise PlanError("step target needs an 'arch'")
+            from repro.core.noise import make_modes
+            bad = [m for m in self.modes if m not in make_modes()]
+            if bad:
+                raise PlanError(f"unknown graph-level mode(s) {bad}")
+        else:
+            raise PlanError(f"unknown target kind {self.kind!r}; "
+                            "one of ['pallas', 'step']")
+
+    def _extra_params(self) -> dict:
+        return {k: v for k, v in self.params.items()
+                if k not in ("kernel", "sizes", "qs")}
+
+    def resolve(self, backend: str = "auto") -> list:
+        """Build this spec's RegionTargets (in the calling process)."""
+        if self.kind == "pallas":
+            from repro.kernels.region import pallas_family
+            return pallas_family(self.params["kernel"], self.params["sizes"],
+                                 qs=self.params.get("qs"), backend=backend,
+                                 **self._extra_params())
+        from repro.launch.probe import build_step_region
+        p = self.params
+        return [build_step_region(p["arch"], p.get("kind", "train"),
+                                  list(self.modes), seq=int(p.get("seq", 128)),
+                                  batch=int(p.get("batch", 4)))]
+
+    def region_names(self) -> list[str]:
+        """The names ``resolve()``'s regions will carry, derived WITHOUT
+        building anything — grid queries (status, inspect, the launcher's
+        completeness checks) must stay cheap even for model-step targets."""
+        if self.kind == "pallas":
+            from repro.kernels.region import family_names
+            return family_names(self.params["kernel"], self.params["sizes"],
+                                qs=self.params.get("qs"),
+                                **self._extra_params())
+        from repro.configs import get_smoke_config   # a dataclass, no jax
+        p = self.params
+        return [f"{get_smoke_config(p['arch']).name}_{p.get('kind', 'train')}"
+                f"_s{int(p.get('seq', 128))}_b{int(p.get('batch', 4))}"]
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "modes": list(self.modes),
+                "params": self.params}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TargetSpec":
+        return cls(kind=d.get("kind", ""), modes=tuple(d.get("modes", ())),
+                   params=dict(d.get("params", {})))
+
+
+@dataclasses.dataclass
+class SweepPlan:
+    """The full declarative grid plus every setting that shapes measurement
+    (reps, compile path, backend) and distribution (shards, threads)."""
+    name: str
+    store: str
+    targets: list[TargetSpec]
+    reps: int = 2
+    shards: int = 1
+    workers: int = 1
+    compile_once: bool = True
+    backend: str = "auto"
+
+    # -- validation / identity ----------------------------------------------
+    def validate(self) -> None:
+        if not self.name:
+            raise PlanError("plan needs a name")
+        if not self.store:
+            raise PlanError("plan needs a store path")
+        if not self.targets:
+            raise PlanError("plan has no targets")
+        if self.shards < 1 or self.workers < 1 or self.reps < 1:
+            raise PlanError("shards, workers and reps must be >= 1")
+        for spec in self.targets:
+            spec.validate()
+
+    def to_dict(self) -> dict:
+        return {"sweep_plan": PLAN_SCHEMA, "name": self.name,
+                "store": self.store, "reps": self.reps,
+                "shards": self.shards, "workers": self.workers,
+                "compile_once": self.compile_once, "backend": self.backend,
+                "targets": [t.to_dict() for t in self.targets]}
+
+    def canonical_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    def digest(self) -> str:
+        """Content hash pinning the grid AND the measurement settings —
+        fleet state refuses to splice shards from a different digest."""
+        return hashlib.sha256(self.canonical_json().encode()).hexdigest()[:12]
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> str:
+        self.validate()
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({**self.to_dict(), "digest": self.digest()}, f,
+                      indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SweepPlan":
+        if d.get("sweep_plan") != PLAN_SCHEMA:
+            raise PlanError(f"not a sweep plan (sweep_plan="
+                            f"{d.get('sweep_plan')!r}, want {PLAN_SCHEMA})")
+        plan = cls(name=d.get("name", ""), store=d.get("store", ""),
+                   targets=[TargetSpec.from_dict(t)
+                            for t in d.get("targets", [])],
+                   reps=int(d.get("reps", 2)), shards=int(d.get("shards", 1)),
+                   workers=int(d.get("workers", 1)),
+                   compile_once=bool(d.get("compile_once", True)),
+                   backend=d.get("backend", "auto"))
+        plan.validate()
+        return plan
+
+    @classmethod
+    def load(cls, path: str) -> "SweepPlan":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    # -- the canonical grid --------------------------------------------------
+    def resolve(self) -> list[tuple[TargetSpec, list]]:
+        """Resolve every spec (cached: a plan resolves once per process, so
+        all grid queries see the SAME RegionTarget objects)."""
+        if getattr(self, "_resolved", None) is None:
+            self._resolved = [(spec, spec.resolve(self.backend))
+                              for spec in self.targets]
+        return self._resolved
+
+    def pairs(self) -> list[tuple[object, str]]:
+        """The full (RegionTarget, mode) grid in canonical order — the exact
+        sequence ``Campaign.measure_pairs`` slices across workers."""
+        return [(region, mode) for spec, regions in self.resolve()
+                for region in regions for mode in spec.modes]
+
+    def grid(self) -> list[tuple[str, str]]:
+        """The grid by (region name, mode), WITHOUT resolving targets —
+        completeness queries, status and the launcher stay cheap (a step
+        target otherwise builds a whole model just to learn its name).
+        Same enumeration order as ``pairs()``; pinned by tests."""
+        out = [(name, mode) for spec in self.targets
+               for name in spec.region_names() for mode in spec.modes]
+        if len(set(out)) != len(out):
+            raise PlanError(f"plan {self.name!r} enumerates duplicate "
+                            "(region, mode) pairs; targets must not overlap")
+        return out
+
+    # -- derived paths -------------------------------------------------------
+    def worker_stores(self) -> list[str]:
+        from repro.core.campaign import worker_store
+        return [worker_store(self.store, i, self.shards)
+                for i in range(self.shards)]
+
+    def fleet_path(self) -> str:
+        return os.path.splitext(self.store)[0] + ".fleet.json"
+
+    def report_path(self) -> str:
+        return os.path.splitext(self.store)[0] + ".report.json"

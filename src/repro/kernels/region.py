@@ -54,8 +54,55 @@ KERNEL_MODES = {
     "probe": ("fp", "mxu", "vmem"),
 }
 
+# per-kernel meaning of the one "size" knob a family sweeps, its default, and
+# the block width it must tile (sizes below one block are allowed: the block
+# shrinks; 'probe' counts grid steps — any positive size is fine)
+SIZE_KW = {"matmul": "n", "spmxv": "n", "attention": "seq", "probe": "n_steps"}
+SIZE_DEFAULT = {"matmul": 256, "spmxv": 512, "attention": 128, "probe": 64}
+SIZE_ALIGN = {"matmul": 128, "spmxv": 128, "attention": 64, "probe": 1}
+
+
+def validate_size(kernel: str, n: int) -> None:
+    """The size rule every entry point (probe CLI, fleet plans, families)
+    shares: noise patterns read 8-row groups, and sizes past one block must
+    tile evenly."""
+    if kernel not in SIZE_KW:
+        raise ValueError(f"unknown pallas kernel {kernel!r}; "
+                         f"one of {sorted(SIZE_KW)}")
+    align = SIZE_ALIGN[kernel]
+    if n < 1:
+        raise ValueError(f"size for {kernel!r} must be positive; got {n}")
+    if align > 1 and (n < 8 or (n > align and n % align)):
+        raise ValueError(
+            f"size for {kernel!r} must be >= 8 and a multiple of its "
+            f"{align}-wide block (or smaller than one block); got {n}")
+
 # which resource one pattern of each kernel mode stresses (payload reports)
 MODE_TARGETS = {"fp": "compute", "mxu": "compute", "vmem": "vmem"}
+
+
+# region-name derivation, shared by the spec builders below and by
+# ``family_names`` (cheap grid queries — fleet status/inspect must learn a
+# family's region names without building a single jax array). Defaults here
+# mirror the builder signatures; ``test_pallas_region`` pins the agreement.
+def _matmul_name(*, n=256, **_):
+    return f"pallas_matmul_n{n}"
+
+
+def _spmxv_name(*, n=512, nnz_per_row=16, q=0.0, **_):
+    return f"pallas_spmxv_n{n}_L{nnz_per_row}_q" + f"{q:g}".replace(".", "p")
+
+
+def _attention_name(*, batch=1, heads=2, seq=128, head_dim=64, **_):
+    return f"pallas_attn_b{batch}h{heads}s{seq}d{head_dim}"
+
+
+def _probe_name(*, n_steps=64, **_):
+    return f"pallas_probe_s{n_steps}"
+
+
+_NAMERS = {"matmul": _matmul_name, "spmxv": _spmxv_name,
+           "attention": _attention_name, "probe": _probe_name}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +141,7 @@ def _matmul_spec(interpret: bool, *, n: int = 256, bm: int = 128,
             return ns.expected_fp_noise(noise, k, grid_steps)
         return None
 
-    return _KernelSpec(f"pallas_matmul_n{n}", (a, b, noise), static_fn,
+    return _KernelSpec(_matmul_name(n=n), (a, b, noise), static_fn,
                        rt_fn, oracle, grid_steps, body_size=3)
 
 
@@ -121,8 +168,7 @@ def _spmxv_spec(interpret: bool, *, n: int = 512, nnz_per_row: int = 16,
             return vmem_noise_ell_ref(vals, k, br)
         return None
 
-    qs = f"{q:g}".replace(".", "p")
-    return _KernelSpec(f"pallas_spmxv_n{n}_L{nnz_per_row}_q{qs}",
+    return _KernelSpec(_spmxv_name(n=n, nnz_per_row=nnz_per_row, q=q),
                        (vals, cols, x), static_fn, rt_fn, oracle, nb,
                        body_size=4)
 
@@ -160,7 +206,8 @@ def _attention_spec(interpret: bool, *, batch: int = 1, heads: int = 2,
             return ns.expected_fp_noise(noise, kn, grid_steps)
         return None
 
-    return _KernelSpec(f"pallas_attn_b{batch}h{heads}s{seq}d{head_dim}",
+    return _KernelSpec(_attention_name(batch=batch, heads=heads, seq=seq,
+                                       head_dim=head_dim),
                        (q, k, v, noise), static_fn, rt_fn, oracle,
                        grid_steps, body_size=12)
 
@@ -180,7 +227,7 @@ def _probe_spec(interpret: bool, *, n_steps: int = 64) -> _KernelSpec:
     def oracle(mode, k):
         return probe_ref(noise, mode=mode, k_noise=k, n_steps=n_steps)
 
-    return _KernelSpec(f"pallas_probe_s{n_steps}", (noise,), static_fn,
+    return _KernelSpec(_probe_name(n_steps=n_steps), (noise,), static_fn,
                        rt_fn, oracle, n_steps, body_size=1)
 
 
@@ -268,3 +315,75 @@ def pallas_region(kernel: str, *, backend: str = "auto", name: str = "",
                         payload_target=dict(MODE_TARGETS),
                         build_rt=build_rt, args_for_rt=args_for_rt,
                         payload_check=payload_check)
+
+
+def family_params(kernel: str) -> frozenset:
+    """Keyword params the kernel's spec builder accepts — the allowlist
+    plan validation checks declarative params against."""
+    import inspect
+
+    sig = inspect.signature(_SPECS[kernel])
+    return frozenset(p.name for p in sig.parameters.values()
+                     if p.kind == p.KEYWORD_ONLY)
+
+
+def check_family_args(kernel: str, sizes, qs, common: dict) -> None:
+    """The family argument rules, shared by ``pallas_family``,
+    ``family_names`` and SweepPlan validation — so a bad family is rejected
+    when the plan is BUILT, not when a worker subprocess resolves it."""
+    if kernel not in _SPECS:
+        raise ValueError(f"unknown pallas kernel {kernel!r}; "
+                         f"one of {sorted(_SPECS)}")
+    if qs is not None and kernel != "spmxv":
+        raise ValueError(f"qs= applies to the 'spmxv' kernel only, "
+                         f"not {kernel!r}")
+    allowed = family_params(kernel) - {SIZE_KW[kernel], "q"}
+    bad = sorted(set(common) - allowed)
+    if bad:
+        raise ValueError(f"kernel {kernel!r} spec does not accept param(s) "
+                         f"{bad}; allowed: {sorted(allowed)}")
+    for n in sizes:
+        validate_size(kernel, int(n))
+
+
+def _family_grid(kernel: str, sizes, qs):
+    for n in sizes:
+        for q in (qs if qs is not None else (None,)):
+            kw = {SIZE_KW[kernel]: int(n)}
+            if q is not None:
+                kw["q"] = float(q)
+            yield kw
+
+
+def family_names(kernel: str, sizes, *, qs=None, **common) -> list[str]:
+    """The region names ``pallas_family(kernel, sizes, qs=qs, **common)``
+    would produce, WITHOUT building a single jax array — what fleet
+    status/inspect/launch use to enumerate a plan's grid cheaply."""
+    check_family_args(kernel, sizes, qs, common)
+    return [_NAMERS[kernel](**{**common, **kw})
+            for kw in _family_grid(kernel, sizes, qs)]
+
+
+def pallas_family(kernel: str, sizes, *, qs=None, backend: str = "auto",
+                  trace_hook: Optional[Callable[[], None]] = None,
+                  **common) -> list[RegionTarget]:
+    """One RegionTarget per size (× swap probability q for spmxv), sharing
+    one campaign-store namespace.
+
+    The grid a kernel's characterization really spans is a size/q FAMILY —
+    fig4 sweeps matmul n, fig7 sweeps the spmxv (n, q) plane — and every
+    member's spec encodes its coordinates in the region name, so a single
+    campaign store (and a single fleet plan) holds the whole family's
+    (region, mode, k, t) records side by side. ``sizes`` drives the kernel's
+    size knob (``SIZE_KW``); ``qs`` is spmxv-only; ``common`` (e.g.
+    ``nnz_per_row=``) is forwarded to every member's spec builder.
+    """
+    check_family_args(kernel, sizes, qs, common)
+    out = [pallas_region(kernel, backend=backend, trace_hook=trace_hook,
+                         **{**common, **kw})
+           for kw in _family_grid(kernel, sizes, qs)]
+    names = [r.name for r in out]
+    if len(set(names)) != len(names):
+        raise ValueError(f"family members collide in one store namespace: "
+                         f"{names}")
+    return out

@@ -1,5 +1,12 @@
 """Noise-injection bottleneck probe — the paper's tool applied to this
-framework's own train/serve steps and to the Pallas kernel layer.
+framework's own train/serve steps and to the Pallas kernel layer, and the
+FLEET's single-process worker entry.
+
+Every measured path runs through the fleet plan/executor spine
+(``repro.fleet``): the CLI flags build a one-target ``SweepPlan`` and hand it
+to ``run_worker`` — the same code path a fleet shard executes — so ad-hoc
+probes, subprocess shards, and declarative plan files all measure through
+one campaign tail (store naming, shard dispatch, reporting).
 
 Measured mode (default; reduced config, host backend) runs as a resumable
 CAMPAIGN: every (mode, k, t) point persists to a JSONL store under
@@ -19,13 +26,18 @@ sweep compiles ≤2 Pallas executables per mode:
     PYTHONPATH=src python -m repro.launch.probe --pallas spmxv \
         [--modes fp,vmem] [--store PATH] [--expect-no-measure]
 
-Multi-host fan-out: give each host/process ``--shard I/N`` — it measures a
-disjoint slice of the mode grid into its own per-worker store (the base
-store name with a ``.wIofN`` suffix). When all shards finish, merge and
-replay:
+Fleet worker mode executes a slice of a saved ``SweepPlan`` — this is what
+``python -m repro.fleet run`` spawns, and the per-host command of the
+multi-host recipe (docs/orchestration.md):
 
-    python -m repro.core.campaign merge STORE STORE.w0of2.jsonl STORE.w1of2.jsonl
-    python -m repro.launch.probe ... --store STORE --expect-no-measure
+    PYTHONPATH=src python -m repro.launch.probe --plan plan.json --shard 0/2
+    PYTHONPATH=src python -m repro.launch.probe --plan plan.json \
+        --expect-no-measure        # whole plan in-process; replay check
+
+Legacy ad-hoc fan-out still works: ``--shard I/N`` without ``--plan``
+measures a disjoint slice of the flag-built grid into a per-worker store;
+merge afterwards with ``python -m repro.core.campaign merge`` (or just run
+the same grid as a plan through ``repro.fleet``, which merges for you).
 
 ``--expect-no-measure`` turns "the store fully covers this probe" into an
 exit code, so scripts and CI can assert the round-trip measured nothing.
@@ -46,7 +58,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -57,62 +69,11 @@ CAMPAIGN_DIR = "experiments/campaigns"
 DEFAULT_GRAPH_MODES = ("fp_add32", "mxu_fma128", "vmem_ld", "hbm_stream")
 
 
-def _finish(stats, expect_no_measure: bool) -> None:
-    print(f"  [{stats.measured} points measured, "
-          f"{stats.cached} replayed from store]")
-    if expect_no_measure and stats.measured:
-        raise SystemExit(
-            f"--expect-no-measure: store was incomplete, {stats.measured} "
-            "fresh measurements were needed")
-
-
-def _campaign_probe(region, modes: list[str], *, reps: int,
-                    store: str | None, fresh: bool, workers: int,
-                    compile_once: bool, shard: Optional[tuple[int, int]],
-                    expect_no_measure: bool, header: str) -> None:
-    """The shared campaign tail: store naming, shard dispatch, reporting."""
-    from repro.core import Campaign, Controller, worker_store
-
-    store = store or os.path.join(CAMPAIGN_DIR, f"{region.name}.jsonl")
-    if shard is not None:
-        store = worker_store(store, *shard)
-    if fresh and os.path.exists(store):
-        os.unlink(store)
-    ctl = Controller(reps=reps, compile_once=compile_once)
-    camp = Campaign(store, ctl, workers=workers)
-
-    if shard is not None:
-        idx, cnt = shard
-        print(f"== {header} [shard {idx}/{cnt}] (worker store: {store})")
-        res = camp.measure_shard([region], modes, index=idx, count=cnt)
-        for (_, m), r in sorted(res.items()):
-            print(f"  {m:14s} Abs^raw={r.fit.k1:7.1f} "
-                  f"t0={r.fit.t0*1e3:8.2f}ms")
-        if not res:
-            print(f"  (no pairs land on shard {idx} of {cnt})")
-        print("  [classification happens after `python -m repro.core.campaign"
-              " merge`; a shard sees only its slice]")
-        _finish(camp.stats, expect_no_measure)
-        return
-
-    print(f"== {header} (campaign store: {store})")
-    rep = camp.characterize(region, modes)
-    for m, r in rep.results.items():
-        inj = r.injection
-        pay = (f"payload={inj.payload}/{inj.expected} overhead={inj.overhead}"
-               if inj else "payload=n/a")
-        print(f"  {m:14s} Abs^raw={r.fit.k1:7.1f} t0={r.fit.t0*1e3:8.2f}ms "
-              f"slope={r.fit.slope*1e6:9.2f}us/pat {pay}")
-    print(f"  => {rep.bottleneck}")
-    _finish(camp.stats, expect_no_measure)
-
-
-def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
-                   batch: int, reps: int, store: str | None = None,
-                   fresh: bool = False, workers: int = 1,
-                   compile_once: bool = True,
-                   shard: Optional[tuple[int, int]] = None,
-                   expect_no_measure: bool = False) -> None:
+def build_step_region(arch: str, kind: str, modes: Sequence[str], *,
+                      seq: int, batch: int):
+    """The graph-level model-step RegionTarget the measured probe and
+    "step" fleet TargetSpecs share: reduced (smoke) config, host backend,
+    noise injected around the whole jitted train/decode step."""
     from repro.configs import get_smoke_config
     from repro.configs.base import ShapeConfig
     from repro.core import step_region
@@ -147,20 +108,54 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
         args = (params, cache, toks)
 
     region_name = f"{cfg.name}_{kind}_s{seq}_b{batch}"
-    region = step_region(region_name, step, args,
-                         {m: registry[m] for m in modes})
-    _campaign_probe(region, modes, reps=reps, store=store, fresh=fresh,
-                    workers=workers, compile_once=compile_once, shard=shard,
-                    expect_no_measure=expect_no_measure,
-                    header=f"measured probe: {cfg.name} {kind} seq={seq} "
-                           f"batch={batch}")
+    return step_region(region_name, step, args,
+                       {m: registry[m] for m in modes})
 
 
-# per-kernel meaning of the --pallas-n size knob, and the block size it must
-# be a multiple of (sizes below one block are allowed: the block shrinks)
-_PALLAS_SIZE_KW = {"matmul": "n", "spmxv": "n", "attention": "seq",
-                   "probe": "n_steps"}
-_PALLAS_ALIGN = {"matmul": 128, "spmxv": 128, "attention": 64, "probe": 1}
+def _run_adhoc(spec, *, reps: int, store: str | None, fresh: bool,
+               workers: int, compile_once: bool,
+               shard: Optional[tuple[int, int]], expect_no_measure: bool,
+               header: str) -> None:
+    """Build a one-target SweepPlan from CLI flags and execute it through
+    the fleet worker — the campaign tail (store naming, shard dispatch,
+    reporting) lives behind that API now."""
+    from repro.fleet.executor import run_worker
+    from repro.fleet.plan import SweepPlan
+
+    plan = SweepPlan(name=header, store=store or "", targets=[spec],
+                     reps=reps, shards=(shard[1] if shard else 1),
+                     workers=workers, compile_once=compile_once,
+                     backend="auto")
+    if not plan.store:
+        first = plan.resolve()[0][1][0]
+        plan.store = os.path.join(CAMPAIGN_DIR, f"{first.name}.jsonl")
+    run_worker(plan, index=(shard[0] if shard else None),
+               count=(shard[1] if shard else None), fresh=fresh,
+               expect_no_measure=expect_no_measure, header=header)
+
+
+def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
+                   batch: int, reps: int, store: str | None = None,
+                   fresh: bool = False, workers: int = 1,
+                   compile_once: bool = True,
+                   shard: Optional[tuple[int, int]] = None,
+                   expect_no_measure: bool = False) -> None:
+    from repro.core.noise import make_modes
+
+    unknown = [m for m in modes if m not in make_modes()]
+    if unknown:
+        raise SystemExit(f"unknown mode(s) {unknown}; available: "
+                         f"{', '.join(sorted(make_modes()))}")
+    from repro.fleet.plan import TargetSpec
+
+    spec = TargetSpec("step", tuple(modes),
+                      {"arch": arch, "kind": kind, "seq": seq,
+                       "batch": batch})
+    _run_adhoc(spec, reps=reps, store=store, fresh=fresh, workers=workers,
+               compile_once=compile_once, shard=shard,
+               expect_no_measure=expect_no_measure,
+               header=f"measured probe: {arch} {kind} seq={seq} "
+                      f"batch={batch}")
 
 
 def pallas_probe(kernel: str, modes: Optional[list[str]], *, reps: int,
@@ -172,7 +167,7 @@ def pallas_probe(kernel: str, modes: Optional[list[str]], *, reps: int,
     """Run the paper's methodology against a real Pallas kernel (interpret
     mode off-TPU). The sweep rides the compile-once runtime-k path: ≤2
     Pallas executables per (kernel, mode)."""
-    from repro.kernels.region import KERNEL_MODES, pallas_region
+    from repro.kernels.region import KERNEL_MODES, SIZE_DEFAULT, validate_size
 
     if kernel not in KERNEL_MODES:
         raise SystemExit(f"unknown pallas kernel {kernel!r}; one of "
@@ -183,22 +178,38 @@ def pallas_probe(kernel: str, modes: Optional[list[str]], *, reps: int,
         raise SystemExit(f"kernel {kernel!r} supports modes "
                          f"{KERNEL_MODES[kernel]}, not {unknown}")
     if n is not None:
-        align = _PALLAS_ALIGN[kernel]
-        if n < 1:
-            raise SystemExit(f"--pallas-n must be positive; got {n}")
-        # blocked kernels: noise patterns read 8-row groups, and sizes past
-        # one block must tile evenly ('probe' counts grid steps — any n ok)
-        if align > 1 and (n < 8 or (n > align and n % align)):
-            raise SystemExit(
-                f"--pallas-n for {kernel!r} must be >= 8 and a multiple of "
-                f"its {align}-wide block (or smaller than one block); "
-                f"got {n}")
-    sizes = {} if n is None else {_PALLAS_SIZE_KW[kernel]: n}
-    region = pallas_region(kernel, **sizes)
-    _campaign_probe(region, modes, reps=reps, store=store, fresh=fresh,
-                    workers=workers, compile_once=compile_once, shard=shard,
-                    expect_no_measure=expect_no_measure,
-                    header=f"pallas probe: {region.name}")
+        try:
+            validate_size(kernel, n)
+        except ValueError as e:
+            raise SystemExit(f"--pallas-n: {e}")
+    from repro.fleet.plan import TargetSpec
+
+    spec = TargetSpec("pallas", tuple(modes),
+                      {"kernel": kernel,
+                       "sizes": [n if n is not None else
+                                 SIZE_DEFAULT[kernel]]})
+    _run_adhoc(spec, reps=reps, store=store, fresh=fresh, workers=workers,
+               compile_once=compile_once, shard=shard,
+               expect_no_measure=expect_no_measure,
+               header=f"pallas probe: {kernel}")
+
+
+def plan_probe(plan_path: str, *, shard: Optional[tuple[int, int]],
+               fresh: bool, expect_no_measure: bool) -> None:
+    """The fleet worker entry: execute (a shard of) a saved SweepPlan."""
+    from repro.fleet.executor import FleetError, run_worker
+    from repro.fleet.plan import PlanError, SweepPlan
+
+    try:
+        plan = SweepPlan.load(plan_path)
+    except (OSError, ValueError) as e:       # PlanError is a ValueError
+        raise SystemExit(f"--plan {plan_path}: {e}")
+    try:
+        run_worker(plan, index=(shard[0] if shard else None),
+                   count=(shard[1] if shard else None), fresh=fresh,
+                   expect_no_measure=expect_no_measure)
+    except (FleetError, PlanError) as e:
+        raise SystemExit(str(e))
 
 
 def analytic_probe(arch: str, shape_name: str, dryrun_dir: str,
@@ -209,6 +220,7 @@ def analytic_probe(arch: str, shape_name: str, dryrun_dir: str,
     from repro.core import AnalyticCampaign, StepTerms, classify
     from repro.core.analytic import pattern_deltas
     from repro.core.noise import make_modes
+    from repro.fleet.executor import finish_stats
 
     cell = os.path.join(dryrun_dir, f"{canonical(arch)}_{shape_name}.json")
     with open(cell) as f:
@@ -249,7 +261,7 @@ def analytic_probe(arch: str, shape_name: str, dryrun_dir: str,
         print(f"  {m:14s} Abs^raw={res.fit.k1:14.0f} patterns "
               f"(~{frac:6.1f}% of step absorbable)")
     print(f"  => {rep.bottleneck}")
-    _finish(camp.stats, expect_no_measure)
+    finish_stats(camp.stats, expect_no_measure)
 
 
 def _parse_shard(text: str) -> tuple[int, int]:
@@ -262,14 +274,20 @@ def _parse_shard(text: str) -> tuple[int, int]:
     return idx, cnt
 
 
-def main() -> None:
+def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
-                    help="model architecture (required unless --pallas)")
+                    help="model architecture (required unless --pallas or "
+                         "--plan)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--kind", default="train", choices=("train", "decode"))
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--analytic", action="store_true")
+    ap.add_argument("--plan", default=None, metavar="PLAN.json",
+                    help="execute a repro.fleet SweepPlan: with --shard I/N "
+                         "measure that slice into its worker store (the "
+                         "fleet worker entry); without, run the whole plan "
+                         "in-process, classify, and write the report")
     ap.add_argument("--pallas", default=None,
                     metavar="{matmul,spmxv,attention,probe}",
                     help="probe a Pallas kernel region instead of a model "
@@ -295,19 +313,37 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=1,
                     help="fan independent mode sweeps over N threads")
     ap.add_argument("--shard", default=None, metavar="I/N",
-                    help="measure only worker I's slice of the mode grid "
-                         "into a per-worker store (multi-host fan-out; "
-                         "merge the worker stores afterwards)")
+                    help="measure only worker I's slice of the grid into a "
+                         "per-worker store (multi-host fan-out; N must "
+                         "match the plan's shards under --plan)")
     ap.add_argument("--expect-no-measure", action="store_true",
                     help="exit non-zero if any fresh measurement was needed "
                          "(assert a merged/complete store replays fully)")
     ap.add_argument("--no-compile-once", action="store_true",
                     help="force the trace-per-k fallback sweep path")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     modes = ([m.strip() for m in args.modes.split(",") if m.strip()]
              if args.modes else None)
     shard = _parse_shard(args.shard) if args.shard is not None else None
+    if args.plan is not None:
+        # the plan overrides ALL of these; silently ignoring one would let a
+        # user believe they changed the measurement settings
+        overridden = [flag for flag, given in (
+            ("--arch", args.arch), ("--pallas", args.pallas),
+            ("--analytic", args.analytic), ("--modes", modes),
+            ("--store", args.store), ("--reps", args.reps != 3),
+            ("--workers", args.workers != 1),
+            ("--no-compile-once", args.no_compile_once),
+            ("--kind", args.kind != "train"), ("--seq", args.seq != 128),
+            ("--batch", args.batch != 4)) if given]
+        if overridden:
+            raise SystemExit("--plan carries its own targets, modes and "
+                             "settings; drop the conflicting flag(s): "
+                             + ", ".join(overridden))
+        plan_probe(args.plan, shard=shard, fresh=args.fresh,
+                   expect_no_measure=args.expect_no_measure)
+        return
     if args.pallas is not None:
         if args.analytic:
             raise SystemExit("--pallas and --analytic are mutually exclusive")
@@ -318,7 +354,7 @@ def main() -> None:
                      expect_no_measure=args.expect_no_measure)
         return
     if args.arch is None:
-        ap.error("--arch is required unless --pallas is given")
+        ap.error("--arch is required unless --pallas or --plan is given")
     if args.analytic:
         if shard is not None:
             raise SystemExit("--shard applies to measured mode only "

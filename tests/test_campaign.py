@@ -150,7 +150,9 @@ def test_campaign_partial_store_resumes_missing_points(tmp_path):
     the missing ks instead of remeasuring the stored prefix."""
     store_path = str(tmp_path / "store.jsonl")
     region, _ = _make_counting_region("partial_region")
-    ctl = Controller(reps=2, verify_payload=False)
+    # stop_ratio high: a wall-clock spike on a loaded container must not
+    # early-stop either sweep (the point-count asserts need the full ks)
+    ctl = Controller(reps=2, verify_payload=False, stop_ratio=100.0)
 
     c1 = Campaign(store_path, ctl)
     full = c1.sweep_mode(region, "fp_add32")
@@ -409,6 +411,52 @@ def test_merge_meta_conflict_later_store_wins(tmp_path):
     st.close()
     assert st.meta[("r", "m")]["reps"] == 3
     assert st.stored_ts("r", "m") == {0: 0.9, 8: 0.9}   # a's points dropped
+
+
+def test_merge_stores_cleans_tmp_on_corrupt_source(tmp_path):
+    """Satellite regression: a source raising CampaignStoreError mid-merge
+    must not leave ``dest + '.merge-tmp'`` behind, and must not touch an
+    existing dest."""
+    good = str(tmp_path / "good.jsonl")
+    st = CampaignStore(good)
+    st.append({"kind": "point", "region": "r", "mode": "m", "k": 0, "t": 0.5})
+    st.append({"kind": "point", "region": "r", "mode": "m", "k": 2, "t": 0.6})
+    st.close()
+    bad = str(tmp_path / "bad.jsonl")
+    lines = open(good).read().strip().split("\n")
+    with open(bad, "w") as f:   # corrupt MIDDLE record: loader hard-fails
+        f.write(lines[0][:-4] + "\n" + lines[1] + "\n")
+    dest = str(tmp_path / "dest.jsonl")
+    with open(dest, "w") as f:
+        f.write(lines[0] + "\n")
+    before = open(dest).read()
+    with pytest.raises(CampaignStoreError):
+        merge_stores(dest, [good, bad])
+    assert not os.path.exists(dest + ".merge-tmp")
+    assert open(dest).read() == before          # dest untouched by the abort
+    # and a successful merge leaves no tmp either
+    merge_stores(dest, [good])
+    assert not os.path.exists(dest + ".merge-tmp")
+
+
+def test_inspect_reports_grid_completeness(tmp_path, capsys):
+    """Satellite: ``inspect`` reports per-(region, mode) points present vs
+    expected, flags missing ks, and summarizes grid completeness."""
+    from repro.core.campaign import _cli
+
+    path = str(tmp_path / "s.jsonl")
+    st = CampaignStore(path)
+    st.append({"kind": "point", "region": "rA", "mode": "m", "k": 0, "t": 1.0})
+    st.append({"kind": "point", "region": "rA", "mode": "m", "k": 2, "t": 1.0})
+    st.append({"kind": "done", "region": "rA", "mode": "m", "ks": [0, 2, 4],
+               "drift": None, "stopped_early": False, "payload": None})
+    st.append({"kind": "point", "region": "rB", "mode": "m", "k": 0, "t": 1.0})
+    st.close()
+    assert _cli(["inspect", path]) == 0
+    out = capsys.readouterr().out
+    assert "measured rA/m: 2/3 point(s), done, MISSING ks [4]" in out
+    assert "measured rB/m: 1 point(s), in progress" in out
+    assert "grid: 0/2 measured pair(s) complete" in out
 
 
 def test_merge_cli_round_trip(tmp_path, capsys):

@@ -1,12 +1,14 @@
 """The Pallas layer on the Controller/Campaign spine: compile-count
 guarantees (≤2 executables per (kernel, mode) sweep), oracle payload
-verification, and campaign persist/replay with zero new measurements."""
+verification, campaign persist/replay with zero new measurements, and
+multi-size families sharing one store namespace."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import Campaign, Controller
-from repro.kernels.region import KERNEL_MODES, pallas_region
+from repro.kernels.region import (KERNEL_MODES, family_names, pallas_family,
+                                  pallas_region, validate_size)
 
 
 def _counting_region(kernel, **sizes):
@@ -114,6 +116,64 @@ def test_pallas_region_clean_build_is_noise_free():
     out, nacc = region.build("", 0)(*region.args_for("", 0))
     assert out.shape == (128, 128)
     np.testing.assert_array_equal(np.asarray(nacc), 0.0)
+
+
+def test_pallas_family_spans_sizes_and_q_grid():
+    """One family call yields one RegionTarget per size (× q for spmxv),
+    each with a distinct name — the store-namespace contract."""
+    fam = pallas_family("probe", [8, 16], backend="interpret")
+    assert [r.name for r in fam] == ["pallas_probe_s8", "pallas_probe_s16"]
+    fam = pallas_family("spmxv", [256], qs=[0.0, 1.0], backend="interpret")
+    assert [r.name for r in fam] == ["pallas_spmxv_n256_L16_q0",
+                                     "pallas_spmxv_n256_L16_q1"]
+    with pytest.raises(ValueError, match="spmxv"):
+        pallas_family("matmul", [128], qs=[0.0], backend="interpret")
+    with pytest.raises(ValueError, match="multiple"):
+        pallas_family("matmul", [129], backend="interpret")
+    with pytest.raises(ValueError, match="collide"):
+        pallas_family("probe", [8, 8], backend="interpret")
+    with pytest.raises(ValueError, match="unknown pallas kernel"):
+        validate_size("nope", 8)
+
+
+@pytest.mark.parametrize("kernel,sizes,qs,extra", [
+    ("matmul", [128, 256], None, {}),
+    ("spmxv", [256], [0.0, 0.25, 1.0], {"nnz_per_row": 8}),
+    ("attention", [64, 128], None, {"heads": 4}),
+    ("probe", [8, 64], None, {}),
+])
+def test_family_names_agree_with_built_regions(kernel, sizes, qs, extra):
+    """``family_names`` (the cheap, build-nothing grid query) must produce
+    exactly the names ``pallas_family`` builds — including every default the
+    namers duplicate from the spec builders' signatures."""
+    names = family_names(kernel, sizes, qs=qs, **extra)
+    built = pallas_family(kernel, sizes, qs=qs, backend="interpret", **extra)
+    assert names == [r.name for r in built]
+
+
+def test_family_rejects_unknown_spec_params():
+    with pytest.raises(ValueError, match="does not accept"):
+        pallas_family("matmul", [128], nnz_per_row=8, backend="interpret")
+    with pytest.raises(ValueError, match="does not accept"):
+        family_names("probe", [8], causal=True)
+
+
+def test_pallas_family_shares_one_campaign_store(tmp_path, monkeypatch):
+    """Acceptance (ROADMAP): a single campaign store holds a kernel's whole
+    size grid and replays every member with zero new measurements."""
+    monkeypatch.setenv("REPRO_SYNTH_MEASURE", "1e-3")
+    store = str(tmp_path / "family.jsonl")
+    fam = pallas_family("probe", [8, 16], backend="interpret")
+    c1 = Campaign(store, Controller(reps=2))
+    for region in fam:
+        c1.characterize(region, ["fp"])
+    assert c1.stats.measured > 0
+
+    fam2 = pallas_family("probe", [8, 16], backend="interpret")
+    c2 = Campaign(store, Controller(reps=2))
+    reps = {r.name: c2.characterize(r, ["fp"]) for r in fam2}
+    assert c2.stats.measured == 0              # whole family replayed
+    assert set(reps) == {"pallas_probe_s8", "pallas_probe_s16"}
 
 
 def test_pallas_rt_callable_is_memoized_on_controller():
