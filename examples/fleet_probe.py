@@ -7,8 +7,12 @@ replays with ZERO new measurements.
 
 Everything here also exists as a CLI (see docs/orchestration.md):
 
-    python -m repro.fleet plan / run / status
+    python -m repro.fleet plan / run / doctor / status
     python -m repro.launch.probe --plan PLAN --shard I/N   (the worker)
+
+For the multi-host flow (hosts.json, ssh/mock launchers, retry budgets)
+see examples/multihost_fleet.py. This example imports only the documented
+public entry points of ``repro.fleet``.
 """
 import os
 

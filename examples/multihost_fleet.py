@@ -1,0 +1,76 @@
+"""Multi-host fleet flow — hosts.json, pluggable launchers, retry budgets —
+runnable anywhere: the measurement is mock-backed (the deterministic
+fault-injection launcher), so you see the whole spawn -> crash -> retry ->
+heal -> merge -> classify arc without any real hosts.
+
+    PYTHONPATH=src python examples/multihost_fleet.py
+
+Swap the mock for real machines by running the same plan with:
+
+    python -m repro.fleet run --plan PLAN --launcher ssh --hosts hosts.json
+"""
+import json
+import os
+
+from repro.fleet import (MockClusterLauncher, RetryBudget, SSHLauncher,
+                         SweepPlan, TargetSpec, load_hosts, run_fleet)
+
+DIR = "experiments/campaigns/fleet"
+PLAN_PATH = os.path.join(DIR, "multihost_plan.json")
+HOSTS_PATH = os.path.join(DIR, "hosts.json")
+
+# -- 1. the cluster, declared once ------------------------------------------
+# Only "addr" is required; python/workdir/env describe each host's checkout.
+os.makedirs(DIR, exist_ok=True)
+with open(HOSTS_PATH, "w") as f:
+    json.dump({"hosts": [
+        {"addr": "alice@n0", "python": "/opt/venv/bin/python",
+         "workdir": "/scratch/repro", "env": {"PYTHONPATH": "src"}},
+        {"addr": "n1", "workdir": "repro", "env": {"PYTHONPATH": "src"}},
+    ]}, f, indent=1)
+hosts = load_hosts(HOSTS_PATH)
+print(f"hosts.json -> {HOSTS_PATH}")
+ring = SSHLauncher(hosts)
+for i in range(4):
+    print(f"  shard {i} would run on {ring.host_for(i).addr}")
+
+# -- 2. the plan: grid + distribution policy in one artifact ----------------
+# The launcher/retry specs are part of the plan's digest — a different
+# cluster layout or retry policy is a different plan identity. Here the
+# plan declares the MOCK launcher (shard 0's first attempt crashes) so this
+# example runs without ssh; for real hosts declare
+#   launcher={"kind": "ssh", "hosts": [...]}   (or override at the CLI).
+plan = SweepPlan(
+    name="multihost_demo",
+    store=os.path.join(DIR, "multihost_demo.jsonl"),
+    targets=[TargetSpec("pallas", ("fp", "mxu"),
+                        {"kernel": "probe", "sizes": [8, 16]})],
+    reps=2, shards=2, backend="interpret",
+    launcher={"kind": "mock", "script": {"0": ["crash"]}},
+    retry={"max_attempts": 2, "backoff": 0.0})
+plan.save(PLAN_PATH)
+print(f"\nplan {plan.name!r} [{plan.digest()}]: {len(plan.grid())} "
+      f"(region, mode) pairs -> {PLAN_PATH}")
+
+# -- 3. run: crash on attempt 1, heal on attempt 2, merge, classify --------
+# MockClusterLauncher tears shard 0's store tail exactly like a SIGKILL
+# mid-append; the retry budget re-launches ONLY that shard, the store
+# heals, and only the missing point is re-measured.
+result = run_fleet(PLAN_PATH, resume=os.path.exists(plan.fleet_path()),
+                   launcher=MockClusterLauncher({0: ["crash"]}),
+                   retry=RetryBudget(max_attempts=2))
+
+print("\nclassifications:")
+for name, rep in sorted(result.reports.items()):
+    print(f"  {name}: {rep.bottleneck}")
+
+print("\nattempt ledger (fleet.json):")
+for i, ss in sorted(result.state.shards.items()):
+    for a in ss.attempt_log:
+        print(f"  shard {i} attempt {a['attempt']}: {a['launcher']}@"
+              f"{a['host']} rc={a['rc']} measured={a['measured']} "
+              f"cached={a['cached']}")
+
+print(f"\nreport: {plan.report_path()}")
+print("same plan on real machines:  python -m repro.fleet run "
+      f"--plan {PLAN_PATH} --launcher ssh --hosts {HOSTS_PATH}")

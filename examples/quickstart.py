@@ -5,6 +5,10 @@ and a compute-bound HACCmk force kernel — and watch the absorption metric
 separate them (paper Fig. 5 in miniature).
 
     PYTHONPATH=src python examples/quickstart.py
+
+Only documented public entry points are used (``repro.bench.kernels``
+region builders + ``repro.core.Controller``); docs/methodology.md maps
+every paper section to its module and command.
 """
 from repro.bench.kernels import haccmk_region, stream_region
 from repro.core import Controller

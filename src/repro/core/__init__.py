@@ -25,8 +25,8 @@ from repro.core.analytic import (  # noqa: F401
 )
 from repro.core.campaign import (AnalyticCampaign, Campaign, CampaignStats,  # noqa: F401
                                  CampaignStore, CampaignStoreError,
-                                 PairStatus, merge_stores, read_store_records,
-                                 worker_store)
+                                 PairStatus, host_store, merge_stores,
+                                 read_store_records, worker_store)
 from repro.core.classifier import BottleneckReport, classify, cross_check_with_decan  # noqa: F401
 from repro.core.controller import Controller, RegionReport, RegionTarget, loop_region  # noqa: F401
 from repro.core.decan import DecanResult, DecanTarget, run_decan  # noqa: F401

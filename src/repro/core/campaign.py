@@ -151,6 +151,20 @@ def worker_store(path: str, index: int, count: int) -> str:
     return f"{base}.w{index}of{count}{ext or '.jsonl'}"
 
 
+def host_store(path: str, host: str) -> str:
+    """Per-HOST namespacing of a store path: ``base.jsonl`` ->
+    ``base.h<host>.jsonl`` (host sanitized to filename-safe chars).
+
+    Multi-host launchers stage files they fetch from a remote host under
+    this name before atomically renaming them into place, so a torn
+    transfer can never corrupt the local worker store — and two hosts that
+    both touched the same shard (a retry that moved hosts) can never
+    clobber each other mid-copy."""
+    base, ext = os.path.splitext(path)
+    tag = "".join(c if c.isalnum() or c in "._-" else "-" for c in host)
+    return f"{base}.h{tag}{ext or '.jsonl'}"
+
+
 @dataclasses.dataclass(frozen=True)
 class PairStatus:
     """Grid completeness of one (region, mode) pair — what a fleet executor
@@ -239,6 +253,8 @@ class CampaignStore:
             self.decan[(rec.get("region"), rec.get("variant"))] = rec
 
     def append(self, rec: dict) -> None:
+        """Ingest one record and flush it to disk (locked; readonly stores
+        refuse)."""
         if self._f is None:
             raise RuntimeError(f"store {self.path} was opened readonly")
         with self._lock:
@@ -247,14 +263,17 @@ class CampaignStore:
             self._f.flush()
 
     def close(self) -> None:
+        """Close the append handle (no-op for readonly stores)."""
         if self._f is not None:
             self._f.close()
 
     # convenience views ----------------------------------------------------
     def stored_ts(self, region: str, mode: str) -> dict[int, float]:
+        """The pair's stored {k: wall-time} points (empty when unmeasured)."""
         return self.points.get((region, mode), {})
 
     def is_done(self, region: str, mode: str) -> bool:
+        """True when the pair's sweep wrote its ``done`` marker."""
         return (region, mode) in self.done
 
     def pair_status(self, region: str, mode: str) -> PairStatus:
@@ -309,6 +328,8 @@ def _canon_sort_key(rec: dict) -> tuple:
 
 @dataclasses.dataclass
 class MergeStats:
+    """What ``merge_stores`` did: sources read, records in/out, and the
+    (region, mode) pairs whose meta conflicted (later source won)."""
     sources: int = 0
     records_in: int = 0
     records_out: int = 0
@@ -421,6 +442,8 @@ def merge_stores(dest: str, sources: Sequence[str]) -> MergeStats:
 
 @dataclasses.dataclass
 class CampaignStats:
+    """A campaign run's measure-vs-replay tally (the ``--expect-no-measure``
+    contract checks ``measured == 0``)."""
     measured: int = 0      # freshly timed points (incl. sensitivity probes)
     cached: int = 0        # points replayed from the store
 

@@ -1,11 +1,20 @@
 """Fleet orchestration: one launcher that plans, spawns, merges, classifies.
 
 ``SweepPlan`` (plan.py) declares the full grid — regions × modes × kernel
-size/q families — and ``run_fleet`` (executor.py) drives it end to end:
-spawn N subprocess shards, survive crashes, merge worker stores, classify
-from the merged store. ``python -m repro.fleet`` is the CLI.
+size/q families — plus, optionally, HOW to distribute it (a launcher spec
+and a retry budget). ``run_fleet`` (executor.py) drives it end to end:
+spawn N worker shards through a pluggable ``Launcher`` (launchers.py —
+local subprocesses, ssh hosts from a hosts.json, or a deterministic
+fault-injection mock), retry failed shards within the ``RetryBudget``,
+survive crashes, merge worker stores, classify from the merged store.
+``python -m repro.fleet`` is the CLI (plan / run / doctor / status).
 """
 from repro.fleet.executor import (FleetError, FleetResult, FleetState,  # noqa: F401
-                                  in_process_launcher, run_fleet,
-                                  run_worker, subprocess_launcher)
+                                  fleet_doctor, in_process_launcher,
+                                  run_fleet, run_worker,
+                                  subprocess_launcher)
+from repro.fleet.launchers import (HostSpec, Launcher, LocalLauncher,  # noqa: F401
+                                   MockClusterLauncher, RetryBudget,
+                                   SSHLauncher, ShardOutcome, load_hosts,
+                                   resolve_launcher)
 from repro.fleet.plan import PlanError, SweepPlan, TargetSpec  # noqa: F401

@@ -1,4 +1,5 @@
-"""Fleet CLI — build plans, run fleets, inspect fleet state.
+"""Fleet CLI — build plans, run fleets (with pluggable launchers and retry
+budgets), diagnose and inspect fleet state.
 
     # declare a whole size/q family as one plan (2 subprocess shards)
     PYTHONPATH=src python -m repro.fleet plan --out plan.json \
@@ -11,17 +12,27 @@
     PYTHONPATH=src python -m repro.fleet run --plan plan.json --resume \
         --expect-no-measure          # assert a completed fleet replays free
 
-    # where is my fleet?
+    # real hosts: one worker per host from a declarative hosts.json,
+    # flaky shards re-launched automatically up to the retry budget
+    PYTHONPATH=src python -m repro.fleet run --plan plan.json \
+        --launcher ssh --hosts hosts.json --max-attempts 3 --backoff 2
+
+    # the multi-host path without hosts: deterministic fault injection
+    PYTHONPATH=src python -m repro.fleet run --plan plan.json \
+        --launcher mock --max-attempts 2
+
+    # why is my fleet incomplete?  (per shard: missing ks per pair, torn
+    # store to be healed, attempts exhausted)
+    PYTHONPATH=src python -m repro.fleet doctor --plan plan.json
     PYTHONPATH=src python -m repro.fleet status --plan plan.json
 
-Multi-host: run ``python -m repro.launch.probe --plan plan.json --shard i/N``
-on each host against a shared filesystem (or copy the worker stores back),
-then ``run --resume`` anywhere to merge + classify. docs/orchestration.md
-has the full walkthrough.
+docs/orchestration.md documents the hosts.json format, the retry budget,
+and the manual fallback recipe for hosts without ssh.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 from typing import Optional, Sequence
 
@@ -30,6 +41,57 @@ CAMPAIGN_DIR = "experiments/campaigns/fleet"
 
 def _csv(text: str, cast) -> list:
     return [cast(p.strip()) for p in text.split(",") if p.strip()]
+
+
+def _parse_mock_script(text: Optional[str]) -> Optional[dict]:
+    """``--mock-script`` accepts inline JSON or a path to a JSON file,
+    mapping shard index -> per-attempt action list."""
+    if text is None:
+        return None
+    if os.path.exists(text):
+        with open(text) as f:
+            return json.load(f)
+    try:
+        return json.loads(text)
+    except ValueError:
+        raise SystemExit(f"--mock-script: {text!r} is neither a JSON object "
+                         "nor a path to one")
+
+
+def _launcher_spec(args) -> Optional[dict]:
+    """The plan-embedded launcher spec the ``plan`` subcommand's flags
+    describe (None when no launcher flag was given)."""
+    from repro.fleet.launchers import load_hosts
+
+    if not args.launcher:
+        if args.hosts or args.mock_script:
+            raise SystemExit("plan: --hosts/--mock-script need --launcher")
+        return None
+    spec: dict = {"kind": args.launcher}
+    if args.launcher == "ssh":
+        if not args.hosts:
+            raise SystemExit("plan: --launcher ssh needs --hosts hosts.json")
+        spec["hosts"] = [
+            {"addr": h.addr, "python": h.python, "workdir": h.workdir,
+             **({"env": dict(h.env)} if h.env else {})}
+            for h in load_hosts(args.hosts)]
+    elif args.launcher == "mock":
+        script = _parse_mock_script(args.mock_script)
+        if script is not None:
+            spec["script"] = script
+    return spec
+
+
+def _retry_spec(args) -> Optional[dict]:
+    """The plan-embedded retry dict described by the retry flags."""
+    spec = {}
+    if args.max_attempts is not None:
+        spec["max_attempts"] = args.max_attempts
+    if args.backoff is not None:
+        spec["backoff"] = args.backoff
+    if args.per_shard_cap is not None:
+        spec["per_shard_cap"] = args.per_shard_cap
+    return spec or None
 
 
 def _build_plan(args) -> "object":
@@ -69,7 +131,9 @@ def _build_plan(args) -> "object":
                      targets=[spec], reps=args.reps, shards=args.shards,
                      workers=args.workers,
                      compile_once=not args.no_compile_once,
-                     backend=args.backend)
+                     backend=args.backend,
+                     launcher=_launcher_spec(args),
+                     retry=_retry_spec(args))
     try:
         plan.validate()
     except PlanError as e:
@@ -89,6 +153,10 @@ def _cmd_plan(args) -> int:
     print(f"wrote plan {plan.name!r} [{plan.digest()}] -> {args.out}")
     print(f"  {len(grid)} (region, mode) pair(s) over {plan.shards} "
           f"shard(s); store: {plan.store}")
+    if plan.launcher:
+        print(f"  launcher: {plan.launcher}")
+    if plan.retry:
+        print(f"  retry: {plan.retry}")
     for r, m in grid:
         print(f"    {r}/{m}")
     print(f"run it:   PYTHONPATH=src python -m repro.fleet run "
@@ -96,21 +164,70 @@ def _cmd_plan(args) -> int:
     return 0
 
 
-def _cmd_run(args) -> int:
-    from repro.fleet.executor import (FleetError, in_process_launcher,
-                                      run_fleet)
+def _run_overrides(args, plan):
+    """Resolve the run subcommand's launcher/retry overrides against the
+    plan's declarative settings (explicit flags win)."""
+    from repro.fleet.launchers import (FleetError, RetryBudget,
+                                       resolve_launcher)
 
+    if args.in_process and args.launcher and args.launcher != "local":
+        raise SystemExit("run: --in-process conflicts with "
+                         f"--launcher {args.launcher}")
+    try:
+        launcher = None
+        if args.launcher or args.in_process or args.hosts \
+                or args.mock_script:
+            launcher = resolve_launcher(
+                args.launcher, plan=plan, hosts_path=args.hosts,
+                mock_script=_parse_mock_script(args.mock_script),
+                in_process=args.in_process)
+        retry = None
+        rd = dict(plan.retry or {})
+        if args.max_attempts is not None:
+            rd["max_attempts"] = args.max_attempts
+        if args.backoff is not None:
+            rd["backoff"] = args.backoff
+        if args.per_shard_cap is not None:
+            rd["per_shard_cap"] = args.per_shard_cap
+        if rd:
+            retry = RetryBudget.from_dict(rd)
+    except FleetError as e:
+        raise SystemExit(f"fleet: {e}")
+    return launcher, retry
+
+
+def _cmd_run(args) -> int:
+    from repro.fleet.executor import FleetError, run_fleet
+    from repro.fleet.plan import PlanError, SweepPlan
+
+    try:
+        plan = SweepPlan.load(args.plan)
+    except (OSError, PlanError) as e:
+        raise SystemExit(f"fleet: {e}")
+    launcher, retry = _run_overrides(args, plan)
     try:
         res = run_fleet(args.plan, resume=args.resume, fresh=args.fresh,
                         expect_no_measure=args.expect_no_measure,
-                        launcher=(in_process_launcher if args.in_process
-                                  else None))
+                        launcher=launcher, retry=retry)
     except FleetError as e:
         raise SystemExit(f"fleet: {e}")
     print(f"fleet {res.plan.name!r} complete: {len(res.reports)} region(s) "
           f"classified, shard(s) launched this run: "
           f"{res.launched or 'none'}")
     return 0
+
+
+def _cmd_doctor(args) -> int:
+    from repro.fleet.executor import FleetError, fleet_doctor
+    from repro.fleet.plan import PlanError, SweepPlan
+
+    try:
+        plan = SweepPlan.load(args.plan)
+        code, report = fleet_doctor(plan)
+    except (OSError, PlanError, FleetError) as e:
+        raise SystemExit(f"doctor: {e}")
+    print(report)
+    return code
 
 
 def _cmd_status(args) -> int:
@@ -132,6 +249,8 @@ def _cmd_status(args) -> int:
             extra = ""
             if ss.measured is not None:
                 extra = f", {ss.measured} measured / {ss.cached} replayed"
+            if ss.host:
+                extra += f", host {ss.host}"
             print(f"  shard {i}: {ss.status} (attempts={ss.attempts}"
                   f"{extra})")
         if state.classification:
@@ -162,15 +281,44 @@ def _cmd_status(args) -> int:
     return 1 if incomplete_pairs else 0
 
 
-def main(argv: Optional[Sequence[str]] = None) -> int:
+def _add_launcher_flags(p, *, for_plan: bool) -> None:
+    """The launcher/retry flag set shared by ``plan`` (serialize into the
+    plan) and ``run`` (override the plan for this invocation)."""
+    where = "serialize into the plan" if for_plan else "override the plan"
+    p.add_argument("--launcher", default=None,
+                   choices=("local", "ssh", "mock"),
+                   help=f"shard launcher kind ({where}); default: local "
+                        "subprocesses")
+    p.add_argument("--hosts", default=None, metavar="HOSTS.json",
+                   help="ssh host specs: a JSON list (or {\"hosts\": [...]})"
+                        " of {addr, python, workdir, env} objects")
+    p.add_argument("--mock-script", default=None, metavar="JSON",
+                   help="mock launcher fault script (inline JSON or a file):"
+                        " {shard: [action per attempt]}, actions ok|crash|"
+                        "drop-point|timeout|dead")
+    p.add_argument("--max-attempts", type=int, default=None,
+                   help="launch rounds per run before giving up (retry "
+                        "budget; default 1)")
+    p.add_argument("--backoff", type=float, default=None,
+                   help="seconds to sleep before retry round r, doubling "
+                        "each round (default 0)")
+    p.add_argument("--per-shard-cap", type=int, default=None,
+                   help="LIFETIME attempts one shard may consume across "
+                        "resumes (0 = unlimited)")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The fleet CLI's argparse tree (exposed for help/doc tests)."""
     ap = argparse.ArgumentParser(
         prog="python -m repro.fleet",
-        description="fleet orchestrator: plan, spawn, merge, classify")
+        description="fleet orchestrator: plan, spawn (local/ssh/mock "
+                    "launchers with retry budgets), merge, classify")
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     pp = sub.add_parser("plan", help="build a SweepPlan JSON")
     pp.add_argument("--out", required=True, help="plan JSON path to write")
-    pp.add_argument("--name", default=None)
+    pp.add_argument("--name", default=None,
+                    help="plan name (default: derived from the target)")
     pp.add_argument("--store", default=None,
                     help=f"campaign store (default: under {CAMPAIGN_DIR}/)")
     pp.add_argument("--pallas", default=None, metavar="KERNEL",
@@ -185,23 +333,32 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="spmxv nonzeros per row")
     pp.add_argument("--arch", default=None,
                     help="model-step target architecture")
-    pp.add_argument("--kind", default="train", choices=("train", "decode"))
-    pp.add_argument("--seq", type=int, default=128)
-    pp.add_argument("--batch", type=int, default=4)
+    pp.add_argument("--kind", default="train", choices=("train", "decode"),
+                    help="model-step flavour to probe")
+    pp.add_argument("--seq", type=int, default=128,
+                    help="model-step sequence length")
+    pp.add_argument("--batch", type=int, default=4,
+                    help="model-step batch size")
     pp.add_argument("--modes", default=None,
                     help="comma list (default: the target's full mode set)")
-    pp.add_argument("--reps", type=int, default=2)
-    pp.add_argument("--shards", type=int, default=2)
+    pp.add_argument("--reps", type=int, default=2,
+                    help="timing repetitions per measured point")
+    pp.add_argument("--shards", type=int, default=2,
+                    help="how many workers the grid splits across")
     pp.add_argument("--workers", type=int, default=1,
                     help="threads per shard")
     pp.add_argument("--backend", default="auto",
-                    choices=("auto", "interpret", "pallas"))
-    pp.add_argument("--no-compile-once", action="store_true")
+                    choices=("auto", "interpret", "pallas"),
+                    help="pallas execution backend")
+    pp.add_argument("--no-compile-once", action="store_true",
+                    help="force the trace-per-k fallback sweep path")
+    _add_launcher_flags(pp, for_plan=True)
     pp.set_defaults(fn=_cmd_plan)
 
-    rp = sub.add_parser("run", help="plan -> spawn shards -> merge -> "
-                                    "classify (resumable)")
-    rp.add_argument("--plan", required=True)
+    rp = sub.add_parser("run", help="plan -> spawn shards (retrying up to "
+                                    "the budget) -> merge -> classify")
+    rp.add_argument("--plan", required=True,
+                    help="the SweepPlan JSON to execute")
     rp.add_argument("--resume", action="store_true",
                     help="continue an existing fleet: re-launch only "
                          "incomplete shards; a complete fleet replays with "
@@ -214,14 +371,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     rp.add_argument("--in-process", action="store_true",
                     help="run shards sequentially in this process instead "
                          "of spawning subprocesses")
+    _add_launcher_flags(rp, for_plan=False)
     rp.set_defaults(fn=_cmd_run)
+
+    dp = sub.add_parser("doctor", help="explain per shard why the fleet is "
+                                       "incomplete: missing ks per pair, "
+                                       "torn store to be healed, attempts "
+                                       "exhausted (exit 1 while incomplete)")
+    dp.add_argument("--plan", required=True,
+                    help="the SweepPlan JSON to diagnose")
+    dp.set_defaults(fn=_cmd_doctor)
 
     sp = sub.add_parser("status", help="show fleet/shard/store completeness "
                                        "(exit 1 while incomplete)")
-    sp.add_argument("--plan", required=True)
+    sp.add_argument("--plan", required=True,
+                    help="the SweepPlan JSON to summarize")
     sp.set_defaults(fn=_cmd_status)
+    return ap
 
-    args = ap.parse_args(argv)
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI entry: dispatch to the plan/run/doctor/status subcommand."""
+    args = build_parser().parse_args(argv)
     return args.fn(args)
 
 

@@ -2,9 +2,16 @@
 
 ``run_fleet`` drives the whole pipeline the ROADMAP called the NEXT step:
 
-  spawn    N real subprocess shards (``python -m repro.launch.probe --plan P
-           --shard i/N``), each measuring its slice of the plan's grid into
-           its own worker store, output streamed line-prefixed;
+  spawn    N worker shards through a pluggable ``Launcher``
+           (repro.fleet.launchers: local subprocesses, ssh hosts, or the
+           mock fault-injection cluster), each measuring its slice of the
+           plan's grid into its own worker store, output streamed
+           line-prefixed;
+  retry    a ``RetryBudget`` gives failed/incomplete shards more launch
+           rounds within one run; completeness is re-derived from the
+           stores between rounds, so a retried shard heals its torn store
+           and re-measures only missing points, and every attempt lands in
+           the ledger (launcher, host, rc, heal stats);
   survive  a killed shard leaves a truncated worker store; resume re-launches
            ONLY the shards whose slice is incomplete, and the campaign layer
            heals the torn tail and re-measures only the missing points;
@@ -18,8 +25,11 @@ Ground truth is the stores, not the bookkeeping: shard completeness is
 decided by ``CampaignStore.grid_status`` against the plan's grid, so a lying
 or lost ``fleet.json`` can never cause double measurement or a hole.
 ``fleet.json`` (next to the store) records the plan digest, per-shard
-status/attempts/stats, the merge manifest, and the final classification —
-the fleet's observable state for humans and the ``status`` CLI.
+status/attempts/attempt-log/stats, the merge manifest, and the final
+classification — the fleet's observable state for humans, the ``status``
+CLI, and ``fleet_doctor`` (which explains per shard WHY a fleet is
+incomplete: missing ks per pair, torn store to be healed, attempts
+exhausted).
 """
 from __future__ import annotations
 
@@ -27,20 +37,18 @@ import dataclasses
 import json
 import logging
 import os
-import subprocess
-import sys
-import threading
-from typing import Callable, Optional, Sequence
+import socket
+import time
+from typing import Callable, Optional, Sequence, Union
 
+from repro.fleet.launchers import (FleetError, Launcher, LocalLauncher,  # noqa: F401  (FleetError re-exported)
+                                   RetryBudget, ShardOutcome,
+                                   resolve_launcher)
 from repro.fleet.plan import SweepPlan
 
 log = logging.getLogger("repro.fleet")
 
 FLEET_SCHEMA = 1
-
-
-class FleetError(RuntimeError):
-    """Fleet-level failure the caller must act on (bad state, dead shards)."""
 
 
 # ---------------------------------------------------------------------------
@@ -60,6 +68,8 @@ def finish_stats(stats, expect_no_measure: bool) -> None:
 
 
 def print_report(rep, *, name_line: bool = False) -> None:
+    """Human-readable per-mode summary of one RegionReport (one line per
+    mode: Abs^raw, fit params, payload verification; then the verdict)."""
     if name_line:
         print(f"  -- {rep.region} (|body|={rep.body_size})")
     for m, r in rep.results.items():
@@ -80,6 +90,7 @@ def report_json(reports: dict) -> str:
 
 
 def write_report(path: str, reports: dict) -> str:
+    """Atomically write ``report_json(reports)`` to ``path``; returns it."""
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
@@ -129,6 +140,22 @@ def _read_worker_stats(store: str) -> Optional[dict]:
         return None
 
 
+def _handshake(plan: SweepPlan) -> str:
+    """The launcher->worker handshake: a launcher exports the plan digest it
+    is driving (``REPRO_FLEET_EXPECT_DIGEST``); a worker whose own plan file
+    resolves to a different digest must refuse to measure — an out-of-sync
+    plan copy on one host would silently splice a different grid into the
+    fleet's stores. Returns the host label to echo in the worker banner."""
+    expect = os.environ.get("REPRO_FLEET_EXPECT_DIGEST")
+    if expect and expect != plan.digest():
+        raise FleetError(
+            f"worker handshake failed: the launcher expects plan digest "
+            f"{expect} but this worker's plan file resolves to "
+            f"{plan.digest()} — the plan copies are out of sync across "
+            "hosts; re-distribute the plan file (same bytes => same digest)")
+    return os.environ.get("REPRO_FLEET_HOST") or socket.gethostname()
+
+
 def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
                count: Optional[int] = None, fresh: bool = False,
                expect_no_measure: bool = False,
@@ -155,6 +182,7 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
         store = plan.store
     if fresh and os.path.exists(store):
         os.unlink(store)
+    host = _handshake(plan)
     title = header or f"fleet plan {plan.name!r} [{plan.digest()}]"
     plan.grid()     # rejects plans whose targets enumerate duplicate pairs
     ctl = Controller(reps=plan.reps, compile_once=plan.compile_once)
@@ -164,6 +192,8 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
         if index is not None:
             print(f"== {title} [shard {index}/{count}] ({len(pairs)}-pair "
                   f"grid; worker store: {store})")
+            print(f"  [worker handshake: plan {plan.digest()}, host {host}, "
+                  f"pid {os.getpid()}]")
             res = camp.measure_pairs(pairs, index=index, count=count)
             for (r, m), mr in sorted(res.items()):
                 print(f"  {r}/{m}: Abs^raw={mr.fit.k1:7.1f} "
@@ -198,13 +228,24 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
 
 @dataclasses.dataclass
 class ShardState:
+    """One shard's ledger entry in ``fleet.json``.
+
+    ``attempts`` counts LIFETIME launches (across resumes — what
+    ``RetryBudget.per_shard_cap`` is checked against) and ``attempt_log``
+    records each one: {attempt, launcher, host, rc, measured, cached} —
+    ``measured``/``cached`` are the worker's heal stats (a retry that
+    replayed N cached points and measured only the missing ones shows
+    exactly that). Status vocabulary: pending | running | done | failed |
+    exhausted (per-shard attempt cap reached)."""
     index: int
     store: str
-    status: str = "pending"      # pending | running | done | failed
+    status: str = "pending"
     returncode: Optional[int] = None
     attempts: int = 0
     measured: Optional[int] = None
     cached: Optional[int] = None
+    host: Optional[str] = None
+    attempt_log: list = dataclasses.field(default_factory=list)
 
 
 class FleetState:
@@ -222,6 +263,7 @@ class FleetState:
         self.stats: Optional[dict] = None
 
     def to_dict(self) -> dict:
+        """The JSON form written to ``fleet.json`` (schema-versioned)."""
         return {"fleet": FLEET_SCHEMA, "plan": self.plan_digest,
                 "shards": {str(i): dataclasses.asdict(s)
                            for i, s in self.shards.items()},
@@ -229,6 +271,7 @@ class FleetState:
                 "stats": self.stats}
 
     def save(self) -> None:
+        """Atomically rewrite ``fleet.json`` with the current state."""
         d = os.path.dirname(self.path)
         if d:
             os.makedirs(d, exist_ok=True)
@@ -240,6 +283,8 @@ class FleetState:
 
     @classmethod
     def load(cls, path: str) -> "FleetState":
+        """Load a ``fleet.json`` (older files without host/attempt_log
+        fields load with defaults)."""
         with open(path) as f:
             d = json.load(f)
         if d.get("fleet") != FLEET_SCHEMA:
@@ -255,73 +300,50 @@ class FleetState:
 
 
 # ---------------------------------------------------------------------------
-# shard launchers
+# shard launchers (implementations live in repro.fleet.launchers)
 # ---------------------------------------------------------------------------
-
-
-def _worker_env() -> dict:
-    """The parent's environment, with this repro's src dir on PYTHONPATH so
-    ``-m repro.launch.probe`` resolves in the subprocess regardless of how
-    the parent itself was launched (installed, PYTHONPATH, conftest hack)."""
-    import repro
-
-    # repro is a namespace package: __file__ is None, __path__ holds the dir
-    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
-    env = dict(os.environ)
-    parts = [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
-    if src not in parts:
-        env["PYTHONPATH"] = os.pathsep.join([src] + parts)
-    return env
-
-
-def _pump(pipe, prefix: str) -> None:
-    for line in pipe:
-        print(prefix + line.rstrip("\n"), flush=True)
 
 
 def subprocess_launcher(plan_path: str, plan: SweepPlan,
                         indices: Sequence[int]) -> dict[int, int]:
-    """Spawn one ``python -m repro.launch.probe --plan P --shard i/N`` per
-    index — all concurrently (the grid is embarrassingly parallel; wall-clock
-    interference between co-located shards is the fan-out's price and the
-    per-host recipe in docs/orchestration.md is the escape). Output streams
-    line-prefixed; returns {index: returncode}."""
-    procs: dict[int, tuple] = {}
-    env = _worker_env()
-    for i in indices:
-        cmd = [sys.executable, "-m", "repro.launch.probe",
-               "--plan", plan_path, "--shard", f"{i}/{plan.shards}"]
-        p = subprocess.Popen(cmd, stdout=subprocess.PIPE,
-                             stderr=subprocess.STDOUT, text=True, bufsize=1,
-                             env=env)
-        t = threading.Thread(target=_pump,
-                             args=(p.stdout, f"[shard {i}/{plan.shards}] "),
-                             daemon=True)
-        t.start()
-        procs[i] = (p, t)
-    rcs: dict[int, int] = {}
-    for i, (p, t) in procs.items():
-        rcs[i] = p.wait()
-        t.join(timeout=5)
-    return rcs
+    """Back-compat shim for the pre-Launcher API: a subprocess
+    ``LocalLauncher`` round, returned as the legacy {index: returncode}."""
+    out = LocalLauncher().launch(plan_path, plan, indices)
+    return {i: o.rc for i, o in out.items()}
 
 
 def in_process_launcher(plan_path: str, plan: SweepPlan,
                         indices: Sequence[int]) -> dict[int, int]:
-    """Run shards sequentially in THIS process — ``run --in-process`` for
-    spawn-restricted environments, and the executor tests' fast path. Each
-    shard still re-loads the plan from disk, like a real worker would."""
-    rcs: dict[int, int] = {}
-    for i in indices:
-        try:
-            run_worker(SweepPlan.load(plan_path), index=i, count=plan.shards)
-            rcs[i] = 0
-        except SystemExit as e:
-            rcs[i] = int(bool(e.code))
-        except Exception:
-            log.warning("in-process shard %d failed", i, exc_info=True)
-            rcs[i] = 1
-    return rcs
+    """Back-compat shim for the pre-Launcher API: an in-process
+    ``LocalLauncher`` round, returned as the legacy {index: returncode}."""
+    out = LocalLauncher(in_process=True).launch(plan_path, plan, indices)
+    return {i: o.rc for i, o in out.items()}
+
+
+class _CallableLauncher(Launcher):
+    """Adapter for legacy ``fn(plan_path, plan, indices) -> {i: rc}``
+    launcher callables (still accepted by ``run_fleet(launcher=...)``)."""
+
+    def __init__(self, fn: Callable):
+        self.fn = fn
+        self.name = getattr(fn, "__name__", "callable")
+
+    def launch(self, plan_path, plan, indices, *, attempts=None):
+        """Call the wrapped function and lift rcs into ShardOutcomes."""
+        return {i: ShardOutcome(int(rc), None)
+                for i, rc in self.fn(plan_path, plan, indices).items()}
+
+
+def _as_launcher(launcher: Union[Launcher, Callable, None],
+                 plan: SweepPlan) -> Launcher:
+    """Normalize run_fleet's ``launcher`` argument: None -> resolve from the
+    plan's declarative spec (default local subprocesses); a ``Launcher`` is
+    used as-is; any other callable goes through the legacy adapter."""
+    if launcher is None:
+        return resolve_launcher(plan=plan)
+    if isinstance(launcher, Launcher):
+        return launcher
+    return _CallableLauncher(launcher)
 
 
 # ---------------------------------------------------------------------------
@@ -331,6 +353,9 @@ def in_process_launcher(plan_path: str, plan: SweepPlan,
 
 @dataclasses.dataclass
 class FleetResult:
+    """What ``run_fleet`` hands back: the plan, one RegionReport per region,
+    the finalize replay's CampaignStats, the saved FleetState ledger, and
+    the shard indices that were (re)launched during this run."""
     plan: SweepPlan
     reports: dict
     stats: object                    # CampaignStats of the finalize replay
@@ -396,21 +421,32 @@ def _clean_fleet(plan: SweepPlan) -> None:
 
 def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
               expect_no_measure: bool = False,
-              launcher: Optional[Callable] = None) -> FleetResult:
-    """Plan → spawn → merge → classify, resumably.
+              launcher: Union[Launcher, Callable, None] = None,
+              retry: Optional[RetryBudget] = None) -> FleetResult:
+    """Plan → spawn (with retries) → merge → classify, resumably.
 
     * first run: launches every shard whose slice is incomplete (all of
       them), merges, classifies;
-    * ``resume`` after a crash: re-launches ONLY incomplete shards (their
-      worker stores heal and re-measure only missing points), then merges
-      and classifies as usual;
+    * within one call, the ``retry`` budget (or the plan's declarative
+      ``retry`` settings) governs how many launch rounds failed/incomplete
+      shards get — completeness is re-derived from the STORES after every
+      round, so a retried shard heals its torn store and re-measures only
+      missing points; every attempt lands in ``fleet.json``'s per-shard
+      attempt log (launcher, host, rc, heal stats);
+    * ``resume`` after a crash: re-launches ONLY incomplete shards, then
+      merges and classifies as usual;
     * ``resume`` on a completed fleet: launches nothing and the classify
       step replays the canonical store with ZERO new measurements;
     * ``fresh``: delete every store/state file of this plan first.
 
+    ``launcher`` is a ``Launcher`` (Local/SSH/MockCluster), a legacy
+    ``fn(plan_path, plan, indices) -> {i: rc}`` callable, or None to resolve
+    from the plan's ``launcher`` spec (default: local subprocesses).
+
     Raises ``FleetError`` when fleet state exists for a different plan
-    digest, when state exists and neither flag was given, or when launched
-    shards still owe measurements afterwards.
+    digest, when state exists and neither flag was given, when shards still
+    owe measurements after the last allowed attempt round, or when a shard
+    has exhausted its lifetime ``per_shard_cap``.
     """
     plan = SweepPlan.load(plan_path)
     if fresh:
@@ -431,39 +467,90 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
     grid = plan.grid()
     if state is None:
         state = FleetState(fleet_path, plan.digest(), plan.worker_stores())
+    budget = retry if retry is not None \
+        else RetryBudget.from_dict(plan.retry)
+    lch = _as_launcher(launcher, plan)
 
-    incomplete = _incomplete_shards(plan, grid)
+    incomplete = sorted(_incomplete_shards(plan, grid))
     for i, ss in state.shards.items():
         ss.status = "pending" if i in incomplete else "done"
     state.save()
 
-    launched = list(incomplete)
-    if incomplete:
+    launched: list[int] = []
+    round_no = 0
+    while incomplete:
+        capped = [i for i in incomplete
+                  if budget.per_shard_cap
+                  and state.shards[i].attempts >= budget.per_shard_cap]
+        for i in capped:
+            state.shards[i].status = "exhausted"
+        runnable = [i for i in incomplete if i not in capped]
+        if not runnable:
+            state.save()
+            raise FleetError(
+                f"shard(s) {sorted(capped)} exhausted the lifetime "
+                f"per-shard attempt cap ({budget.per_shard_cap}); "
+                "fleet.json records every attempt (launcher, host, rc) — "
+                "`python -m repro.fleet doctor` explains each shard; fix "
+                "the cause, then raise --per-shard-cap or restart with "
+                "--fresh")
+        if round_no >= budget.max_attempts:
+            break
+        round_no += 1
+        delay = budget.delay(round_no)
+        if delay:
+            print(f"== retry backoff: sleeping {delay:.1f}s before attempt "
+                  f"round {round_no}/{budget.max_attempts}")
+            time.sleep(delay)
         print(f"== fleet {plan.name!r} [{plan.digest()}]: "
-              f"{len(grid)}-pair grid, launching shard(s) "
-              f"{incomplete} of {plan.shards}")
-        for i in incomplete:
-            state.shards[i].status = "running"
-            state.shards[i].attempts += 1
-        state.save()
-        rcs = (launcher or subprocess_launcher)(plan_path, plan, incomplete)
-        still = set(_incomplete_shards(plan, grid))
-        for i in incomplete:
+              f"{len(grid)}-pair grid, launching shard(s) {runnable} of "
+              f"{plan.shards} (round {round_no}/{budget.max_attempts}, "
+              f"launcher {lch.name})")
+        attempts_map = {}
+        for i in runnable:
             ss = state.shards[i]
-            ss.returncode = rcs.get(i)
+            ss.status = "running"
+            ss.attempts += 1
+            attempts_map[i] = ss.attempts
+            # a stale stats file from a previous attempt must not be
+            # misattributed to this one (a worker that never runs writes
+            # no stats; the ledger then honestly records None)
+            try:
+                os.unlink(_stats_path(ss.store))
+            except OSError:
+                pass
+        state.save()
+        outcomes = lch.launch(plan_path, plan, runnable,
+                              attempts=attempts_map)
+        still = set(_incomplete_shards(plan, grid))
+        for i in runnable:
+            ss = state.shards[i]
+            o = outcomes.get(i)
+            ss.returncode = None if o is None else o.rc
+            ss.host = None if o is None else o.host
             ss.status = "failed" if i in still else "done"
             wstats = _read_worker_stats(ss.store)
             if wstats:
                 ss.measured = wstats.get("measured")
                 ss.cached = wstats.get("cached")
+            ss.attempt_log.append({
+                "attempt": ss.attempts, "launcher": lch.name,
+                "host": ss.host, "rc": ss.returncode,
+                "measured": (wstats or {}).get("measured"),
+                "cached": (wstats or {}).get("cached")})
+            if i not in launched:
+                launched.append(i)
         state.save()
-        if still:
-            codes = {i: rcs.get(i) for i in sorted(still)}
-            raise FleetError(
-                f"shard(s) {sorted(still)} did not complete (returncodes "
-                f"{codes}); completed work is preserved in the worker "
-                "stores — re-run with --resume to heal and finish them")
-    else:
+        incomplete = sorted(still)
+    if incomplete:
+        codes = {i: state.shards[i].returncode for i in incomplete}
+        raise FleetError(
+            f"shard(s) {sorted(incomplete)} did not complete after "
+            f"{round_no} attempt round(s) (returncodes {codes}); completed "
+            "work is preserved in the worker stores — `python -m repro.fleet "
+            "doctor` explains each shard, and re-running with --resume (or "
+            "a higher --max-attempts) heals and finishes them")
+    if not launched:
         print(f"== fleet {plan.name!r} [{plan.digest()}]: all "
               f"{plan.shards} shard slice(s) already complete, "
               "nothing to launch")
@@ -500,3 +587,141 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
     finish_stats(cstats, expect_no_measure)
     return FleetResult(plan=plan, reports=reports, stats=cstats, state=state,
                        launched=launched)
+
+
+# ---------------------------------------------------------------------------
+# fleet doctor — explain, per shard, why the fleet is (in)complete
+# ---------------------------------------------------------------------------
+
+
+def _pair_lines(store_path: str, mine, canon_status) -> tuple[list[str], int]:
+    """Diagnose one shard's slice against its worker store (and the
+    canonical store): returns (report lines, #pairs still owing)."""
+    from repro.core import CampaignStore, CampaignStoreError
+    from repro.core.campaign import read_store_records
+
+    lines: list[str] = []
+    if not os.path.exists(store_path):
+        status = {}
+        lines.append(f"  worker store {store_path}: absent")
+    else:
+        try:
+            records, valid = read_store_records(store_path)
+            size = os.path.getsize(store_path)
+            if valid < size:
+                lines.append(
+                    f"  worker store {store_path}: torn tail — "
+                    f"{size - valid} byte(s) past the last valid record (a "
+                    "SIGKILL mid-append; healed automatically on the next "
+                    "load, costing at most one point)")
+            status = CampaignStore(store_path,
+                                   readonly=True).grid_status(mine)
+        except CampaignStoreError as e:
+            lines.append(f"  worker store {store_path}: CORRUPT beyond the "
+                         f"final record — {e}; delete it and relaunch the "
+                         "shard (--resume re-measures its whole slice)")
+            status = {}
+    owing = 0
+    for pair in mine:
+        r, m = pair
+        if canon_status and canon_status.get(pair) \
+                and canon_status[pair].complete:
+            continue                      # already satisfied by the merge
+        ps = status.get(pair)
+        if ps is None or (not ps.done and not ps.points):
+            owing += 1
+            lines.append(f"  {r}/{m}: absent — never measured")
+        elif ps.complete:
+            continue
+        elif ps.done and ps.missing:
+            owing += 1
+            lines.append(
+                f"  {r}/{m}: done-marked but {ps.points}/{ps.expected} "
+                f"point(s) present — missing k(s) {sorted(ps.missing)}; a "
+                "relaunch re-measures ONLY these")
+        else:
+            owing += 1
+            lines.append(
+                f"  {r}/{m}: in progress — {ps.points} point(s), no done "
+                "marker (the k grid is adaptive; a relaunch resumes at the "
+                "first missing k)")
+    return lines, owing
+
+
+def fleet_doctor(plan: SweepPlan,
+                 budget: Optional[RetryBudget] = None) -> tuple[int, str]:
+    """Explain, per shard, why a fleet is incomplete — the forensics behind
+    ``_incomplete_shards``'s yes/no answer.
+
+    For every shard: its ledger history (attempts, launcher, host, rc, heal
+    stats from ``fleet.json``), whether its lifetime attempt cap is
+    exhausted, the worker store's physical condition (torn tail to be
+    healed, corruption), and each owing (region, mode) pair with its
+    missing ks when the ``done`` marker pins them. Returns
+    ``(exit_code, report)``: 0 when the grid is fully covered, 1 otherwise.
+    """
+    from repro.core import CampaignStore
+
+    grid = plan.grid()
+    budget = budget if budget is not None else RetryBudget.from_dict(plan.retry)
+    state = None
+    if os.path.exists(plan.fleet_path()):
+        state = FleetState.load(plan.fleet_path())
+    out = [f"== fleet doctor: plan {plan.name!r} [{plan.digest()}] — "
+           f"{len(grid)} pair(s) over {plan.shards} shard(s)"]
+    if state is None:
+        out.append(f"fleet ledger {plan.fleet_path()}: not created yet "
+                   "(no run attempted)")
+    elif state.plan_digest != plan.digest():
+        out.append(f"fleet ledger {plan.fleet_path()}: STALE — built by "
+                   f"plan digest {state.plan_digest}; --fresh required")
+    canon_status = None
+    if os.path.exists(plan.store):
+        canon_status = CampaignStore(plan.store,
+                                     readonly=True).grid_status(grid)
+        done = sum(ps.complete for ps in canon_status.values())
+        out.append(f"canonical store {plan.store}: {done}/{len(grid)} "
+                   "pair(s) complete")
+    else:
+        out.append(f"canonical store {plan.store}: absent (no merge yet)")
+    total_owing = 0
+    for i in range(plan.shards):
+        mine = grid[i::plan.shards]
+        ss = state.shards.get(i) if state else None
+        hist = ""
+        if ss is not None and ss.attempt_log:
+            tries = ", ".join(
+                f"#{a.get('attempt')}: {a.get('launcher')}"
+                + (f"@{a.get('host')}" if a.get("host") else "")
+                + f" rc={a.get('rc')}"
+                + (f" measured={a.get('measured')} cached={a.get('cached')}"
+                   if a.get("measured") is not None else "")
+                for a in ss.attempt_log)
+            hist = f" — attempts: [{tries}]"
+        elif ss is not None and ss.attempts:
+            hist = f" — {ss.attempts} attempt(s), rc={ss.returncode}"
+        if not mine:
+            out.append(f"shard {i}: no pairs land on this shard{hist}")
+            continue
+        lines, owing = _pair_lines(plan.worker_stores()[i], mine,
+                                   canon_status)
+        total_owing += owing
+        verdict = "complete" if not owing else f"INCOMPLETE ({owing} " \
+            f"pair(s) owing)"
+        out.append(f"shard {i}: {verdict}{hist}")
+        if owing:
+            if ss is not None and budget.per_shard_cap \
+                    and ss.attempts >= budget.per_shard_cap:
+                out.append(
+                    f"  attempts exhausted: lifetime per-shard cap "
+                    f"{budget.per_shard_cap} reached ({ss.attempts} used) — "
+                    "raise --per-shard-cap, or --fresh to restart")
+            out.extend(lines)
+    if total_owing:
+        out.append(f"== verdict: INCOMPLETE — {total_owing} pair(s) still "
+                   "owe measurements; `python -m repro.fleet run --plan ... "
+                   "--resume` re-launches only the owing shards")
+    else:
+        out.append("== verdict: COMPLETE — every pair is covered; a resume "
+                   "replays with zero new measurements")
+    return (1 if total_owing else 0), "\n".join(out)

@@ -36,6 +36,7 @@ import dataclasses
 import hashlib
 import json
 import os
+from typing import Optional
 
 PLAN_SCHEMA = 1
 
@@ -59,6 +60,8 @@ class TargetSpec:
     params: dict
 
     def validate(self) -> None:
+        """Reject unknown kinds/modes/params at plan-build time (a bad
+        family must not fail later in every worker subprocess)."""
         if not self.modes:
             raise PlanError(f"target {self.kind!r} has no modes")
         if self.kind == "pallas":
@@ -126,11 +129,13 @@ class TargetSpec:
                 f"_s{int(p.get('seq', 128))}_b{int(p.get('batch', 4))}"]
 
     def to_dict(self) -> dict:
+        """The JSON-able form embedded in a plan's ``targets`` list."""
         return {"kind": self.kind, "modes": list(self.modes),
                 "params": self.params}
 
     @classmethod
     def from_dict(cls, d: dict) -> "TargetSpec":
+        """Rebuild a spec from its plan-JSON entry."""
         return cls(kind=d.get("kind", ""), modes=tuple(d.get("modes", ())),
                    params=dict(d.get("params", {})))
 
@@ -138,7 +143,19 @@ class TargetSpec:
 @dataclasses.dataclass
 class SweepPlan:
     """The full declarative grid plus every setting that shapes measurement
-    (reps, compile path, backend) and distribution (shards, threads)."""
+    (reps, compile path, backend) and distribution (shards, threads, and —
+    when declared — the launcher and retry policy).
+
+    ``launcher`` (optional) declares HOW shards are spawned:
+    ``{"kind": "local"}`` (subprocesses, the default),
+    ``{"kind": "ssh", "hosts": [{addr, python, workdir, env}, ...]}``, or
+    ``{"kind": "mock", "script": {"0": ["crash"], ...}}`` for deterministic
+    fault injection. ``retry`` (optional) declares the ``RetryBudget``:
+    ``{"max_attempts": N, "backoff": s, "per_shard_cap": M}``. Both are
+    serialized into the digest when set (a different cluster layout or
+    retry policy is a different plan identity); when absent, the digest is
+    byte-identical to a pre-launcher plan.
+    """
     name: str
     store: str
     targets: list[TargetSpec]
@@ -147,9 +164,13 @@ class SweepPlan:
     workers: int = 1
     compile_once: bool = True
     backend: str = "auto"
+    launcher: Optional[dict] = None
+    retry: Optional[dict] = None
 
     # -- validation / identity ----------------------------------------------
     def validate(self) -> None:
+        """Reject malformed plans (empty grids, bad sizes, unknown modes,
+        invalid launcher/retry specs) before they land on disk."""
         if not self.name:
             raise PlanError("plan needs a name")
         if not self.store:
@@ -160,15 +181,56 @@ class SweepPlan:
             raise PlanError("shards, workers and reps must be >= 1")
         for spec in self.targets:
             spec.validate()
+        self._validate_distribution()
+
+    def _validate_distribution(self) -> None:
+        """Validate the optional launcher/retry specs (lazy import: the
+        launchers module sits above plan in the layer order)."""
+        from repro.fleet import launchers as ln
+
+        if self.launcher is not None:
+            kind = self.launcher.get("kind")
+            if kind not in ln.LAUNCHER_KINDS:
+                raise PlanError(f"launcher kind {kind!r} unknown; one of "
+                                f"{list(ln.LAUNCHER_KINDS)}")
+            unknown = sorted(set(self.launcher)
+                             - {"kind", "hosts", "script", "in_process"})
+            if unknown:
+                raise PlanError(f"unknown launcher key(s) {unknown}")
+            try:
+                if kind == "ssh":
+                    hosts = [ln.HostSpec.from_dict(h)
+                             for h in self.launcher.get("hosts", [])]
+                    if not hosts:
+                        raise PlanError("ssh launcher spec needs a "
+                                        "non-empty hosts list")
+                elif kind == "mock":
+                    ln.MockClusterLauncher(self.launcher.get("script"))
+            except ln.FleetError as e:
+                raise PlanError(str(e)) from e
+        if self.retry is not None:
+            try:
+                ln.RetryBudget.from_dict(self.retry)
+            except ln.FleetError as e:
+                raise PlanError(str(e)) from e
 
     def to_dict(self) -> dict:
-        return {"sweep_plan": PLAN_SCHEMA, "name": self.name,
-                "store": self.store, "reps": self.reps,
-                "shards": self.shards, "workers": self.workers,
-                "compile_once": self.compile_once, "backend": self.backend,
-                "targets": [t.to_dict() for t in self.targets]}
+        """The canonical JSON-able form; ``launcher``/``retry`` appear only
+        when declared, so plans without them keep their pre-launcher
+        digest."""
+        d = {"sweep_plan": PLAN_SCHEMA, "name": self.name,
+             "store": self.store, "reps": self.reps,
+             "shards": self.shards, "workers": self.workers,
+             "compile_once": self.compile_once, "backend": self.backend,
+             "targets": [t.to_dict() for t in self.targets]}
+        if self.launcher is not None:
+            d["launcher"] = self.launcher
+        if self.retry is not None:
+            d["retry"] = self.retry
+        return d
 
     def canonical_json(self) -> str:
+        """``to_dict`` with sorted keys — the digest's input bytes."""
         return json.dumps(self.to_dict(), sort_keys=True)
 
     def digest(self) -> str:
@@ -178,6 +240,8 @@ class SweepPlan:
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> str:
+        """Validate, then atomically write the plan JSON (with its digest
+        echoed for humans) to ``path``; returns ``path``."""
         self.validate()
         d = os.path.dirname(path)
         if d:
@@ -192,6 +256,8 @@ class SweepPlan:
 
     @classmethod
     def from_dict(cls, d: dict) -> "SweepPlan":
+        """Rebuild (and validate) a plan from its JSON object; plans saved
+        before the launcher/retry fields existed load unchanged."""
         if d.get("sweep_plan") != PLAN_SCHEMA:
             raise PlanError(f"not a sweep plan (sweep_plan="
                             f"{d.get('sweep_plan')!r}, want {PLAN_SCHEMA})")
@@ -201,12 +267,14 @@ class SweepPlan:
                    reps=int(d.get("reps", 2)), shards=int(d.get("shards", 1)),
                    workers=int(d.get("workers", 1)),
                    compile_once=bool(d.get("compile_once", True)),
-                   backend=d.get("backend", "auto"))
+                   backend=d.get("backend", "auto"),
+                   launcher=d.get("launcher"), retry=d.get("retry"))
         plan.validate()
         return plan
 
     @classmethod
     def load(cls, path: str) -> "SweepPlan":
+        """Load and validate a plan JSON file."""
         with open(path) as f:
             return cls.from_dict(json.load(f))
 
@@ -239,12 +307,15 @@ class SweepPlan:
 
     # -- derived paths -------------------------------------------------------
     def worker_stores(self) -> list[str]:
+        """Every shard's worker-store path (``store.wIofN.jsonl``)."""
         from repro.core.campaign import worker_store
         return [worker_store(self.store, i, self.shards)
                 for i in range(self.shards)]
 
     def fleet_path(self) -> str:
+        """Where this plan's ``fleet.json`` ledger lives."""
         return os.path.splitext(self.store)[0] + ".fleet.json"
 
     def report_path(self) -> str:
+        """Where this plan's canonical ``report.json`` lands."""
         return os.path.splitext(self.store)[0] + ".report.json"

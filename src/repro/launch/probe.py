@@ -27,8 +27,13 @@ sweep compiles ≤2 Pallas executables per mode:
         [--modes fp,vmem] [--store PATH] [--expect-no-measure]
 
 Fleet worker mode executes a slice of a saved ``SweepPlan`` — this is what
-``python -m repro.fleet run`` spawns, and the per-host command of the
-multi-host recipe (docs/orchestration.md):
+``python -m repro.fleet run`` spawns (through any of its launchers: local
+subprocesses, ssh hosts, the mock cluster) and the per-host command of the
+manual multi-host recipe (docs/orchestration.md). Launchers hand the worker
+a handshake env: ``REPRO_FLEET_EXPECT_DIGEST`` (the worker refuses to run
+if its plan file's digest disagrees — an out-of-sync plan copy on one host
+must not splice a different grid into the fleet) and ``REPRO_FLEET_HOST``
+(echoed in the worker banner and the fleet ledger's attempt log):
 
     PYTHONPATH=src python -m repro.launch.probe --plan plan.json --shard 0/2
     PYTHONPATH=src python -m repro.launch.probe --plan plan.json \
@@ -140,6 +145,9 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
                    compile_once: bool = True,
                    shard: Optional[tuple[int, int]] = None,
                    expect_no_measure: bool = False) -> None:
+    """Measured graph-level probe of one model step (smoke config, host
+    backend): builds a one-target SweepPlan from the flags and runs it
+    through the fleet worker's campaign tail."""
     from repro.core.noise import make_modes
 
     unknown = [m for m in modes if m not in make_modes()]
@@ -216,6 +224,9 @@ def analytic_probe(arch: str, shape_name: str, dryrun_dir: str,
                    modes: list[str], *, tol: float, store: str | None = None,
                    fresh: bool = False, expect_no_measure: bool = False
                    ) -> None:
+    """Analytic probe of one (arch, shape) dry-run cell: push its roofline
+    terms through the saturation model as a resumable prediction campaign
+    (``pred`` records replay byte-identically on re-run)."""
     from repro.configs import TPU_V5E, canonical
     from repro.core import AnalyticCampaign, StepTerms, classify
     from repro.core.analytic import pattern_deltas
@@ -274,19 +285,31 @@ def _parse_shard(text: str) -> tuple[int, int]:
     return idx, cnt
 
 
-def main(argv: Optional[Sequence[str]] = None) -> None:
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The probe CLI's argparse tree (exposed for help/doc tests)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.probe",
+        description="noise-injection bottleneck probe (measured, analytic, "
+                    "pallas-kernel, and fleet-worker modes)")
     ap.add_argument("--arch", default=None,
                     help="model architecture (required unless --pallas or "
                          "--plan)")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--kind", default="train", choices=("train", "decode"))
-    ap.add_argument("--shape", default="train_4k")
-    ap.add_argument("--analytic", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced smoke config (measured mode always uses "
+                         "it; flag kept for explicitness)")
+    ap.add_argument("--kind", default="train", choices=("train", "decode"),
+                    help="which model step to probe")
+    ap.add_argument("--shape", default="train_4k",
+                    help="dry-run shape cell to read under --analytic")
+    ap.add_argument("--analytic", action="store_true",
+                    help="predict absorption from the dry-run roofline "
+                         "terms instead of measuring")
     ap.add_argument("--plan", default=None, metavar="PLAN.json",
                     help="execute a repro.fleet SweepPlan: with --shard I/N "
                          "measure that slice into its worker store (the "
-                         "fleet worker entry); without, run the whole plan "
+                         "fleet worker entry; launchers hand it the "
+                         "REPRO_FLEET_EXPECT_DIGEST/REPRO_FLEET_HOST "
+                         "handshake env); without, run the whole plan "
                          "in-process, classify, and write the report")
     ap.add_argument("--pallas", default=None,
                     metavar="{matmul,spmxv,attention,probe}",
@@ -296,15 +319,21 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--pallas-n", type=int, default=None,
                     help="kernel size knob (rows for matmul/spmxv, seq for "
                          "attention, grid steps for probe)")
-    ap.add_argument("--dryrun-dir", default="experiments/dryrun/16x16")
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun/16x16",
+                    help="where the dry-run artifact cells live "
+                         "(--analytic)")
     ap.add_argument("--modes", default=None,
                     help="noise modes (default: "
                          f"{','.join(DEFAULT_GRAPH_MODES)}, or the "
                          "kernel's fp/mxu/vmem set under --pallas)")
-    ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--reps", type=int, default=3)
-    ap.add_argument("--tol", type=float, default=0.05)
+    ap.add_argument("--seq", type=int, default=128,
+                    help="sequence length of the probed step")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch size of the probed step")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timing repetitions per measured point")
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="absorption-fit detection tolerance (--analytic)")
     ap.add_argument("--store", default=None,
                     help="campaign JSONL path (default: derived under "
                          f"{CAMPAIGN_DIR}/)")
@@ -321,7 +350,13 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                          "(assert a merged/complete store replays fully)")
     ap.add_argument("--no-compile-once", action="store_true",
                     help="force the trace-per-k fallback sweep path")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    """CLI entry: route the flags to the measured / analytic / pallas /
+    fleet-worker probe path."""
+    args = build_parser().parse_args(argv)
 
     modes = ([m.strip() for m in args.modes.split(",") if m.strip()]
              if args.modes else None)

@@ -1,0 +1,398 @@
+"""Pluggable launchers + retry budgets: the MockClusterLauncher fault paths
+(scripted crash -> retried shard heals its torn store and re-measures only
+the missing points, final report byte-identical to a clean single-process
+run; attempts-exhausted exits nonzero and fleet.json says why), the
+per-shard lifetime cap, the fleet doctor's diagnosis, the SSH launcher's
+command construction and its documented degrade when ssh is missing, and
+the launcher->worker plan-digest handshake.
+
+Measurement determinism: REPRO_SYNTH_MEASURE (the deterministic stand-in
+clock) makes independently-run shards byte-comparable."""
+import json
+import os
+
+import pytest
+
+from repro.core.campaign import host_store, read_store_records
+from repro.fleet.executor import (FleetError, FleetState, fleet_doctor,
+                                  run_fleet, run_worker)
+from repro.fleet.launchers import (MANUAL_RECIPE, HostSpec, LocalLauncher,
+                                   MockClusterLauncher, RetryBudget,
+                                   SSHLauncher, load_hosts, resolve_launcher,
+                                   tear_store_tail)
+from repro.fleet.plan import PlanError, SweepPlan, TargetSpec
+
+
+@pytest.fixture
+def synth_measure(monkeypatch):
+    monkeypatch.setenv("REPRO_SYNTH_MEASURE", "1e-3")
+
+
+def _plan(tmp_path, *, shards=2, modes=("fp", "mxu"), sizes=(8,),
+          name="fleet_probe", stem="fleet", launcher=None, retry=None):
+    plan = SweepPlan(
+        name=name, store=str(tmp_path / stem / "store.jsonl"),
+        targets=[TargetSpec("pallas", tuple(modes),
+                            {"kernel": "probe", "sizes": list(sizes)})],
+        reps=2, shards=shards, backend="interpret",
+        launcher=launcher, retry=retry)
+    path = str(tmp_path / f"{stem}_plan.json")
+    plan.save(path)
+    return plan, path
+
+
+# ---------------------------------------------------------------------------
+# RetryBudget
+# ---------------------------------------------------------------------------
+
+def test_retry_budget_validation_and_backoff():
+    b = RetryBudget(max_attempts=3, backoff=0.5, per_shard_cap=5)
+    assert b.delay(1) == 0.0                       # first round: no wait
+    assert b.delay(2) == 0.5
+    assert b.delay(3) == 1.0                       # doubles per round
+    assert RetryBudget.from_dict(None) == RetryBudget()
+    assert RetryBudget.from_dict({"max_attempts": 2}).max_attempts == 2
+    with pytest.raises(FleetError, match="max_attempts"):
+        RetryBudget(max_attempts=0)
+    with pytest.raises(FleetError, match="unknown retry setting"):
+        RetryBudget.from_dict({"attempts": 2})
+
+
+# ---------------------------------------------------------------------------
+# MockClusterLauncher: the scripted-fault multi-host path on one machine
+# ---------------------------------------------------------------------------
+
+def test_mock_crash_retries_heal_and_match_single_process(tmp_path,
+                                                          synth_measure):
+    """Tentpole acceptance: shard 0's first attempt crashes (torn worker
+    store); within ONE run the retry budget re-launches only shard 0, the
+    store heals, only the missing point is re-measured, and the final
+    report is byte-identical to a clean single-process run."""
+    plan, path = _plan(tmp_path, stem="mockcrash",
+                       launcher={"kind": "mock", "script": {"0": ["crash"]}},
+                       retry={"max_attempts": 2})
+    res = run_fleet(path)
+    assert res.launched == [0, 1]
+    s0 = res.state.shards[0]
+    assert s0.attempts == 2
+    assert [a["rc"] for a in s0.attempt_log] == [-9, 0]
+    assert [a["launcher"] for a in s0.attempt_log] == ["mock", "mock"]
+    assert s0.attempt_log[0]["host"] == "mock-host-0"
+    heal = s0.attempt_log[1]
+    assert heal["measured"] == 1 and heal["cached"] > 0   # healed, not redone
+    assert res.state.shards[1].attempts == 1
+
+    single, single_path = _plan(tmp_path, stem="mockcrash_ref", shards=1)
+    run_worker(SweepPlan.load(single_path))
+    assert open(plan.report_path(), "rb").read() \
+        == open(single.report_path(), "rb").read()
+
+    # completed fleet replays free, launching nothing
+    res2 = run_fleet(path, resume=True, expect_no_measure=True)
+    assert res2.launched == []
+
+
+def test_mock_attempts_exhausted_exits_nonzero_and_ledger_says_why(
+        tmp_path, synth_measure):
+    """Satellite: a shard that fails every allowed attempt -> nonzero exit
+    through the CLI, and fleet.json records each attempt (launcher, host,
+    rc) with status 'failed'."""
+    from repro.fleet.cli import main
+
+    plan, path = _plan(tmp_path, stem="mockdead",
+                       launcher={"kind": "mock",
+                                 "script": {"0": ["dead", "timeout"]}},
+                       retry={"max_attempts": 2})
+    with pytest.raises(SystemExit) as ei:
+        main(["run", "--plan", path])
+    assert "did not complete after 2 attempt round" in str(ei.value)
+    state = FleetState.load(plan.fleet_path())
+    s0 = state.shards[0]
+    assert s0.status == "failed"
+    assert [a["rc"] for a in s0.attempt_log] == [1, 124]
+    # attempts whose worker never ran must not inherit stale heal stats
+    assert all(a["measured"] is None and a["cached"] is None
+               for a in s0.attempt_log)
+    assert state.shards[1].status == "done"
+
+
+def test_per_shard_cap_marks_shard_exhausted(tmp_path, synth_measure):
+    """A shard may not burn the budget forever: once its LIFETIME attempts
+    hit per_shard_cap, resume refuses to relaunch it and the ledger says
+    'exhausted'."""
+    plan, path = _plan(tmp_path, stem="capped",
+                       launcher={"kind": "mock",
+                                 "script": {"1": ["dead", "dead", "dead"]}},
+                       retry={"per_shard_cap": 2})
+    with pytest.raises(FleetError, match="did not complete"):
+        run_fleet(path)
+    # attempt 2 also fails; the cap is now reached, mid-run
+    with pytest.raises(FleetError, match="per-shard attempt cap"):
+        run_fleet(path, resume=True)
+    # a further resume refuses to launch the shard at all
+    with pytest.raises(FleetError, match="per-shard attempt cap"):
+        run_fleet(path, resume=True)
+    state = FleetState.load(plan.fleet_path())
+    assert state.shards[1].status == "exhausted"
+    assert state.shards[1].attempts == 2
+    code, report = fleet_doctor(plan)
+    assert code == 1
+    assert "attempts exhausted" in report
+
+
+def test_mock_attempt_ordinals_follow_the_ledger_across_resumes(
+        tmp_path, synth_measure):
+    """The executor passes LIFETIME attempt ordinals to the launcher, so a
+    fault script stays deterministic across --resume runs: attempt 2 in a
+    fresh process still reads script[1]."""
+    plan, path = _plan(tmp_path, stem="ordinal",
+                       launcher={"kind": "mock",
+                                 "script": {"0": ["crash", "dead"]}})
+    with pytest.raises(FleetError):
+        run_fleet(path)                                   # attempt 1: crash
+    with pytest.raises(FleetError):
+        run_fleet(path, resume=True)                      # attempt 2: dead
+    state = FleetState.load(plan.fleet_path())
+    log = state.shards[0].attempt_log
+    assert [a["rc"] for a in log] == [-9, 1]
+    # the crash attempt really ran (stats recorded); the dead attempt must
+    # NOT inherit the crash attempt's stale stats file
+    assert log[0]["measured"] and log[1]["measured"] is None
+    res = run_fleet(path, resume=True)                    # attempt 3: ok
+    assert res.launched == [0]
+
+
+# ---------------------------------------------------------------------------
+# fleet doctor: explain WHY a shard is incomplete
+# ---------------------------------------------------------------------------
+
+def test_doctor_names_missing_pair_and_k_points(tmp_path, synth_measure):
+    """Acceptance: on the pre-retry state after a scripted 'drop-point'
+    fault, doctor names the incomplete shard and the exact missing
+    (pair, k); after the healing retry it reports COMPLETE."""
+    plan, path = _plan(tmp_path, stem="doctor",
+                       launcher={"kind": "mock",
+                                 "script": {"0": ["drop-point"]}})
+    with pytest.raises(FleetError, match=r"shard\(s\) \[0\]"):
+        run_fleet(path)
+    code, report = fleet_doctor(plan)
+    assert code == 1
+    assert "shard 0: INCOMPLETE" in report
+    assert "missing k(s) [" in report        # the exact missing point named
+    assert "shard 1: complete" in report
+    assert "rc=-9" in report                 # the attempt history
+    # the missing k doctor names is exactly what pair_status reports
+    ws = plan.worker_stores()[0]
+    from repro.core import CampaignStore
+    st = CampaignStore(ws, readonly=True)
+    missing = [ps.missing for ps in
+               st.grid_status(plan.grid()[0::2]).values() if ps.missing]
+    assert missing and str(sorted(missing[0])) in report
+
+    res = run_fleet(path, resume=True, retry=RetryBudget(max_attempts=2))
+    assert res.launched == [0]
+    wstats = json.load(open(ws + ".stats.json"))
+    assert wstats["measured"] == 1           # ONLY the dropped point
+    code, report = fleet_doctor(plan)
+    assert code == 0 and "COMPLETE" in report
+
+
+def test_doctor_reports_torn_tail_and_absent_stores(tmp_path, synth_measure):
+    plan, path = _plan(tmp_path, stem="docttorn")
+    # nothing ran yet: everything absent, verdict INCOMPLETE
+    code, report = fleet_doctor(plan)
+    assert code == 1
+    assert "not created yet" in report and "absent" in report
+    # run shard 0 then tear its store like a SIGKILL mid-append
+    run_worker(SweepPlan.load(path), index=0, count=2)
+    tear_store_tail(plan.worker_stores()[0])
+    code, report = fleet_doctor(plan)
+    assert code == 1
+    assert "torn tail" in report
+    assert "in progress" in report           # the done-less pair explained
+    valid = read_store_records(plan.worker_stores()[0])[1]
+    assert valid < os.path.getsize(plan.worker_stores()[0])
+
+
+# ---------------------------------------------------------------------------
+# SSH launcher: geometry, command construction, documented degrade
+# ---------------------------------------------------------------------------
+
+def _hosts_file(tmp_path):
+    hosts = {"hosts": [
+        {"addr": "alice@n0", "python": "/opt/venv/bin/python",
+         "workdir": "/scratch/repro",
+         "env": {"PYTHONPATH": "src",
+                 # hostile: tries to clobber the handshake digest
+                 "REPRO_FLEET_EXPECT_DIGEST": "bogus"}},
+        {"addr": "n1"}]}
+    path = str(tmp_path / "hosts.json")
+    with open(path, "w") as f:
+        json.dump(hosts, f)
+    return path
+
+
+def test_load_hosts_and_validation(tmp_path):
+    hosts = load_hosts(_hosts_file(tmp_path))
+    assert [h.addr for h in hosts] == ["alice@n0", "n1"]
+    assert hosts[0].python == "/opt/venv/bin/python"
+    assert dict(hosts[0].env)["PYTHONPATH"] == "src"
+    assert hosts[1].workdir == "."             # defaults fill in
+    with pytest.raises(FleetError, match="addr"):
+        HostSpec.from_dict({"python": "python3"})
+    with pytest.raises(FleetError, match="unknown key"):
+        HostSpec.from_dict({"addr": "n0", "port": 22})
+    empty = str(tmp_path / "empty.json")
+    with open(empty, "w") as f:
+        json.dump([], f)
+    with pytest.raises(FleetError, match="non-empty"):
+        load_hosts(empty)
+
+
+def test_ssh_remote_command_carries_handshake_and_geometry(tmp_path,
+                                                           monkeypatch):
+    plan, path = _plan(tmp_path, stem="sshcmd")
+    plan.store = "experiments/campaigns/s.jsonl"   # relative, as ssh needs
+    hosts = load_hosts(_hosts_file(tmp_path))
+    lch = SSHLauncher(hosts)
+    assert lch.host_for(0).addr == "alice@n0"
+    assert lch.host_for(3).addr == "n1"            # round-robin ring
+    cmd = lch._remote_command(hosts[0], plan, "plan.json", 0)
+    assert cmd[:2] == ["ssh", "-o"]
+    line = cmd[-1]
+    assert "cd /scratch/repro" in line
+    # the handshake digest wins over a hosts.json env that tries to set it
+    assert f"REPRO_FLEET_EXPECT_DIGEST={plan.digest()}" in line
+    assert "REPRO_FLEET_EXPECT_DIGEST=bogus" not in line
+    assert "REPRO_FLEET_HOST=alice@n0" in line
+    assert "PYTHONPATH=src" in line
+    assert "/opt/venv/bin/python -m repro.launch.probe" in line
+    assert "--shard 0/2" in line
+    # stale remote stats are wiped so a dead attempt can't inherit them
+    assert "rm -f " in line and ".stats.json" in line
+
+
+def test_ssh_degrades_to_manual_recipe_without_ssh(tmp_path, monkeypatch):
+    """Satellite of the tentpole: no ssh on PATH -> the launcher refuses
+    with the documented manual per-host recipe instead of half-running."""
+    plan, path = _plan(tmp_path, stem="sshless")
+    lch = SSHLauncher([HostSpec(addr="n0")])
+    monkeypatch.setattr("shutil.which", lambda name: None)
+    assert not SSHLauncher.available()
+    with pytest.raises(FleetError) as ei:
+        lch.launch(path, plan, [0])
+    assert "manual multi-host recipe" in str(ei.value)
+    assert str(ei.value) == MANUAL_RECIPE
+
+
+def test_ssh_requires_relative_store(tmp_path, monkeypatch):
+    plan, path = _plan(tmp_path, stem="sshabs")   # tmp store path: absolute
+    lch = SSHLauncher([HostSpec(addr="n0")])
+    monkeypatch.setattr("shutil.which", lambda name: f"/usr/bin/{name}")
+    with pytest.raises(FleetError, match="RELATIVE"):
+        lch.launch(path, plan, [0])
+
+
+def test_host_store_namespacing():
+    assert host_store("a/b.jsonl", "alice@n0") == "a/b.halice-n0.jsonl"
+    assert host_store("a/b", "n0") == "a/b.hn0.jsonl"
+
+
+# ---------------------------------------------------------------------------
+# resolution + plan serialization of launcher/retry
+# ---------------------------------------------------------------------------
+
+def test_resolve_launcher_precedence(tmp_path):
+    plan, _ = _plan(tmp_path, stem="resolve",
+                    launcher={"kind": "mock", "script": {"0": ["crash"]}})
+    assert isinstance(resolve_launcher(plan=plan), MockClusterLauncher)
+    assert resolve_launcher(plan=plan).script == {0: ("crash",)}
+    # an explicit kind beats the plan's spec
+    assert isinstance(resolve_launcher("local", plan=plan), LocalLauncher)
+    lch = resolve_launcher("mock", plan=plan, mock_script={1: ["dead"]})
+    assert lch.script == {1: ("dead",)}
+    with pytest.raises(FleetError, match="unknown launcher kind"):
+        resolve_launcher("k8s")
+    with pytest.raises(FleetError, match="--in-process"):
+        resolve_launcher("mock", in_process=True)
+    with pytest.raises(FleetError, match="hosts"):
+        resolve_launcher("ssh")
+    # --hosts/--mock-script must never be silently dropped onto a local
+    # launcher (the sweep would run on the wrong hosts / without faults)
+    with pytest.raises(FleetError, match="ssh/mock"):
+        resolve_launcher(hosts_path="hosts.json")
+    with pytest.raises(FleetError, match="ssh/mock"):
+        resolve_launcher(mock_script={0: ["crash"]})
+    # a bad script is a clean FleetError, not a raw ValueError traceback
+    with pytest.raises(FleetError, match="shard indices"):
+        MockClusterLauncher({"x": ["ok"]})
+
+
+def test_plan_serializes_launcher_and_retry_into_digest(tmp_path):
+    bare, _ = _plan(tmp_path, stem="bare")
+    armed, path = _plan(tmp_path, stem="armed",
+                        launcher={"kind": "mock", "script": {"0": ["crash"]}},
+                        retry={"max_attempts": 2, "backoff": 0.1})
+    # distribution settings are plan identity: the digest pins them
+    assert bare.digest() != armed.digest()
+    loaded = SweepPlan.load(path)
+    assert loaded.launcher == armed.launcher
+    assert loaded.retry == armed.retry
+    assert loaded.digest() == armed.digest()
+    # ...but a plan WITHOUT them keeps its pre-launcher digest bytes
+    assert "launcher" not in bare.to_dict() and "retry" not in bare.to_dict()
+    with pytest.raises(PlanError, match="launcher kind"):
+        _plan(tmp_path, stem="badl", launcher={"kind": "k8s"})
+    with pytest.raises(PlanError, match="mock action"):
+        _plan(tmp_path, stem="bads",
+              launcher={"kind": "mock", "script": {"0": ["explode"]}})
+    with pytest.raises(PlanError, match="hosts"):
+        _plan(tmp_path, stem="badh", launcher={"kind": "ssh"})
+    with pytest.raises(PlanError, match="retry"):
+        _plan(tmp_path, stem="badr", retry={"retries": 3})
+
+
+# ---------------------------------------------------------------------------
+# launcher -> worker handshake
+# ---------------------------------------------------------------------------
+
+def test_worker_refuses_mismatched_plan_digest(tmp_path, synth_measure,
+                                               monkeypatch):
+    plan, path = _plan(tmp_path, stem="shake")
+    monkeypatch.setenv("REPRO_FLEET_EXPECT_DIGEST", "deadbeef0000")
+    with pytest.raises(FleetError, match="handshake"):
+        run_worker(SweepPlan.load(path), index=0, count=2)
+    monkeypatch.setenv("REPRO_FLEET_EXPECT_DIGEST", plan.digest())
+    run_worker(SweepPlan.load(path), index=0, count=2)   # matching: runs
+
+
+# ---------------------------------------------------------------------------
+# CLI round trip: plan flags -> embedded spec -> run/doctor
+# ---------------------------------------------------------------------------
+
+def test_cli_plan_run_doctor_with_mock_launcher(tmp_path, synth_measure,
+                                                capsys):
+    from repro.fleet.cli import main
+
+    out_plan = str(tmp_path / "cli_plan.json")
+    store = str(tmp_path / "cli" / "store.jsonl")
+    assert main(["plan", "--out", out_plan, "--pallas", "probe",
+                 "--sizes", "8", "--modes", "fp", "--reps", "2",
+                 "--shards", "2", "--backend", "interpret",
+                 "--store", store, "--launcher", "mock",
+                 "--mock-script", '{"0": ["crash"]}',
+                 "--max-attempts", "2"]) == 0
+    plan = SweepPlan.load(out_plan)
+    assert plan.launcher == {"kind": "mock", "script": {"0": ["crash"]}}
+    assert plan.retry == {"max_attempts": 2}
+    # run uses the plan's embedded mock launcher + retry budget: the
+    # scripted crash is healed by the in-run retry, rc 0
+    assert main(["run", "--plan", out_plan]) == 0
+    out = capsys.readouterr().out
+    assert "scripted action 'crash'" in out
+    assert "round 2/2" in out
+    assert main(["doctor", "--plan", out_plan]) == 0
+    assert "COMPLETE" in capsys.readouterr().out
+    with pytest.raises(SystemExit, match="--in-process"):
+        main(["run", "--plan", out_plan, "--resume", "--in-process",
+              "--launcher", "ssh"])

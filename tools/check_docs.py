@@ -1,0 +1,209 @@
+#!/usr/bin/env python
+"""Documentation checker — every cross-reference in docs/ and README must
+resolve, and every quoted command must actually run.
+
+Checks (over README.md + docs/*.md):
+
+  1. relative markdown links ``[text](path)`` point at files that exist;
+  2. ``path/to/file.py:123`` references name a real file with >= 123 lines;
+  3. backticked repo paths (``src/...``, ``tests/...``, ``benchmarks/...``,
+     ``examples/...``, ``tools/...``, ``docs/...``, ``.github/...``) exist;
+  4. backticked dotted code references (``repro.fleet.launchers.SSHLauncher``,
+     ``repro.kernels.noise_slots.emit_noise_rt``) resolve to a module file
+     that really defines the named symbol;
+  5. ``python examples/foo.py`` commands name files that byte-compile;
+  6. with ``--run-commands`` (the CI docs job): every ``python -m pkg.mod``
+     command quoted in a fenced block is executed in ``--help`` form — the
+     entry point must exist and its argparse tree must build.
+
+Exit 0 when everything resolves, 1 otherwise (each failure printed).
+Run from the repo root:  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import py_compile
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PATH_PREFIXES = ("src/", "tests/", "benchmarks/", "examples/", "tools/",
+                 "docs/", ".github/")
+MODULE_PREFIXES = ("repro", "benchmarks")
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+FILE_LINE_RE = re.compile(
+    r"\b((?:src|tests|benchmarks|examples|tools|docs)/[\w/.-]+?"
+    r"\.(?:py|md|yml|json)):(\d+)\b")
+BACKTICK_RE = re.compile(r"`([^`\n]+)`")
+FENCE_RE = re.compile(r"```[a-z]*\n(.*?)```", re.DOTALL)
+CMD_MODULE_RE = re.compile(r"python(?:3)?\s+-m\s+([\w.]+)")
+CMD_SCRIPT_RE = re.compile(r"python(?:3)?\s+((?:examples|tools|benchmarks)/"
+                           r"[\w/.-]+\.py)")
+DOTTED_RE = re.compile(r"^[A-Za-z_][\w]*(?:\.[A-Za-z_][\w]*)+$")
+
+
+def _exists(rel: str) -> bool:
+    return os.path.exists(os.path.join(ROOT, rel))
+
+
+def check_links(md_path: str, text: str, problems: list[str]) -> None:
+    """Rule 1: relative markdown links resolve (anchors/URLs skipped)."""
+    base = os.path.dirname(md_path)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        if not (os.path.exists(os.path.join(base, rel)) or _exists(rel)):
+            problems.append(f"{md_path}: broken link -> {target}")
+
+
+def check_file_lines(md_path: str, text: str, problems: list[str]) -> None:
+    """Rule 2: ``file.py:123`` references resolve to a long-enough file."""
+    for rel, line in FILE_LINE_RE.findall(text):
+        full = os.path.join(ROOT, rel)
+        if not os.path.exists(full):
+            problems.append(f"{md_path}: file:line ref to missing file "
+                            f"{rel}:{line}")
+            continue
+        with open(full, "rb") as f:
+            n = sum(1 for _ in f)
+        if int(line) > n:
+            problems.append(f"{md_path}: {rel}:{line} but the file has only "
+                            f"{n} lines")
+
+
+def _resolve_dotted(token: str) -> str | None:
+    """Rule 4 resolver: map ``a.b.c.symbol...`` to a module file and check
+    the first symbol after the module is defined there. Returns an error
+    string, or None when the token resolves (or is not a code ref)."""
+    parts = token.split(".")
+    for k in range(len(parts), 0, -1):
+        for prefix in ("src", os.path.join("src", "repro"), "."):
+            stem = os.path.join(ROOT, prefix, *parts[:k])
+            mod_file = None
+            if os.path.isfile(stem + ".py"):
+                mod_file = stem + ".py"
+            elif os.path.isdir(stem):
+                init = os.path.join(stem, "__init__.py")
+                mod_file = init if os.path.isfile(init) else None
+            if mod_file is None:
+                continue
+            rest = parts[k:]
+            if not rest:
+                return None                      # a module reference: exists
+            sym = rest[0]
+            src = open(mod_file).read()
+            if re.search(rf"^\s*(?:def|class)\s+{re.escape(sym)}\b|"
+                         rf"^{re.escape(sym)}\s*[:=]", src, re.MULTILINE):
+                return None
+            return (f"dotted ref {token!r}: {os.path.relpath(mod_file, ROOT)}"
+                    f" defines no symbol {sym!r}")
+    return None        # no module file at any split: not a code reference
+
+
+def check_backticks(md_path: str, text: str, problems: list[str]) -> None:
+    """Rules 3+4: backticked repo paths exist; dotted code refs resolve."""
+    for token in BACKTICK_RE.findall(text):
+        token = token.strip()
+        if any(ch in token for ch in " ()[]{}<>*$\"'=,"):
+            continue
+        if token.startswith(PATH_PREFIXES):
+            rel = token.rstrip("/").split("#")[0].split(":")[0]
+            if not _exists(rel):
+                problems.append(f"{md_path}: backticked path {token!r} "
+                                "does not exist")
+        elif DOTTED_RE.match(token) and token.startswith(MODULE_PREFIXES):
+            err = _resolve_dotted(token)
+            if err:
+                problems.append(f"{md_path}: {err}")
+
+
+def fenced_commands(text: str) -> tuple[set[str], set[str]]:
+    """Collect (module commands, script paths) from fenced code blocks."""
+    modules: set[str] = set()
+    scripts: set[str] = set()
+    for block in FENCE_RE.findall(text):
+        for mod in CMD_MODULE_RE.findall(block):
+            if mod.startswith(MODULE_PREFIXES):
+                modules.add(mod)
+        for script in CMD_SCRIPT_RE.findall(block):
+            scripts.add(script)
+    return modules, scripts
+
+
+def check_scripts(md_path: str, scripts: set[str],
+                  problems: list[str]) -> None:
+    """Rule 5: quoted ``python <script>.py`` files exist and byte-compile."""
+    for rel in sorted(scripts):
+        full = os.path.join(ROOT, rel)
+        if not os.path.exists(full):
+            problems.append(f"{md_path}: quoted script {rel} does not exist")
+            continue
+        try:
+            py_compile.compile(full, doraise=True, cfile=os.devnull)
+        except py_compile.PyCompileError as e:
+            problems.append(f"{md_path}: quoted script {rel} does not "
+                            f"compile: {e}")
+
+
+def run_commands(modules: set[str], problems: list[str]) -> None:
+    """Rule 6: run every quoted ``python -m`` module with ``--help``."""
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    parts = [p for p in env.get("PYTHONPATH", "").split(os.pathsep) if p]
+    env["PYTHONPATH"] = os.pathsep.join([src] + parts)
+    for mod in sorted(modules):
+        res = subprocess.run([sys.executable, "-m", mod, "--help"],
+                             cwd=ROOT, env=env, stdout=subprocess.PIPE,
+                             stderr=subprocess.STDOUT, text=True,
+                             timeout=300)
+        status = "ok" if res.returncode == 0 else f"rc={res.returncode}"
+        print(f"  python -m {mod} --help ... {status}")
+        if res.returncode != 0:
+            problems.append(f"quoted command `python -m {mod}` fails "
+                            f"--help (rc={res.returncode}):\n"
+                            + res.stdout[-2000:])
+
+
+def main(argv=None) -> int:
+    """Check every docs/*.md + README.md; exit 1 on any broken reference."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--run-commands", action="store_true",
+                    help="also execute every quoted `python -m` command in "
+                         "--help form (the CI docs job does)")
+    args = ap.parse_args(argv)
+
+    md_files = [os.path.join(ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    problems: list[str] = []
+    all_modules: set[str] = set()
+    for path in md_files:
+        rel = os.path.relpath(path, ROOT)
+        text = open(path).read()
+        check_links(rel, text, problems)
+        check_file_lines(rel, text, problems)
+        check_backticks(rel, text, problems)
+        modules, scripts = fenced_commands(text)
+        all_modules |= modules
+        check_scripts(rel, scripts, problems)
+        print(f"checked {rel}: {len(modules)} module command(s), "
+              f"{len(scripts)} script(s)")
+    if args.run_commands:
+        run_commands(all_modules, problems)
+    if problems:
+        print(f"\n{len(problems)} documentation problem(s):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print("\nall documentation references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
