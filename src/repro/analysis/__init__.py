@@ -1,0 +1,34 @@
+"""Static noise-audit pass over compiled HLO (the paper's §2.3 analogue).
+
+Runs BEFORE any measurement: every planned (region, mode) pair is compiled
+at two small static noise counts plus a clean baseline, the optimized HLO
+is censused into per-(opcode, nesting-multiplier) instruction counts, and
+the k-scaling delta tells us — instruction-accurately — whether the noise
+payload survived XLA, which resource it exercises, and (when it died) which
+corruption class ate it: DCE, constant folding, strength reduction,
+fusion-into-consumer, or loop-invariant hoisting.
+
+  graph.py      def-use graph over parsed HLO; dependency-chain depth
+  resources.py  opcode -> resource tagging; pressure vector; direction rule
+  audit.py      census, corruption detectors, AuditReport, plan-level audit
+"""
+from repro.analysis.audit import (  # noqa: F401
+    K_HI,
+    K_LO,
+    AuditError,
+    AuditReport,
+    audit_pair,
+    audit_plan,
+    audit_texts,
+    compile_text,
+    compile_texts,
+    take_census,
+)
+from repro.analysis.graph import chain_depth, defuse_edges  # noqa: F401
+from repro.analysis.resources import (  # noqa: F401
+    BANDWIDTH_OPS,
+    COMPUTE_OPS,
+    TARGET_FAMILY,
+    predict_direction,
+    pressure_vector,
+)

@@ -1,0 +1,37 @@
+"""Def-use graph over parsed HLO computations.
+
+HLO text lists instructions in def-before-use order within a computation,
+so longest-path questions are a single forward scan — no explicit topo
+sort. The graph is per-computation: cross-computation dataflow (operands
+of a fusion/call) is intentionally not followed; the audit compares chain
+DEPTH DELTAS between two compiles of the same program, where any constant
+cross-computation contribution cancels.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+from repro.hlo.parse import Instr
+
+
+def defuse_edges(instrs: Iterable[Instr]) -> dict[str, list[str]]:
+    """{instruction name: [operand names defined in this computation]}."""
+    defined = {ins.name for ins in instrs}
+    return {ins.name: [op for op in ins.operand_names() if op in defined]
+            for ins in instrs}
+
+def chain_depth(instrs: Iterable[Instr],
+                counted: Callable[[Instr], bool]) -> int:
+    """Longest def-use chain, scoring only instructions where ``counted``
+    holds. Paths may pass through un-counted nodes (a gather chain whose
+    links are joined by converts/adds still scores every gather), which is
+    what distinguishes a serial pointer chase from k independent loads."""
+    depth: dict[str, int] = {}
+    best = 0
+    for ins in instrs:
+        d = max((depth.get(op, 0) for op in ins.operand_names()), default=0)
+        if counted(ins):
+            d += 1
+        depth[ins.name] = d
+        best = max(best, d)
+    return best

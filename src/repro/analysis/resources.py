@@ -1,0 +1,91 @@
+"""Resource tagging for surviving noise instructions.
+
+Maps opcodes to the hardware resource they exercise and turns a census
+delta (extra instructions per injected pattern) into a resource-pressure
+vector plus a predicted sensitivity direction — the static half of the
+paper's claim that each noise mode pressures ONE resource:
+
+  compute    arithmetic / transcendental ops (count per pattern)
+  bandwidth  load/store-family ops (result bytes moved per pattern)
+  latency    serial def-use chain growth through the load family
+             (chain-depth delta per pattern)
+
+The direction rule encodes the cost asymmetry: any load-family payload
+dominates the direction (a slice is far more expensive per element than
+the add that consumes it), and a load chain that grows as fast as the
+load count is serial — a pointer chase — so it pressures latency, not
+bandwidth.
+"""
+from __future__ import annotations
+
+COMPUTE_OPS = frozenset({
+    "add", "subtract", "multiply", "divide", "dot", "convolution",
+    "exponential", "log", "power", "rsqrt", "sqrt", "tanh",
+})
+BANDWIDTH_OPS = frozenset({
+    "dynamic-slice", "gather", "slice", "dynamic-update-slice", "scatter",
+})
+ICI_OPS = frozenset({
+    "all-reduce", "all-gather", "all-to-all", "collective-permute",
+    "reduce-scatter",
+})
+
+# a load chain growing at >= this fraction of a link PER PATTERN is serial
+SERIAL_CHAIN_FRAC = 0.75
+
+# noise-mode target vocabulary -> resource family the audit predicts
+TARGET_FAMILY = {
+    "compute": "compute",
+    "vmem": "bandwidth",
+    "l1": "bandwidth",
+    "memory": "bandwidth",
+    "latency": "latency",
+    "ici": "ici",
+}
+
+
+def pressure_vector(count_delta: dict, bytes_delta: dict,
+                    depth_delta: int, patterns: int) -> dict[str, float]:
+    """Per-pattern resource pressure from a two-compile census delta.
+
+    ``count_delta``/``bytes_delta`` map (opcode, mult, where) -> extra
+    instructions / extra result bytes; mult weights each by its execution
+    count. ``depth_delta`` is the load-family chain-depth growth."""
+    compute = sum(n * key[1] for key, n in count_delta.items()
+                  if key[0] in COMPUTE_OPS)
+    bandwidth = sum(n * key[1] for key, n in bytes_delta.items()
+                    if key[0] in BANDWIDTH_OPS)
+    ici = sum(n * key[1] for key, n in count_delta.items()
+              if key[0] in ICI_OPS)
+    return {
+        "compute": max(0.0, compute / patterns),
+        "bandwidth": max(0.0, bandwidth / patterns),
+        "latency": max(0.0, depth_delta / patterns),
+        "ici": max(0.0, ici / patterns),
+    }
+
+
+def predict_direction(count_delta: dict, depth_delta: int,
+                      patterns: int) -> str:
+    """Which resource the surviving noise pressures most.
+
+    Precedence: ici > load family > arithmetic; within the load family a
+    chain whose depth grows ~one link per injected pattern is serial — a
+    pointer chase — and predicts latency. (Depth per PATTERN, not per
+    load: XLA may duplicate a chain into several fusion consumers, which
+    inflates the load count but not the true dependency depth.)"""
+    ici = sum(n for key, n in count_delta.items()
+              if key[0] in ICI_OPS and n > 0)
+    loads = sum(n for key, n in count_delta.items()
+                if key[0] in BANDWIDTH_OPS and n > 0)
+    arith = sum(n for key, n in count_delta.items()
+                if key[0] in COMPUTE_OPS and n > 0)
+    if ici > 0:
+        return "ici"
+    if loads > 0:
+        if depth_delta >= SERIAL_CHAIN_FRAC * patterns:
+            return "latency"
+        return "bandwidth"
+    if arith > 0:
+        return "compute"
+    return "none"

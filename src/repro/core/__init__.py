@@ -27,7 +27,8 @@ from repro.core.campaign import (AnalyticCampaign, Campaign, CampaignStats,  # n
                                  CampaignStore, CampaignStoreError,
                                  PairStatus, host_store, merge_stores,
                                  read_store_records, worker_store)
-from repro.core.classifier import BottleneckReport, classify, cross_check_with_decan  # noqa: F401
+from repro.core.classifier import (BottleneckReport, apply_audit_evidence,  # noqa: F401
+                                   classify, cross_check_with_decan)
 from repro.core.controller import Controller, RegionReport, RegionTarget, loop_region  # noqa: F401
 from repro.core.decan import DecanResult, DecanTarget, run_decan  # noqa: F401
 from repro.core.injector import (inject, inject_rt, init_state, probe_step,  # noqa: F401

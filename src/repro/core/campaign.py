@@ -39,11 +39,15 @@ Store schema (one JSON object per line):
    "alpha": a, "tol": t, "k_max": n}            # analytic prediction
   {"kind": "decan",  "region": r, "variant": "ref"|"fp"|"ls", "t": seconds,
    "reps": n, "inner": n}                       # decremental baseline
+  {"kind": "audit",  "region": r, "mode": m, "verdict": "intact"|"degraded"
+   |"dead", "survival": f, "corruption": c|null, "predicted": d, "target":
+   t, "agrees": b|null, "resources": {...}, "k_lo": n, "k_hi": n,
+   "detail": s}                                 # static noise audit
 
 Supersede rules (they define both in-file appends and ``merge_stores``):
   * later records supersede earlier ones for the same key — (region, mode)
-    for meta/sens/done/pred, (region, mode, k) for points, (region,) for
-    region records, (region, variant) for decan records — so a settings
+    for meta/sens/done/pred/audit, (region, mode, k) for points, (region,)
+    for region records, (region, variant) for decan records — so a settings
     change appends fresh data without rewriting the file;
   * a "meta" record whose measurement settings differ from the pair's
     current meta DISCARDS the pair's accumulated sens/point/done records:
@@ -197,6 +201,7 @@ class CampaignStore:
         self.meta: dict[tuple[str, str], dict] = {}
         self.preds: dict[tuple[str, str], dict] = {}
         self.decan: dict[tuple[str, str], dict] = {}
+        self.audits: dict[tuple[str, str], dict] = {}
         self.body_sizes: dict[str, int] = {}
         self._lock = threading.Lock()
         exists = os.path.exists(path)
@@ -251,6 +256,8 @@ class CampaignStore:
             self.preds[key] = rec
         elif kind == "decan":
             self.decan[(rec.get("region"), rec.get("variant"))] = rec
+        elif kind == "audit":
+            self.audits[key] = rec
 
     def append(self, rec: dict) -> None:
         """Ingest one record and flush it to disk (locked; readonly stores
@@ -311,7 +318,7 @@ class CampaignStore:
 # ---------------------------------------------------------------------------
 
 _KIND_ORDER = {"meta": 0, "sens": 1, "point": 2, "done": 3, "region": 4,
-               "decan": 5, "pred": 6}
+               "decan": 5, "pred": 6, "audit": 7}
 
 
 def _canon_line(rec: dict) -> str:
@@ -357,6 +364,7 @@ class _MergeView:
         self.preds: dict[tuple, dict] = {}
         self.regions: dict[str, dict] = {}
         self.decan: dict[tuple, dict] = {}
+        self.audits: dict[tuple, dict] = {}
         self.other: dict[str, dict] = {}
         self.stats = stats
 
@@ -387,6 +395,8 @@ class _MergeView:
             self.preds[key] = rec
         elif kind == "decan":
             self.decan[(rec.get("region"), rec.get("variant"))] = rec
+        elif kind == "audit":
+            self.audits[key] = rec
         else:
             self.other[_canon_line(rec)] = rec   # unknown: keep, dedup exact
 
@@ -400,6 +410,7 @@ class _MergeView:
         out.extend(self.regions.values())
         out.extend(self.decan.values())
         out.extend(self.preds.values())
+        out.extend(self.audits.values())
         out.extend(self.other.values())
         return sorted(out, key=_canon_sort_key)
 
@@ -818,6 +829,15 @@ def _cli(argv: Optional[Sequence[str]] = None) -> int:
     for (region, variant), rec in sorted(st.decan.items()):
         print(f"  decan    {region}/{variant}: t={rec['t']:.6f}s "
               f"(reps={rec.get('reps')}, inner={rec.get('inner')})")
+    for key, rec in sorted(st.audits.items()):
+        surv = max(0.0, min(1.0, float(rec.get("survival", 0.0))))
+        agrees = rec.get("agrees")
+        extra = "" if agrees is None else f", {'' if agrees else 'DIS'}agrees"
+        corr = rec.get("corruption")
+        print(f"  audit    {key[0]}/{key[1]}: {rec.get('verdict')} "
+              f"(survival {surv:.0%}/pattern, predicts "
+              f"{rec.get('predicted')}{extra}"
+              + (f", {corr}" if corr else "") + ")")
     if measured_keys:
         print(f"  grid: {n_complete}/{len(measured_keys)} measured pair(s) "
               "complete")

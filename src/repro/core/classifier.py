@@ -32,12 +32,17 @@ class BottleneckReport:
     absorptions: dict[str, float]    # mode -> Abs^raw (or Abs^rel * scale)
     explanation: str
     decan_hint: Optional[str] = None  # set by the DECAN cross-check
+    # static audit evidence per mode (apply_audit_evidence); None = no audit
+    evidence: Optional[list] = None
 
     def __str__(self) -> str:
         abss = ", ".join(f"{m}={a:.1f}" for m, a in self.absorptions.items())
         s = f"[{self.label} | conf={self.confidence:.2f}] {self.explanation} ({abss})"
         if self.decan_hint:
             s += f" | DECAN: {self.decan_hint}"
+        if self.evidence is not None:
+            n_sup = sum(1 for e in self.evidence if e["supports"])
+            s += f" | audit: {n_sup}/{len(self.evidence)} mode(s) support"
         return s
 
 
@@ -130,6 +135,45 @@ def classify(absorptions: Mapping[str, float], *, low: float = LOW,
         "mixed", 0.3, dict(absorptions),
         "ambiguous absorption levels (moderate everywhere) indicating "
         "strong interdependencies (Table 3 case 4)")
+
+
+def apply_audit_evidence(report: BottleneckReport,
+                         audits: Mapping[str, Mapping],
+                         *, downgrade: float = 0.6) -> BottleneckReport:
+    """Annotate a classification with static audit evidence
+    (``repro.analysis`` records, one per audited mode).
+
+    A mode SUPPORTS the label when its noise survived compilation intact
+    and the audit's predicted sensitivity direction matches the mode's
+    declared target — the absorption reading measured what the classifier
+    assumed it measured. A mode whose payload died or degraded, or whose
+    surviving instructions pressure a different resource, CONFLICTS: its
+    reading is structurally suspect, and each conflicting mode multiplies
+    the confidence by ``downgrade``.
+
+    Deterministic and measurement-free: two runs over the same store attach
+    byte-identical evidence.
+    """
+    if not audits:
+        return report
+    evidence = []
+    conf = report.confidence
+    for mode in sorted(audits):
+        rec = audits[mode]
+        supports = (rec.get("verdict") == "intact"
+                    and rec.get("agrees") is not False)
+        evidence.append({
+            "mode": mode,
+            "verdict": rec.get("verdict"),
+            "survival": rec.get("survival"),
+            "predicted": rec.get("predicted"),
+            "target": rec.get("target"),
+            "corruption": rec.get("corruption"),
+            "supports": supports,
+        })
+        if not supports:
+            conf *= downgrade
+    return dataclasses.replace(report, confidence=conf, evidence=evidence)
 
 
 def cross_check_with_decan(report: BottleneckReport,

@@ -50,6 +50,13 @@ class RegionTarget:
     HLO-scope-counting payload verification with a region-specific static
     check — Pallas regions use it to compare the noise accumulator against
     its exact oracle (scope metadata does not survive Pallas lowering).
+
+    ``audit_hint`` (optional) parameterizes the static noise audit
+    (``repro.analysis``): ``scoped`` — noise ops carry the named-scope tag
+    in optimized HLO (graph/loop regions; Pallas bodies do not);
+    ``in_loop`` — patterns are emitted inside the region's loop body, so
+    the audit checks for loop-invariant hoisting / fusion-into-consumer;
+    ``steps`` — per-sweep-point executions of the noise body.
     """
     name: str
     build: Callable[[str, int], Callable]
@@ -59,6 +66,7 @@ class RegionTarget:
     build_rt: Optional[Callable[[str], Optional[Callable]]] = None
     args_for_rt: Optional[Callable[[str], tuple]] = None
     payload_check: Optional[Callable[[str, int], object]] = None
+    audit_hint: Optional[dict] = None
 
 
 @dataclasses.dataclass
@@ -98,14 +106,19 @@ class RegionReport:
         return {m: r.fit.k1 for m, r in self.results.items()}
 
     def to_json(self) -> str:
+        bn = {
+            "label": self.bottleneck.label,
+            "confidence": self.bottleneck.confidence,
+            "explanation": self.bottleneck.explanation,
+        }
+        # static audit evidence serializes only when attached — non-audited
+        # reports stay byte-identical to pre-audit output
+        if getattr(self.bottleneck, "evidence", None):
+            bn["evidence"] = self.bottleneck.evidence
         return json.dumps({
             "region": self.region,
             "body_size": self.body_size,
-            "bottleneck": {
-                "label": self.bottleneck.label,
-                "confidence": self.bottleneck.confidence,
-                "explanation": self.bottleneck.explanation,
-            },
+            "bottleneck": bn,
             "modes": {m: r.row() for m, r in self.results.items()},
         }, indent=2)
 
@@ -317,4 +330,5 @@ def loop_region(name: str, make_fn: Callable[[Optional[LoopNoise], int], Callabl
 
     return RegionTarget(name=name, build=build, args_for=args,
                         body_size=body_size, build_rt=build_rt,
-                        args_for_rt=args_rt)
+                        args_for_rt=args_rt,
+                        audit_hint={"scoped": True, "in_loop": True})

@@ -97,7 +97,8 @@ def step_region(name: str, step_fn: Callable, args: tuple,
 
     return RegionTarget(name=name, build=build, args_for=args_for,
                         body_size=body_size, build_rt=build_rt,
-                        args_for_rt=args_for_rt)
+                        args_for_rt=args_for_rt,
+                        audit_hint={"scoped": True, "in_loop": False})
 
 
 @dataclasses.dataclass

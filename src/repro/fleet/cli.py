@@ -21,8 +21,12 @@ budgets), diagnose and inspect fleet state.
     PYTHONPATH=src python -m repro.fleet run --plan plan.json \
         --launcher mock --max-attempts 2
 
+    # statically verify the plan's noise against the compiler (no timing:
+    # three small compiles per pair decide whether the payload survives)
+    PYTHONPATH=src python -m repro.fleet audit --plan plan.json --expect-clean
+
     # why is my fleet incomplete?  (per shard: missing ks per pair, torn
-    # store to be healed, attempts exhausted)
+    # store to be healed, attempts exhausted; plus any audit failures)
     PYTHONPATH=src python -m repro.fleet doctor --plan plan.json
     PYTHONPATH=src python -m repro.fleet status --plan plan.json
 
@@ -208,13 +212,41 @@ def _cmd_run(args) -> int:
     try:
         res = run_fleet(args.plan, resume=args.resume, fresh=args.fresh,
                         expect_no_measure=args.expect_no_measure,
-                        launcher=launcher, retry=retry)
+                        launcher=launcher, retry=retry, audit=args.audit)
     except FleetError as e:
         raise SystemExit(f"fleet: {e}")
     print(f"fleet {res.plan.name!r} complete: {len(res.reports)} region(s) "
           f"classified, shard(s) launched this run: "
           f"{res.launched or 'none'}")
     return 0
+
+
+def _cmd_audit(args) -> int:
+    """Static noise audit of a plan, standalone: compile every planned pair
+    at the audit's two k points, persist the verdicts into the plan's
+    canonical store, and exit nonzero when any pair is statically dead
+    (``--expect-clean``: when any pair is not fully intact)."""
+    from repro.fleet.executor import FleetError, audit_fleet_plan
+    from repro.fleet.plan import PlanError, SweepPlan
+
+    try:
+        plan = SweepPlan.load(args.plan)
+        # gate="warn" so every pair is printed before the exit-code verdict
+        records = audit_fleet_plan(plan, gate="warn", force=args.force)
+    except (OSError, PlanError, FleetError) as e:
+        raise SystemExit(f"audit: {e}")
+    grid = plan.grid()
+    dead = [k for k in grid
+            if records.get(k, {}).get("verdict") == "dead"]
+    not_intact = [k for k in grid
+                  if records.get(k, {}).get("verdict") != "intact"]
+    print(f"== audit verdict: {len(grid) - len(not_intact)}/{len(grid)} "
+          f"pair(s) intact, {len(dead)} dead (records -> {plan.store})")
+    if args.expect_clean and not_intact:
+        print("--expect-clean: not intact: "
+              + ", ".join(f"{r}/{m}" for r, m in not_intact))
+        return 1
+    return 1 if dead else 0
 
 
 def _cmd_doctor(args) -> int:
@@ -371,8 +403,27 @@ def build_parser() -> argparse.ArgumentParser:
     rp.add_argument("--in-process", action="store_true",
                     help="run shards sequentially in this process instead "
                          "of spawning subprocesses")
+    rp.add_argument("--audit", default="gate",
+                    choices=("gate", "warn", "off"),
+                    help="static noise-audit policy before launch: gate "
+                         "(default) refuses statically-dead pairs, warn "
+                         "measures anyway, off skips the audit")
     _add_launcher_flags(rp, for_plan=False)
     rp.set_defaults(fn=_cmd_run)
+
+    audp = sub.add_parser("audit", help="statically verify every planned "
+                                        "(region, mode) pair against the "
+                                        "compiler — no measurements; exit 1 "
+                                        "on any dead pair")
+    audp.add_argument("--plan", required=True,
+                      help="the SweepPlan JSON to audit")
+    audp.add_argument("--expect-clean", action="store_true",
+                      help="exit 1 unless EVERY pair is fully intact "
+                           "(degraded pairs also fail)")
+    audp.add_argument("--force", action="store_true",
+                      help="re-audit pairs that already carry audit records "
+                           "(fresh records supersede)")
+    audp.set_defaults(fn=_cmd_audit)
 
     dp = sub.add_parser("doctor", help="explain per shard why the fleet is "
                                        "incomplete: missing ks per pair, "

@@ -119,6 +119,104 @@ def characterize_region(region, modes: Sequence[str], *, controller,
 
 
 # ---------------------------------------------------------------------------
+# the static audit gate (repro.analysis) — runs BEFORE any measurement
+# ---------------------------------------------------------------------------
+
+AUDIT_CHOICES = ("gate", "warn", "off")
+
+
+def _check_audit_choice(audit: str) -> None:
+    if audit not in AUDIT_CHOICES:
+        raise FleetError(f"audit policy {audit!r}: one of {AUDIT_CHOICES}")
+
+
+def _attach_audit_evidence(rep, store):
+    """Fold the store's audit records into one RegionReport's classification.
+
+    A no-op for regions without audit records, so a non-audited run
+    serializes byte-identically to a pre-audit one."""
+    from repro.core import apply_audit_evidence
+
+    audits = {m: rec for (r, m), rec in store.audits.items()
+              if r == rep.region and m in rep.results}
+    if not audits:
+        return rep
+    return dataclasses.replace(
+        rep, bottleneck=apply_audit_evidence(rep.bottleneck, audits))
+
+
+def audit_fleet_plan(plan: SweepPlan, store=None, *, gate: str = "gate",
+                     force: bool = False, echo: bool = True) -> dict:
+    """Statically audit every planned (region, mode) pair into the plan's
+    canonical store, BEFORE any measurement happens.
+
+    Each pair compiles three static builds (clean / K_LO / K_HI — the clean
+    one shared across a region's modes) and the two-point census delta
+    decides whether the noise payload survived XLA (``repro.analysis``).
+    Verdicts persist as ``audit`` records in the canonical ``CampaignStore``
+    — pairs that already carry a record are NOT re-compiled (``force``
+    re-audits them; fresh records supersede), so resumed fleets and replay
+    runs audit for free.
+
+    ``gate`` policy: ``"gate"`` raises ``FleetError`` when any pair is
+    statically DEAD (measuring it would time nothing); ``"warn"`` prints the
+    same explanation and proceeds. Callers handle ``"off"`` by not calling
+    this at all. A pair whose static build fails is UNAUDITABLE — reported,
+    never fatal: a broken build is not proof of a dead payload, and the
+    measuring path will surface the real failure.
+
+    Returns ``{(region, mode): audit record}`` for the plan's whole grid.
+    """
+    from repro.analysis import AuditReport, audit_plan
+    from repro.core import CampaignStore
+
+    owned = store is None
+    if owned:
+        store = CampaignStore(plan.store)
+    try:
+        grid = plan.grid()
+        skip = frozenset() if force else frozenset(store.audits)
+        todo = [key for key in grid if key not in skip]
+        if todo and echo:
+            print(f"== audit: statically verifying {len(todo)} pair(s) "
+                  f"({len(grid) - len(todo)} already in store)")
+        unauditable: list[tuple] = []
+        fresh = audit_plan(plan, skip=skip,
+                           on_error=lambda r, m, e:
+                               unauditable.append((r, m, e)))
+        for rep in fresh:
+            store.append({"kind": "audit", **rep.to_dict()})
+        records = {key: store.audits[key] for key in grid
+                   if key in store.audits}
+        if echo:
+            for key in grid:
+                rec = records.get(key)
+                if rec is not None:
+                    print("  " + AuditReport.from_dict(rec).explain())
+            for r, m, e in unauditable:
+                print(f"  {r} × {m}: UNAUDITABLE — {e}")
+        dead = [key for key in grid
+                if records.get(key, {}).get("verdict") == "dead"]
+        if dead:
+            lines = "\n".join(
+                "  " + AuditReport.from_dict(records[key]).explain()
+                for key in dead)
+            msg = (f"audit gate: {len(dead)} planned pair(s) carry "
+                   "statically DEAD noise — the compiler removed the "
+                   f"payload, so measuring them would time nothing:\n{lines}")
+            if gate == "gate":
+                raise FleetError(
+                    msg + "\nfix the noise body (`python -m repro.fleet "
+                    "doctor --plan ...` repeats each explanation), or "
+                    "measure anyway with --audit warn")
+            print(f"!! {msg}\n!! --audit warn: measuring anyway")
+        return records
+    finally:
+        if owned:
+            store.close()
+
+
+# ---------------------------------------------------------------------------
 # the single-process worker entry (probe --plan lands here)
 # ---------------------------------------------------------------------------
 
@@ -159,7 +257,7 @@ def _handshake(plan: SweepPlan) -> str:
 def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
                count: Optional[int] = None, fresh: bool = False,
                expect_no_measure: bool = False,
-               header: Optional[str] = None):
+               header: Optional[str] = None, audit: str = "gate"):
     """Execute a plan (or one shard of it) in THIS process.
 
     ``index``/``count`` given: measure shard ``index`` of ``count``'s slice
@@ -167,9 +265,16 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
     happens after the merge. Without a shard: run the whole grid into the
     canonical store, classify every region, and write the report file.
 
+    ``audit`` applies to the whole-plan path only (a shard never audits —
+    the fleet audits once at the gate): the static noise audit runs before
+    any measurement, ``"gate"`` refusing statically-dead pairs, and its
+    records back the per-mode evidence attached to every classification.
+
     Returns ``(results_or_reports, CampaignStats)``.
     """
     from repro.core import Campaign, Controller, worker_store
+
+    _check_audit_choice(audit)
 
     if index is not None:
         count = plan.shards if count is None else count
@@ -207,11 +312,14 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
             return res, camp.stats
 
         print(f"== {title} (campaign store: {store})")
+        if audit != "off":
+            audit_fleet_plan(plan, camp.store, gate=audit)
         reports = {}
         many = sum(len(regions) for _, regions in plan.resolve()) > 1
         for spec, regions in plan.resolve():
             for region in regions:
-                rep = camp.characterize(region, list(spec.modes))
+                rep = _attach_audit_evidence(
+                    camp.characterize(region, list(spec.modes)), camp.store)
                 reports[region.name] = rep
                 print_report(rep, name_line=many)
         write_report(plan.report_path(), reports)
@@ -403,8 +511,8 @@ def _classify(plan: SweepPlan):
         reports = {}
         for spec, regions in plan.resolve():
             for region in regions:
-                reports[region.name] = camp.characterize(region,
-                                                         list(spec.modes))
+                reports[region.name] = _attach_audit_evidence(
+                    camp.characterize(region, list(spec.modes)), camp.store)
     finally:
         camp.store.close()
     return reports, camp.stats
@@ -422,9 +530,17 @@ def _clean_fleet(plan: SweepPlan) -> None:
 def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
               expect_no_measure: bool = False,
               launcher: Union[Launcher, Callable, None] = None,
-              retry: Optional[RetryBudget] = None) -> FleetResult:
-    """Plan → spawn (with retries) → merge → classify, resumably.
+              retry: Optional[RetryBudget] = None,
+              audit: str = "gate") -> FleetResult:
+    """Plan → audit → spawn (with retries) → merge → classify, resumably.
 
+    * the static noise audit runs FIRST, before anything launches: every
+      planned pair is verified against the compiler (``audit_fleet_plan``);
+      under the default ``audit="gate"`` a statically-dead pair refuses the
+      whole fleet (no machine time is spent measuring nothing), ``"warn"``
+      proceeds anyway, ``"off"`` skips the audit. Audit records live in the
+      canonical store, so resumes never re-compile them, and the classify
+      step attaches them as per-mode evidence;
     * first run: launches every shard whose slice is incomplete (all of
       them), merges, classifies;
     * within one call, the ``retry`` budget (or the plan's declarative
@@ -448,6 +564,7 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
     owe measurements after the last allowed attempt round, or when a shard
     has exhausted its lifetime ``per_shard_cap``.
     """
+    _check_audit_choice(audit)
     plan = SweepPlan.load(plan_path)
     if fresh:
         _clean_fleet(plan)
@@ -470,6 +587,11 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
     budget = retry if retry is not None \
         else RetryBudget.from_dict(plan.retry)
     lch = _as_launcher(launcher, plan)
+    if audit != "off":
+        # fail-fast: a statically-dead pair refuses the fleet BEFORE any
+        # shard launches; records land in the canonical store (pre-merge,
+        # so the merge streams them through) and back the evidence below
+        audit_fleet_plan(plan, gate=audit)
 
     incomplete = sorted(_incomplete_shards(plan, grid))
     for i, ss in state.shards.items():
@@ -677,11 +799,30 @@ def fleet_doctor(plan: SweepPlan,
                    f"plan digest {state.plan_digest}; --fresh required")
     canon_status = None
     if os.path.exists(plan.store):
-        canon_status = CampaignStore(plan.store,
-                                     readonly=True).grid_status(grid)
+        canon = CampaignStore(plan.store, readonly=True)
+        canon_status = canon.grid_status(grid)
         done = sum(ps.complete for ps in canon_status.values())
         out.append(f"canonical store {plan.store}: {done}/{len(grid)} "
                    "pair(s) complete")
+        audited = {key: canon.audits[key] for key in grid
+                   if key in canon.audits}
+        if audited:
+            from repro.analysis import AuditReport
+
+            n_dead = sum(r.get("verdict") == "dead"
+                         for r in audited.values())
+            n_intact = sum(r.get("verdict") == "intact"
+                           for r in audited.values())
+            out.append(f"static audit: {len(audited)}/{len(grid)} pair(s) "
+                       f"audited — {n_intact} intact, {n_dead} dead")
+            for key in grid:
+                rec = audited.get(key)
+                if rec is not None and rec.get("verdict") != "intact":
+                    out.append("  " + AuditReport.from_dict(rec).explain())
+                    if rec.get("verdict") == "dead":
+                        out.append("    (the audit gate refuses this pair; "
+                                   "fix the noise body or run with "
+                                   "--audit warn)")
     else:
         out.append(f"canonical store {plan.store}: absent (no merge yet)")
     total_owing = 0

@@ -1,5 +1,6 @@
 from repro.hlo.parse import (  # noqa: F401
     Instr,
+    extract_op_name,
     parse_module,
     shape_bytes,
     while_trip_counts,

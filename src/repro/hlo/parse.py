@@ -23,7 +23,9 @@ _DTYPE_BYTES = {
     "c64": 8, "c128": 16, "token": 0, "opaque": 0,
 }
 
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# Dims may be static (`128`), bounded-dynamic (`<=128`), or unbounded-
+# dynamic (`?`) — all three print in XLA shape strings.
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,?<=]*)\]")
 # `  %name = SHAPE opcode(...)` where SHAPE is a token or a (tuple, ...)
 # possibly containing /*index=N*/ comments; lazy-match up to ` opcode(`.
 _INSTR_RE = re.compile(
@@ -32,11 +34,23 @@ _INSTR_RE = re.compile(
     r"([a-z][\w\-]*)\(")               # opcode
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
 _ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=")
-_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+# op_name extraction: scoped to the metadata={...} block when one is present
+# (newer XLA emits multi-attribute blocks whose other values may themselves
+# contain quoted strings), with escaped-quote tolerance in the value.
+_METADATA_BLOCK_RE = re.compile(r"metadata=\{([^}]*)\}")
+_METADATA_RE = re.compile(r'op_name="((?:[^"\\]|\\.)*)"')
+
+
+def _dim_count(d: str) -> int:
+    """One dim token -> element count: `<=N` uses the bound, `?` counts 1."""
+    if d.startswith("<="):
+        d = d[2:]
+    return 1 if d == "?" else int(d)
 
 
 def shape_bytes(shape: str) -> int:
-    """Total bytes of an HLO shape string (tuples summed)."""
+    """Total bytes of an HLO shape string (tuples summed; bounded-dynamic
+    dims ``<=N`` count their bound, unbounded ``?`` dims count 1)."""
     total = 0
     for dtype, dims in _SHAPE_RE.findall(shape):
         if dtype not in _DTYPE_BYTES:
@@ -45,19 +59,33 @@ def shape_bytes(shape: str) -> int:
         if dims:
             for d in dims.split(","):
                 if d:
-                    n *= int(d)
+                    n *= _dim_count(d)
         total += n * _DTYPE_BYTES[dtype]
     return total
 
 
 def shape_dims(shape: str) -> list[tuple[str, tuple[int, ...]]]:
-    """[(dtype, dims), ...] for each array in the shape string."""
+    """[(dtype, dims), ...] for each array in the shape string (dynamic
+    dims resolved as in ``shape_bytes``)."""
     out = []
     for dtype, dims in _SHAPE_RE.findall(shape):
         if dtype in _DTYPE_BYTES:
             out.append((dtype,
-                        tuple(int(d) for d in dims.split(",") if d) if dims else ()))
+                        tuple(_dim_count(d) for d in dims.split(",") if d)
+                        if dims else ()))
     return out
+
+
+def extract_op_name(line: str) -> str:
+    """The metadata op_name of one instruction line ("" when absent).
+
+    Searches inside the ``metadata={...}`` block when the line has one —
+    multi-attribute blocks (``op_type=... op_name=... source_file=...``)
+    from newer XLA otherwise risk matching an op_name-shaped substring in
+    another attribute's value."""
+    m = _METADATA_BLOCK_RE.search(line)
+    md = _METADATA_RE.search(m.group(1) if m else line)
+    return md.group(1) if md else ""
 
 
 _OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
@@ -128,9 +156,8 @@ def parse_module(text: str) -> dict[str, list[Instr]]:
         m = _INSTR_RE.match(line)
         if m:
             name, shape, opcode = m.groups()
-            md = _METADATA_RE.search(line)
             comps[cur].append(Instr(name=name, opcode=opcode, shape=shape,
-                                    line=line, op_name=md.group(1) if md else ""))
+                                    line=line, op_name=extract_op_name(line)))
     # module-wide name -> result shape map (operands print without shapes in
     # optimized dumps); parameters keep their declared shapes via their defs.
     shape_map: dict[str, str] = {}

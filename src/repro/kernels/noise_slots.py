@@ -46,6 +46,8 @@ are emitted by a bounded ``lax.fori_loop``:
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -103,7 +105,14 @@ def _fp_c(noise_ref, src_ref):
     ``nacc += k*c`` (killing the payload the sweep is supposed to measure),
     while a data-dependent addend keeps every add live AND keeps the exact
     ``nacc`` oracle (tests derive the same value from the host copy).
+
+    ``REPRO_NOISE_SABOTAGE=const`` deliberately reintroduces that bug — a
+    compile-time-constant addend — so the static audit's fail-fast path
+    (``repro.analysis``, the CI audit-smoke job) can be exercised against a
+    payload XLA really does fold away. Never set it in a measuring run.
     """
+    if os.environ.get("REPRO_NOISE_SABOTAGE") == "const":
+        return jnp.full(NOISE_SHAPE, 1.0, jnp.float32)
     if noise_ref is not None:
         return noise_ref[0:8, :]
     if src_ref is None:

@@ -314,7 +314,12 @@ def pallas_region(kernel: str, *, backend: str = "auto", name: str = "",
                         args_for=args_for, body_size=spec.body_size,
                         payload_target=dict(MODE_TARGETS),
                         build_rt=build_rt, args_for_rt=args_for_rt,
-                        payload_check=payload_check)
+                        payload_check=payload_check,
+                        # Pallas bodies lose named-scope metadata in
+                        # lowering: the audit censuses everything and lets
+                        # the two-point k-delta isolate the noise
+                        audit_hint={"scoped": False, "in_loop": True,
+                                    "steps": spec.n_steps})
 
 
 def family_params(kernel: str) -> frozenset:

@@ -120,7 +120,7 @@ def build_step_region(arch: str, kind: str, modes: Sequence[str], *,
 def _run_adhoc(spec, *, reps: int, store: str | None, fresh: bool,
                workers: int, compile_once: bool,
                shard: Optional[tuple[int, int]], expect_no_measure: bool,
-               header: str) -> None:
+               header: str, audit: str = "gate") -> None:
     """Build a one-target SweepPlan from CLI flags and execute it through
     the fleet worker — the campaign tail (store naming, shard dispatch,
     reporting) lives behind that API now."""
@@ -136,7 +136,8 @@ def _run_adhoc(spec, *, reps: int, store: str | None, fresh: bool,
         plan.store = os.path.join(CAMPAIGN_DIR, f"{first.name}.jsonl")
     run_worker(plan, index=(shard[0] if shard else None),
                count=(shard[1] if shard else None), fresh=fresh,
-               expect_no_measure=expect_no_measure, header=header)
+               expect_no_measure=expect_no_measure, header=header,
+               audit=audit)
 
 
 def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
@@ -144,7 +145,8 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
                    fresh: bool = False, workers: int = 1,
                    compile_once: bool = True,
                    shard: Optional[tuple[int, int]] = None,
-                   expect_no_measure: bool = False) -> None:
+                   expect_no_measure: bool = False,
+                   audit: str = "gate") -> None:
     """Measured graph-level probe of one model step (smoke config, host
     backend): builds a one-target SweepPlan from the flags and runs it
     through the fleet worker's campaign tail."""
@@ -161,7 +163,7 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
                        "batch": batch})
     _run_adhoc(spec, reps=reps, store=store, fresh=fresh, workers=workers,
                compile_once=compile_once, shard=shard,
-               expect_no_measure=expect_no_measure,
+               expect_no_measure=expect_no_measure, audit=audit,
                header=f"measured probe: {arch} {kind} seq={seq} "
                       f"batch={batch}")
 
@@ -171,7 +173,8 @@ def pallas_probe(kernel: str, modes: Optional[list[str]], *, reps: int,
                  fresh: bool = False, workers: int = 1,
                  compile_once: bool = True,
                  shard: Optional[tuple[int, int]] = None,
-                 expect_no_measure: bool = False) -> None:
+                 expect_no_measure: bool = False,
+                 audit: str = "gate") -> None:
     """Run the paper's methodology against a real Pallas kernel (interpret
     mode off-TPU). The sweep rides the compile-once runtime-k path: ≤2
     Pallas executables per (kernel, mode)."""
@@ -198,12 +201,13 @@ def pallas_probe(kernel: str, modes: Optional[list[str]], *, reps: int,
                                  SIZE_DEFAULT[kernel]]})
     _run_adhoc(spec, reps=reps, store=store, fresh=fresh, workers=workers,
                compile_once=compile_once, shard=shard,
-               expect_no_measure=expect_no_measure,
+               expect_no_measure=expect_no_measure, audit=audit,
                header=f"pallas probe: {kernel}")
 
 
 def plan_probe(plan_path: str, *, shard: Optional[tuple[int, int]],
-               fresh: bool, expect_no_measure: bool) -> None:
+               fresh: bool, expect_no_measure: bool,
+               audit: str = "gate") -> None:
     """The fleet worker entry: execute (a shard of) a saved SweepPlan."""
     from repro.fleet.executor import FleetError, run_worker
     from repro.fleet.plan import PlanError, SweepPlan
@@ -215,7 +219,7 @@ def plan_probe(plan_path: str, *, shard: Optional[tuple[int, int]],
     try:
         run_worker(plan, index=(shard[0] if shard else None),
                    count=(shard[1] if shard else None), fresh=fresh,
-                   expect_no_measure=expect_no_measure)
+                   expect_no_measure=expect_no_measure, audit=audit)
     except (FleetError, PlanError) as e:
         raise SystemExit(str(e))
 
@@ -350,6 +354,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "(assert a merged/complete store replays fully)")
     ap.add_argument("--no-compile-once", action="store_true",
                     help="force the trace-per-k fallback sweep path")
+    ap.add_argument("--audit", default="gate",
+                    choices=("gate", "warn", "off"),
+                    help="static noise-audit policy for whole-plan/ad-hoc "
+                         "runs (shards never audit): gate (default) refuses "
+                         "statically-dead pairs before measuring, warn "
+                         "measures anyway, off skips the audit")
     return ap
 
 
@@ -377,7 +387,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                              "settings; drop the conflicting flag(s): "
                              + ", ".join(overridden))
         plan_probe(args.plan, shard=shard, fresh=args.fresh,
-                   expect_no_measure=args.expect_no_measure)
+                   expect_no_measure=args.expect_no_measure,
+                   audit=args.audit)
         return
     if args.pallas is not None:
         if args.analytic:
@@ -386,10 +397,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                      store=args.store, fresh=args.fresh,
                      workers=args.workers,
                      compile_once=not args.no_compile_once, shard=shard,
-                     expect_no_measure=args.expect_no_measure)
+                     expect_no_measure=args.expect_no_measure,
+                     audit=args.audit)
         return
     if args.arch is None:
-        ap.error("--arch is required unless --pallas or --plan is given")
+        raise SystemExit("--arch is required unless --pallas or --plan "
+                         "is given")
     if args.analytic:
         if shard is not None:
             raise SystemExit("--shard applies to measured mode only "
@@ -406,7 +419,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                        workers=args.workers,
                        compile_once=not args.no_compile_once,
                        shard=shard,
-                       expect_no_measure=args.expect_no_measure)
+                       expect_no_measure=args.expect_no_measure,
+                       audit=args.audit)
 
 
 if __name__ == "__main__":

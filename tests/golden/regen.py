@@ -1,4 +1,4 @@
-"""Regenerate the golden-signature fixtures.
+"""Regenerate the golden-signature and golden-HLO-audit fixtures.
 
     PYTHONPATH=src python tests/golden/regen.py
 
@@ -11,8 +11,18 @@ the Campaign engine and compares against ``expected.json`` — a refactor of
 curve assembly, the hinge fit, or the classifier that changes any signature
 fails loudly instead of silently reclassifying.
 
+Also writes ``hlo/*.txt.gz`` — optimized-HLO dumps (clean / K_LO / K_HI
+static compiles) for every Pallas kernel plus a loop region — and
+``audit_expected.json``, the exact ``AuditReport`` each trio must audit to.
+``tests/test_analysis.py`` replays the checked-in texts through
+``repro.analysis.audit_texts`` (pure text -> verdict, no compiler), so a
+change to the census, the corruption detectors, or the resource tagging
+fails loudly instead of silently re-verdicting. Compiled-HLO fixtures are
+pin-dependent only at REGEN time; the replay itself never compiles.
+
 Regenerate ONLY when a change to curve assembly / fitting / classification
-is intentional, and say so in the commit that updates these files.
+/ the audit pass is intentional, and say so in the commit that updates
+these files.
 """
 from __future__ import annotations
 
@@ -131,6 +141,63 @@ def replay(store_path: str) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Golden HLO audit fixtures: all four Pallas kernels + one loop region.
+# Small sizes keep the gzipped texts a few hundred KB total; `interpret`
+# keeps the compiles host-runnable on both CI pins.
+# ---------------------------------------------------------------------------
+
+HLO_DIR = os.path.join(HERE, "hlo")
+AUDIT_EXPECTED = os.path.join(HERE, "audit_expected.json")
+
+
+def _audit_targets():
+    from repro.bench.kernels import stream_region
+    from repro.kernels.region import pallas_region
+
+    return [
+        (pallas_region("probe", backend="interpret", n_steps=8), ["fp"]),
+        (pallas_region("matmul", backend="interpret", n=256), ["mxu"]),
+        (pallas_region("attention", backend="interpret", seq=64), ["vmem"]),
+        (pallas_region("spmxv", backend="interpret", n=256), ["fp"]),
+        (stream_region(n=4096, chunk=512), ["fp_add", "mem_ld"]),
+    ]
+
+
+def _write_gz(name: str, text: str) -> None:
+    import gzip
+
+    # fixed mtime=0 so a content-identical regen is byte-identical in git
+    with open(os.path.join(HLO_DIR, name), "wb") as raw:
+        with gzip.GzipFile(fileobj=raw, mode="wb", mtime=0) as f:
+            f.write(text.encode())
+
+
+def build_audit_fixtures() -> list[dict]:
+    from repro.analysis import audit_texts, compile_text, compile_texts
+    from repro.core.controller import _default_target
+
+    os.makedirs(HLO_DIR, exist_ok=True)
+    entries = []
+    for target, modes in _audit_targets():
+        clean = compile_text(target, "", 0)
+        _write_gz(f"{target.name}__clean.txt.gz", clean)
+        for mode in modes:
+            _, lo, hi = compile_texts(target, mode, clean_text=clean)
+            _write_gz(f"{target.name}__{mode}__lo.txt.gz", lo)
+            _write_gz(f"{target.name}__{mode}__hi.txt.gz", hi)
+            tgt = target.payload_target.get(mode, _default_target(mode))
+            rep = audit_texts(clean, lo, hi, region=target.name, mode=mode,
+                              target=tgt, hint=target.audit_hint)
+            assert rep.verdict == "intact", (
+                f"golden fixture must audit intact, got: {rep.explain()} — "
+                "the kernel or the audit regressed; fix before regenerating")
+            entries.append({"region": target.name, "mode": mode,
+                            "target": tgt, "hint": dict(target.audit_hint),
+                            "report": rep.to_dict()})
+    return entries
+
+
 def main() -> None:
     records = build_store()
     with open(STORE, "w") as f:
@@ -143,6 +210,12 @@ def main() -> None:
     n_modes = sum(len(m) for _, _, m in REGIONS.values())
     print(f"wrote {STORE} ({len(records)} records, {len(REGIONS)} regions, "
           f"{n_modes} signatures) and {EXPECTED}")
+    audits = build_audit_fixtures()
+    with open(AUDIT_EXPECTED, "w") as f:
+        json.dump(audits, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {HLO_DIR}/*.txt.gz and {AUDIT_EXPECTED} "
+          f"({len(audits)} audited pairs)")
 
 
 if __name__ == "__main__":

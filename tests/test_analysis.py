@@ -1,0 +1,252 @@
+"""The static noise audit (repro.analysis): corruption-class detectors on
+hand-built minimal HLO, and golden replay of checked-in compiled dumps.
+
+Two layers, both compiler-free:
+
+1. Each corruption class the audit claims to detect — DCE, constant
+   folding, strength reduction, fusion-into-consumer, loop-invariant
+   hoisting, partial elision — gets a minimal hand-built HLO trio (clean /
+   k_lo / k_hi) exhibiting exactly that transformation, so the detector
+   logic is pinned independent of what any real XLA build emits.
+
+2. ``tests/golden/hlo/*.txt.gz`` are real optimized dumps of all four
+   Pallas kernels plus a loop region; ``tests/golden/audit_expected.json``
+   pins the exact AuditReport each must replay to through ``audit_texts``.
+   A refactor of the census, the placement rule, or the resource tagging
+   that changes any verdict FAILS HERE instead of silently re-verdicting.
+   Intentional changes: regenerate with
+   ``PYTHONPATH=src python tests/golden/regen.py`` and say why in the
+   commit.
+"""
+import gzip
+import json
+import os
+
+import pytest
+
+from repro.analysis import (K_HI, K_LO, AuditReport, audit_texts,
+                            take_census)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+HLO_DIR = os.path.join(GOLDEN_DIR, "hlo")
+
+with open(os.path.join(GOLDEN_DIR, "audit_expected.json")) as f:
+    AUDIT_EXPECTED = json.load(f)
+
+PATTERNS = K_HI - K_LO
+TRIP = 16          # trip count of the hand-built region loop
+
+
+# ---------------------------------------------------------------------------
+# Hand-built minimal HLO: one entry, one trip-16 while loop, optional noise
+# placed in the loop body / the entry / a fused sub-computation.
+# ---------------------------------------------------------------------------
+
+
+def _mod(*, body_adds=0, body_chain=0, body_indep=0, entry_adds=0,
+         entry_consts=0, entry_muls=0, fusion_adds=0) -> str:
+    """One synthetic optimized-HLO module.
+
+    ``body_adds``   chained f32 adds inside the while body (the intact shape)
+    ``body_chain``  serially dependent dynamic-slices in the body (a chase)
+    ``body_indep``  independent dynamic-slices in the body (bandwidth shape)
+    ``entry_*``     ops in the entry computation (hoisted / folded shapes)
+    ``fusion_adds`` adds inside a fused sub-computation called once
+    """
+    body = [
+        "%wbody (bp: (s32[], f32[8])) -> (s32[], f32[8]) {",
+        "  %bp = (s32[], f32[8]) parameter(0)",
+        "  %iv = s32[] get-tuple-element(%bp), index=0",
+        "  %acc = f32[8] get-tuple-element(%bp), index=1",
+        "  %one = s32[] constant(1)",
+        "  %ivn = s32[] add(%iv, %one)",
+    ]
+    prev = "%acc"
+    for i in range(body_adds):
+        body.append(f"  %na.{i} = f32[8] add({prev}, %acc)")
+        prev = f"%na.{i}"
+    chain = "%acc"
+    for i in range(body_chain):
+        body.append(f"  %nc.{i} = f32[8] dynamic-slice({chain}, %iv), "
+                    "dynamic_slice_sizes={8}")
+        chain = f"%nc.{i}"
+    for i in range(body_indep):
+        body.append(f"  %ni.{i} = f32[8] dynamic-slice(%acc, %iv), "
+                    "dynamic_slice_sizes={8}")
+    body += [f"  ROOT %bt = (s32[], f32[8]) tuple(%ivn, {prev})", "}"]
+
+    cond = [
+        "%wcond (cp: (s32[], f32[8])) -> pred[] {",
+        "  %cp = (s32[], f32[8]) parameter(0)",
+        "  %civ = s32[] get-tuple-element(%cp), index=0",
+        f"  %lim = s32[] constant({TRIP})",
+        "  ROOT %lt = pred[] compare(%civ, %lim), direction=LT",
+        "}",
+    ]
+
+    fused = []
+    if fusion_adds:
+        fused = ["%fused_noise (fp0: f32[8]) -> f32[8] {",
+                 "  %fp0 = f32[8] parameter(0)"]
+        fprev = "%fp0"
+        for i in range(fusion_adds - 1):
+            fused.append(f"  %fa.{i} = f32[8] add({fprev}, %fp0)")
+            fprev = f"%fa.{i}"
+        fused += [f"  ROOT %fa.r = f32[8] add({fprev}, %fp0)", "}"]
+
+    entry = [
+        "ENTRY %main (a: f32[8]) -> f32[8] {",
+        "  %a = f32[8] parameter(0)",
+        "  %zero = s32[] constant(0)",
+        "  %init = (s32[], f32[8]) tuple(%zero, %a)",
+        "  %w = (s32[], f32[8]) while(%init), condition=%wcond, body=%wbody",
+        "  %res = f32[8] get-tuple-element(%w), index=1",
+    ]
+    eprev = "%res"
+    if fusion_adds:
+        entry.append("  %fu = f32[8] fusion(%res), kind=kLoop, "
+                     "calls=%fused_noise")
+        eprev = "%fu"
+    for i in range(entry_adds):
+        entry.append(f"  %ea.{i} = f32[8] add({eprev}, %res)")
+        eprev = f"%ea.{i}"
+    for i in range(entry_consts):
+        entry.append(f"  %ec.{i} = f32[8] constant({{0,0,0,0,0,0,0,0}})")
+    for i in range(entry_muls):
+        entry.append(f"  %em.{i} = f32[8] multiply({eprev}, %res)")
+        eprev = f"%em.{i}"
+    entry += [f"  ROOT %out = f32[8] copy({eprev})", "}"]
+
+    return "\n".join(["HloModule synthetic", ""] + cond + body + fused
+                     + entry) + "\n"
+
+
+def _audit(clean, lo, hi, *, target="compute", hint=None):
+    return audit_texts(clean, lo, hi, region="synthetic", mode="m",
+                       target=target,
+                       hint={"in_loop": True} if hint is None else hint)
+
+
+def test_census_applies_loop_multiplier_and_skips_plumbing():
+    c = take_census(_mod(body_adds=2))
+    # loop-counter add + 2 noise adds, each once per trip, in a sub comp
+    assert c.counts[("add", TRIP, "sub")] == 3
+    assert c.loop_mult == TRIP + 1     # the while cond runs trip+1 times
+    assert not any(op in ("tuple", "get-tuple-element", "parameter", "while")
+                   for (op, _, _) in c.counts)
+
+
+def test_intact_payload_scales_per_pattern():
+    rep = _audit(_mod(), _mod(body_adds=K_LO), _mod(body_adds=K_HI))
+    assert (rep.verdict, rep.corruption) == ("intact", None)
+    assert rep.survival == 1.0
+    assert rep.predicted == "compute" and rep.agrees is True
+    assert rep.ok
+
+
+def test_dce_detected_when_nothing_survives():
+    clean = _mod()
+    rep = _audit(clean, clean, clean)
+    assert (rep.verdict, rep.corruption) == ("dead", "dce")
+    assert rep.survival == 0.0 and not rep.ok
+
+
+def test_constant_folding_detected_via_constant_growth():
+    rep = _audit(_mod(), _mod(entry_consts=1), _mod(entry_consts=2))
+    assert (rep.verdict, rep.corruption) == ("dead", "constant_folding")
+
+
+def test_strength_reduction_detected_via_multiply_growth():
+    # k chained adds became one a*k multiply: identical lo/hi, one extra
+    # multiply vs clean
+    rep = _audit(_mod(), _mod(entry_muls=1), _mod(entry_muls=1))
+    assert (rep.verdict, rep.corruption) == ("dead", "strength_reduction")
+
+
+def test_fusion_into_consumer_detected_by_sub_placement():
+    rep = _audit(_mod(), _mod(fusion_adds=K_LO), _mod(fusion_adds=K_HI))
+    assert (rep.verdict, rep.corruption) == ("degraded",
+                                             "fusion_into_consumer")
+    assert rep.survival == 1.0 and rep.ok      # scales — but runs once
+
+
+def test_loop_invariant_hoisting_detected_by_entry_placement():
+    rep = _audit(_mod(), _mod(entry_adds=K_LO), _mod(entry_adds=K_HI))
+    assert (rep.verdict, rep.corruption) == ("degraded",
+                                             "loop_invariant_hoisting")
+
+
+def test_partial_elision_detected_below_one_op_per_pattern():
+    hi = _mod(body_adds=K_LO + PATTERNS // 2)     # half the span survived
+    rep = _audit(_mod(), _mod(body_adds=K_LO), hi)
+    assert (rep.verdict, rep.corruption) == ("degraded", "partial_elision")
+    assert rep.survival == 0.5
+
+
+def test_single_step_grid_legitimately_places_at_mult_one():
+    """A Pallas hint with steps=1 must NOT trip the hoisting detector —
+    a one-step grid's noise lands at multiplier 1 by construction."""
+    clean, lo, hi = _mod(), _mod(entry_adds=K_LO), _mod(entry_adds=K_HI)
+    one = _audit(clean, lo, hi, hint={"in_loop": True, "steps": 1})
+    assert (one.verdict, one.corruption) == ("intact", None)
+    many = _audit(clean, lo, hi, hint={"in_loop": True, "steps": 8})
+    assert many.verdict == "degraded"
+
+
+def test_serial_load_chain_predicts_latency():
+    rep = _audit(_mod(), _mod(body_chain=K_LO), _mod(body_chain=K_HI),
+                 target="latency")
+    assert rep.verdict == "intact"
+    assert rep.predicted == "latency" and rep.agrees is True
+    assert rep.resources["latency"] > 0
+
+
+def test_independent_loads_predict_bandwidth():
+    rep = _audit(_mod(), _mod(body_indep=K_LO), _mod(body_indep=K_HI),
+                 target="memory")
+    assert rep.verdict == "intact"
+    assert rep.predicted == "bandwidth" and rep.agrees is True
+    assert rep.resources["bandwidth"] > 0
+
+
+def test_report_roundtrips_and_tolerates_store_kind_key():
+    rep = _audit(_mod(), _mod(body_adds=K_LO), _mod(body_adds=K_HI))
+    d = rep.to_dict()
+    back = AuditReport.from_dict({"kind": "audit", **d})
+    assert back.to_dict() == d
+    assert rep.region in rep.explain() and rep.verdict in rep.explain()
+
+
+# ---------------------------------------------------------------------------
+# Golden replay: checked-in optimized dumps -> pinned AuditReport
+# ---------------------------------------------------------------------------
+
+
+def _read_gz(name: str) -> str:
+    with gzip.open(os.path.join(HLO_DIR, name), "rt") as f:
+        return f.read()
+
+
+@pytest.mark.parametrize(
+    "entry", AUDIT_EXPECTED,
+    ids=[f"{e['region']}/{e['mode']}" for e in AUDIT_EXPECTED])
+def test_golden_hlo_audits_identically(entry):
+    clean = _read_gz(f"{entry['region']}__clean.txt.gz")
+    lo = _read_gz(f"{entry['region']}__{entry['mode']}__lo.txt.gz")
+    hi = _read_gz(f"{entry['region']}__{entry['mode']}__hi.txt.gz")
+    rep = audit_texts(clean, lo, hi, region=entry["region"],
+                      mode=entry["mode"], target=entry["target"],
+                      hint=entry["hint"])
+    assert rep.to_dict() == entry["report"], (
+        f"{entry['region']}/{entry['mode']}: audit of the checked-in dumps "
+        "changed — census / detectors / resource tagging moved; if "
+        "intended, regenerate via tests/golden/regen.py")
+
+
+def test_golden_audit_covers_all_kernels_and_a_loop_region():
+    regions = {e["region"] for e in AUDIT_EXPECTED}
+    for stem in ("pallas_probe", "pallas_matmul", "pallas_attn",
+                 "pallas_spmxv"):
+        assert any(r.startswith(stem) for r in regions), stem
+    assert "stream_triad" in regions               # the loop-region shape
+    assert all(e["report"]["verdict"] == "intact" for e in AUDIT_EXPECTED)

@@ -12,13 +12,23 @@ from repro import compat
 
 def test_no_direct_new_api_uses_in_src():
     """Compat policy: nothing under src/repro/ (except compat.py itself)
-    touches the version-dependent jax.sharding surface directly."""
+    touches a version-dependent JAX surface directly — every such call goes
+    through repro.compat so both CI pins keep working.  The walk must
+    actually reach every package (kernels/, fleet/, analysis/, ... were
+    added after this scan was first written; a silent miss would void it)."""
     import os
     root = os.path.join(os.path.dirname(compat.__file__))
     banned = ("jax.sharding.get_abstract_mesh", "jax.sharding.AxisType",
-              "jax.lax.axis_size")
+              "jax.lax.axis_size", "jax.sharding.use_mesh", "jax.set_mesh",
+              "jax.shard_map", "jax.experimental.shard_map",
+              "pltpu.PrefetchScalarGridSpec")
+    must_scan = {"core", "hlo", "kernels", "fleet", "launch", "analysis"}
+    scanned_pkgs = set()
     hits = []
     for dirpath, _, files in os.walk(root):
+        rel = os.path.relpath(dirpath, root)
+        if rel != ".":
+            scanned_pkgs.add(rel.split(os.sep)[0])
         for fn in files:
             if not fn.endswith(".py") or fn == "compat.py":
                 continue
@@ -26,6 +36,8 @@ def test_no_direct_new_api_uses_in_src():
             with open(path) as f:
                 text = f.read()
             hits += [f"{path}: {b}" for b in banned if b in text]
+    missing = must_scan - scanned_pkgs
+    assert not missing, f"compat scan never reached packages: {missing}"
     assert not hits, hits
 
 

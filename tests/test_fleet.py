@@ -241,7 +241,12 @@ def test_fleet_crash_resume_heals_and_remeasures_only_missing(tmp_path,
     state = FleetState.load(plan.fleet_path())
     assert state.shards[0].status == "failed"
     assert state.shards[1].status == "done"
-    assert not os.path.exists(plan.store)          # crash aborted pre-merge
+    # crash aborted pre-merge: the canonical store holds only the pre-launch
+    # audit records, no measured points
+    canon = CampaignStore(plan.store, readonly=True)
+    assert not canon.points
+    assert set(canon.audits) == set(plan.grid())
+    canon.close()
 
     res = run_fleet(path, resume=True, launcher=in_process_launcher)
     assert res.launched == [0]                     # ONLY the dead shard

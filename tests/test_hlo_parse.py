@@ -11,8 +11,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.hlo.parse import (find_entry, nesting_multipliers, parse_module,
-                             shape_bytes, while_trip_counts)
+from repro.hlo.parse import (extract_op_name, find_entry, nesting_multipliers,
+                             parse_module, shape_bytes, shape_dims,
+                             while_trip_counts)
 from repro.roofline.terms import parsed_dot_flops
 
 
@@ -21,6 +22,41 @@ def test_shape_bytes():
     assert shape_bytes("bf16[2,3]") == 12
     assert shape_bytes("(f32[4]{0}, s32[])") == 20
     assert shape_bytes("pred[]") == 1
+
+
+def test_shape_bytes_bounded_dynamic():
+    """Bounded-dynamic dims (`<=N`) count their bound; unbounded (`?`)
+    count 1 — neither silently drops the whole shape anymore."""
+    assert shape_bytes("f32[<=128,4]") == 128 * 4 * 4
+    assert shape_bytes("s32[<=16]{0}") == 16 * 4
+    assert shape_bytes("f32[?,4]") == 4 * 4
+    assert shape_bytes("(f32[<=8,128], s32[])") == 8 * 128 * 4 + 4
+    assert shape_dims("f32[<=128,4]") == [("f32", (128, 4))]
+    assert shape_dims("bf16[?,2]") == [("bf16", (1, 2))]
+
+
+def test_extract_op_name_multi_attribute_metadata():
+    """op_name extraction must tolerate the multi-attribute metadata={...}
+    blocks newer XLA emits (op_type / source_file / source_line around the
+    op_name), escaped quotes inside the value, and quoted strings in OTHER
+    attributes that could shadow a whole-line search."""
+    legacy = ('  %add.1 = f32[8,128]{1,0} add(%a, %b), '
+              'metadata={op_name="noise_pattern/add"}')
+    assert extract_op_name(legacy) == "noise_pattern/add"
+    multi = ('  %add.2 = f32[8,128]{1,0} add(%a, %b), '
+             'metadata={op_type="add" op_name="jit(f)/noise_pattern/add" '
+             'source_file="/tmp/step.py" source_line=12}')
+    assert extract_op_name(multi) == "jit(f)/noise_pattern/add"
+    escaped = ('  %add.3 = f32[] add(%a, %b), '
+               r'metadata={op_name="scope \"q\"/add" source_line=3}')
+    assert extract_op_name(escaped) == 'scope \\"q\\"/add'
+    assert extract_op_name("  %add.4 = f32[] add(%a, %b)") == ""
+    # parse_module carries the multi-attribute op_name onto the Instr
+    txt = "ENTRY %main (a: f32[]) -> f32[] {\n" + multi + "\n}\n"
+    comps = parse_module(txt)
+    (ins,) = comps["main"]
+    assert ins.op_name == "jit(f)/noise_pattern/add"
+    assert ins.opcode == "add"
 
 
 def test_scan_trip_count_and_dot_flops():
