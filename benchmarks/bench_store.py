@@ -1,0 +1,198 @@
+"""Store-layer benchmark: append throughput, merge scaling, compaction.
+
+Purely synthetic campaign records (no JAX, no kernels) drive the two store
+layouts through their hot paths:
+
+  * append — points/sec for the legacy single-JSONL layout vs the segmented
+    (segment + manifest) layout;
+  * incremental merge — fold ONE new worker segment into a canonical store
+    already holding N segments, for growing N. Wall-clock AND the exact
+    bytes/records parsed (``repro.core.segments.io_tally``) must stay flat
+    in N: the O(new segment) contract. The legacy full canonical rewrite is
+    measured alongside as the O(store) contrast;
+  * compaction — records/bytes before vs after ``compact_store`` folds a
+    supersede-heavy stream (every pair re-measured ``REMEASURES`` times).
+
+Writes ``experiments/bench/BENCH_store.json``. Imports stay lazy so
+``python -m benchmarks.bench_store --help`` works on a box without JAX;
+the benchmark itself needs only the stdlib and ``repro.core.campaign``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+
+from benchmarks.common import banner, save, timer
+
+REMEASURES = 3          # meta-conflict re-measures per pair in the
+                        # compaction stream (each discards the previous)
+
+
+def synth_records(pair_count: int, points: int, *, rep_tag: int = 0):
+    """One synthetic campaign stream: meta + ``points`` points + done per
+    (region, mode) pair. ``rep_tag`` varies the meta settings, so replaying
+    two tags for the same pairs exercises the meta-conflict discard path."""
+    for p in range(pair_count):
+        region, mode = f"r{p:03d}", "fp"
+        yield {"kind": "meta", "region": region, "mode": mode,
+               "reps": 2 + rep_tag, "compile_once": True}
+        for k in range(points):
+            yield {"kind": "point", "region": region, "mode": mode,
+                   "k": k, "t": 1e-3 * (k + 1)}
+        yield {"kind": "done", "region": region, "mode": mode,
+               "ks": list(range(points)), "drift": None,
+               "stopped_early": False, "payload": None}
+
+
+def _fill(store, records) -> int:
+    n = 0
+    for rec in records:
+        store.append(rec)
+        n += 1
+    return n
+
+
+def bench_append(tmp: str, *, pairs: int, points: int) -> dict:
+    """Append the same synthetic stream to both layouts; report points/sec."""
+    from repro.core.campaign import CampaignStore
+
+    out: dict = {"records": pairs * (points + 2)}
+    for layout, seg in (("legacy", False), ("segmented", True)):
+        path = os.path.join(tmp, f"append_{layout}.jsonl")
+        store = CampaignStore(path, segmented=seg)
+        with timer() as t:
+            n = _fill(store, synth_records(pairs, points))
+            store.close()
+        out[layout] = {"seconds": round(t.dt, 4),
+                       "records_per_s": round(n / max(t.dt, 1e-9))}
+    print(f"  [append {out['records']} record(s): legacy "
+          f"{out['legacy']['records_per_s']}/s vs segmented "
+          f"{out['segmented']['records_per_s']}/s]")
+    return out
+
+
+def _grown_store(tmp: str, name: str, segments: int, *, pairs: int,
+                 points: int, segmented: bool) -> str:
+    """A canonical store holding ``segments`` writer sessions' worth of
+    records (one sealed segment per session when ``segmented``)."""
+    from repro.core.campaign import CampaignStore
+
+    path = os.path.join(tmp, f"{name}.jsonl")
+    for s in range(segments):
+        store = CampaignStore(path, segmented=segmented or None)
+        base = s * pairs
+        _fill(store, ({**rec, "region": f"r{base + int(rec['region'][1:]):03d}"}
+                      for rec in synth_records(pairs, points)))
+        store.close()
+    return path
+
+
+def bench_merge(tmp: str, *, segment_counts, pairs: int, points: int) -> dict:
+    """Merge-one-new-worker latency and I/O vs canonical store size, for the
+    incremental (segment adoption) and legacy (full canonical rewrite)
+    paths. The incremental rows' read_bytes/read_records must not grow with
+    ``segments_before`` — that flatness IS the benchmark's headline."""
+    from repro.core.campaign import CampaignStore, merge_stores
+    from repro.core.segments import io_tally
+
+    out = {"incremental": [], "full_rewrite": []}
+    for n in segment_counts:
+        for mode, seg in (("incremental", True), ("full_rewrite", False)):
+            dest = _grown_store(tmp, f"canon_{mode}_{n}", n, pairs=pairs,
+                                points=points, segmented=seg)
+            worker = os.path.join(tmp, f"worker_{mode}_{n}.jsonl")
+            ws = CampaignStore(worker, segmented=seg or None)
+            _fill(ws, ({**rec, "region": "w" + rec["region"]}
+                       for rec in synth_records(pairs, points)))
+            ws.close()
+            # dest rides along as its own first source (run_fleet's shape);
+            # the incremental path skips it without reading a byte, the
+            # legacy path re-reads and rewrites the whole canonical store
+            io_tally(reset=True)
+            with timer() as t:
+                stats = merge_stores(dest, [dest, worker])
+            tally = io_tally()
+            row = {"segments_before": n,
+                   "records_before": n * pairs * (points + 2),
+                   "seconds": round(t.dt, 4),
+                   "read_bytes": tally["bytes"],
+                   "read_records": tally["records"],
+                   "incremental": stats.incremental,
+                   "segments_new": stats.segments_new,
+                   "segments_skipped": stats.segments_skipped}
+            out[mode].append(row)
+            print(f"  [merge 1 worker into {n}-segment {mode} store: "
+                  f"{row['seconds']}s, read {row['read_bytes']} B / "
+                  f"{row['read_records']} record(s)]")
+    return out
+
+
+def bench_compaction(tmp: str, *, pairs: int, points: int) -> dict:
+    """Compaction ratio on a supersede-heavy stream: every pair re-measured
+    REMEASURES times with conflicting meta settings, then compacted."""
+    from repro.core.campaign import CampaignStore, compact_store
+
+    path = os.path.join(tmp, "compact.jsonl")
+    for rep in range(REMEASURES):    # one sealed segment per re-measure
+        store = CampaignStore(path, segmented=True)
+        _fill(store, synth_records(pairs, points, rep_tag=rep))
+        store.close()
+    stats = compact_store(path)
+    out = {"records_in": stats.records_in, "records_out": stats.records_out,
+           "bytes_in": stats.bytes_in, "bytes_out": stats.bytes_out,
+           "segments_in": stats.segments_in,
+           "reclaimed_pct": round(100.0 * (1 - stats.bytes_out
+                                           / max(stats.bytes_in, 1)), 1)}
+    print(f"  [{stats}]")
+    return out
+
+
+def run(quick: bool = True) -> dict:
+    banner("store benchmark — append / incremental merge / compaction")
+    pairs, points = (2, 8) if quick else (8, 32)
+    segment_counts = (4, 16) if quick else (4, 16, 64)
+    tmp = tempfile.mkdtemp(prefix="bench_store_")
+    try:
+        out = {"quick": quick, "pairs_per_segment": pairs,
+               "points_per_pair": points,
+               "append": bench_append(tmp, pairs=pairs, points=points),
+               "merge": bench_merge(tmp, segment_counts=segment_counts,
+                                    pairs=pairs, points=points),
+               "compaction": bench_compaction(tmp, pairs=pairs,
+                                              points=points)}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    inc = out["merge"]["incremental"]
+    flat = (len(inc) < 2
+            or inc[-1]["read_bytes"] <= inc[0]["read_bytes"] * 1.5)
+    out["incremental_read_flat"] = flat
+    if not flat:
+        raise SystemExit("bench_store: incremental merge read volume GREW "
+                         f"with store size: {json.dumps(inc)}")
+    print(f"  incremental merge read volume flat across "
+          f"{list(segment_counts)} segments: {flat}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.bench_store",
+        description="campaign-store benchmark: append throughput, "
+                    "incremental-merge scaling (must be O(new segment)), "
+                    "compaction ratio -> experiments/bench/BENCH_store.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="small grids (the CI store-smoke configuration)")
+    ap.add_argument("--full", action="store_true",
+                    help="larger grids and one more merge size")
+    args = ap.parse_args(argv)
+    out = run(quick=not args.full)
+    save("BENCH_store", out)
+    print("wrote experiments/bench/BENCH_store.json")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,8 +25,12 @@ from repro.core.analytic import (  # noqa: F401
 )
 from repro.core.campaign import (AnalyticCampaign, Campaign, CampaignStats,  # noqa: F401
                                  CampaignStore, CampaignStoreError,
-                                 PairStatus, host_store, merge_stores,
+                                 CompactStats, MergeStats, PairStatus,
+                                 compact_store, host_store, merge_stores,
                                  read_store_records, worker_store)
+from repro.core.segments import (SegmentStore, io_tally, is_segmented,  # noqa: F401
+                                 manifest_status, remove_store, segments_dir,
+                                 store_exists)
 from repro.core.classifier import (BottleneckReport, apply_audit_evidence,  # noqa: F401
                                    classify, cross_check_with_decan)
 from repro.core.controller import Controller, RegionReport, RegionTarget, loop_region  # noqa: F401

@@ -50,9 +50,10 @@ Supersede rules (they define both in-file appends and ``merge_stores``):
     for region records, (region, variant) for decan records — so a settings
     change appends fresh data without rewriting the file;
   * a "meta" record whose measurement settings differ from the pair's
-    current meta DISCARDS the pair's accumulated sens/point/done records:
-    timings from different settings (reps, sweep path) must never be
-    spliced into one curve. "pred" and "decan" records carry their own
+    current meta DISCARDS the pair's accumulated sens/point/done/audit
+    records: timings from different settings (reps, sweep path) must never
+    be spliced into one curve, and stale static-audit evidence must never
+    annotate a re-measured pair. "pred" and "decan" records carry their own
     settings inline and supersede independently of measured meta;
   * ``merge_stores`` streams source stores in argument order (so a later
     source's records supersede an earlier source's, and a meta CONFLICT
@@ -72,10 +73,21 @@ record parses, so nothing is lost). Any corruption BEFORE the final record
 means the file was edited or the disk lies, and the loader hard-fails
 rather than silently dropping data. ``CampaignStore(path, readonly=True)``
 loads without creating, healing, or truncating anything.
+
+Layouts: a store is either ONE legacy JSONL file at ``path`` or a SEGMENTED
+store (append-only segment files plus a checksummed manifest in
+``path``'s ``.segments`` directory — see ``repro.core.segments``). Both
+share the record schema, supersede rules, and this module's whole API;
+``CampaignStore(path, segmented=True)`` opts a new store in, existing
+stores auto-detect. Segmented stores make ``merge_stores`` INCREMENTAL
+(O(new segments), not O(store)) and gain ``compact_store`` /
+``python -m repro.core.campaign compact`` to reclaim superseded records.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import itertools
 import json
 import logging
 import os
@@ -91,56 +103,15 @@ from repro.core.classifier import BottleneckReport, classify
 from repro.core.controller import (Controller, ModeResult, RegionReport,
                                    RegionTarget, derive_body_size)
 from repro.core import decan as decan_mod
+from repro.core import segments as seg_mod
 from repro.core.payload import InjectionReport
+# the tolerant line-streaming reader and the corrupt-store error live in
+# repro.core.segments (shared with the segmented layout); re-exported here
+# because this module is their historical public home
+from repro.core.segments import (CampaignStoreError, io_tally,  # noqa: F401
+                                 read_store_records, store_exists)
 
 log = logging.getLogger("repro.campaign")
-
-
-class CampaignStoreError(RuntimeError):
-    """A store is corrupt in a way the loader must not paper over."""
-
-
-def read_store_records(path: str) -> tuple[list[dict], int]:
-    """Parse a JSONL store, tolerating a truncated FINAL line.
-
-    A process killed between ``write`` and ``flush`` leaves a partial last
-    record; that is expected damage and costs at most one point, so it is
-    dropped with a warning. A malformed record with valid records AFTER it
-    cannot come from a torn append — that store is corrupt, and loading it
-    raises ``CampaignStoreError``.
-
-    Returns ``(records, valid_bytes)`` where ``valid_bytes`` is the length of
-    the clean prefix (the caller may truncate the file to it).
-    """
-    with open(path, "rb") as f:
-        data = f.read()
-    records: list[dict] = []
-    valid = 0
-    pos = 0
-    while pos < len(data):
-        nl = data.find(b"\n", pos)
-        end = len(data) if nl < 0 else nl
-        nxt = end if nl < 0 else nl + 1
-        line = data[pos:end].strip()
-        if line:
-            try:
-                rec = json.loads(line.decode("utf-8"))
-                if not isinstance(rec, dict):
-                    raise ValueError(f"record is {type(rec).__name__}, "
-                                     "not an object")
-            except (UnicodeDecodeError, ValueError) as e:
-                if data[nxt:].strip():
-                    raise CampaignStoreError(
-                        f"{path}: corrupt record at byte {pos} with valid "
-                        f"records after it ({e}); refusing to load") from e
-                log.warning(
-                    "%s: dropping truncated final record (%d bytes) — a "
-                    "previous run died mid-append", path, end - pos)
-                return records, valid
-            records.append(rec)
-        valid = nxt
-        pos = nxt
-    return records, valid
 
 
 def _meta_settings(rec: dict) -> dict:
@@ -157,7 +128,10 @@ def worker_store(path: str, index: int, count: int) -> str:
 
 def host_store(path: str, host: str) -> str:
     """Per-HOST namespacing of a store path: ``base.jsonl`` ->
-    ``base.h<host>.jsonl`` (host sanitized to filename-safe chars).
+    ``base.h<host>-<hash6>.jsonl`` (host sanitized to filename-safe chars,
+    plus a short hash of the RAW host name — sanitization alone maps
+    distinct hosts like ``node:1`` and ``node-1`` to the same tag, and two
+    hosts sharing a staging file could clobber each other's pulls).
 
     Multi-host launchers stage files they fetch from a remote host under
     this name before atomically renaming them into place, so a torn
@@ -166,7 +140,8 @@ def host_store(path: str, host: str) -> str:
     clobber each other mid-copy."""
     base, ext = os.path.splitext(path)
     tag = "".join(c if c.isalnum() or c in "._-" else "-" for c in host)
-    return f"{base}.h{tag}{ext or '.jsonl'}"
+    h = hashlib.sha256(host.encode("utf-8")).hexdigest()[:6]
+    return f"{base}.h{tag}-{h}{ext or '.jsonl'}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,13 +162,20 @@ class PairStatus:
 
 
 class CampaignStore:
-    """Append-only JSONL measurement store, loaded eagerly on open.
+    """Append-only measurement store, loaded eagerly on open.
 
     Thread-safe: appends take a lock and flush immediately, so the on-disk
     store is never more than one record behind the in-memory view.
+
+    ``segmented=None`` (the default) auto-detects the on-disk layout:
+    a ``path.segments`` directory opens the segmented backend
+    (``repro.core.segments.SegmentStore``), otherwise the legacy single
+    JSONL file at ``path``. ``segmented=True`` opts a NEW store into the
+    segmented layout; both layouts present this exact class API.
     """
 
-    def __init__(self, path: str, *, readonly: bool = False):
+    def __init__(self, path: str, *, readonly: bool = False,
+                 segmented: Optional[bool] = None):
         self.path = path
         self.points: dict[tuple[str, str], dict[int, float]] = {}
         self.sens: dict[tuple[str, str], float] = {}
@@ -204,10 +186,37 @@ class CampaignStore:
         self.audits: dict[tuple[str, str], dict] = {}
         self.body_sizes: dict[str, int] = {}
         self._lock = threading.Lock()
-        exists = os.path.exists(path)
-        if readonly and not exists:
+        self._f = None
+        self._seg: Optional[seg_mod.SegmentStore] = None
+        has_dir = seg_mod.is_segmented(path)
+        has_file = os.path.exists(path)
+        if has_dir and has_file:
+            raise CampaignStoreError(
+                f"{path}: both a legacy store file and a segment dir "
+                f"({seg_mod.segments_dir(path)}) exist; merge or remove one")
+        if segmented is None:
+            segmented = has_dir
+        elif segmented and has_file:
+            raise CampaignStoreError(
+                f"{path}: cannot open as a segmented store — a legacy "
+                "single-file store already exists (merge or compact it into "
+                "a segmented path first)")
+        elif not segmented and has_dir:
+            raise CampaignStoreError(
+                f"{path}: cannot open as a legacy store — a segment dir "
+                f"exists at {seg_mod.segments_dir(path)}")
+        self.segmented = bool(segmented)
+        if segmented:
+            if readonly and not has_dir:
+                raise FileNotFoundError(
+                    f"campaign store {path} does not exist")
+            self._seg = seg_mod.SegmentStore(path, readonly=readonly)
+            for rec in self._seg.load():
+                self._ingest(rec)
+            return
+        if readonly and not has_file:
             raise FileNotFoundError(f"campaign store {path} does not exist")
-        if exists:
+        if has_file:
             records, valid = read_store_records(path)
             for rec in records:
                 self._ingest(rec)
@@ -222,7 +231,6 @@ class CampaignStore:
                     with open(path, "ab") as f:
                         f.write(b"\n")
         if readonly:
-            self._f = None
             return
         d = os.path.dirname(path)
         if d:
@@ -262,6 +270,11 @@ class CampaignStore:
     def append(self, rec: dict) -> None:
         """Ingest one record and flush it to disk (locked; readonly stores
         refuse)."""
+        if self._seg is not None:
+            with self._lock:
+                self._ingest(rec)
+                self._seg.append_line(json.dumps(rec), rec)
+            return
         if self._f is None:
             raise RuntimeError(f"store {self.path} was opened readonly")
         with self._lock:
@@ -270,7 +283,12 @@ class CampaignStore:
             self._f.flush()
 
     def close(self) -> None:
-        """Close the append handle (no-op for readonly stores)."""
+        """Close the append handle — for segmented stores this SEALS the
+        session's segment into the manifest (no-op for readonly stores)."""
+        if self._seg is not None:
+            if not self._seg.readonly:
+                self._seg.close()
+            return
         if self._f is not None:
             self._f.close()
 
@@ -302,7 +320,10 @@ class CampaignStore:
         return {(r, m): self.pair_status(r, m) for r, m in pairs}
 
     def _drop_measured(self, key: tuple[str, str]) -> None:
-        for d in (self.points, self.sens, self.done):
+        # audits are settings-scoped evidence measured alongside the pair:
+        # stale ones must not feed apply_audit_evidence after a re-measure.
+        # preds carry their own settings inline and supersede independently.
+        for d in (self.points, self.sens, self.done, self.audits):
             d.pop(key, None)
 
     def discard(self, region: str, mode: str) -> None:
@@ -336,13 +357,26 @@ def _canon_sort_key(rec: dict) -> tuple:
 @dataclasses.dataclass
 class MergeStats:
     """What ``merge_stores`` did: sources read, records in/out, and the
-    (region, mode) pairs whose meta conflicted (later source won)."""
+    (region, mode) pairs whose meta conflicted (later source won). For an
+    INCREMENTAL merge into a segmented destination, ``records_in`` counts
+    only the newly adopted segments' records, ``records_out`` the
+    destination's total, and ``conflicts`` stays empty — supersede (and
+    meta-conflict) resolution is a read-time property of a segmented
+    store, applied identically by every subsequent load."""
     sources: int = 0
     records_in: int = 0
     records_out: int = 0
     conflicts: list = dataclasses.field(default_factory=list)  # (region, mode)
+    incremental: bool = False
+    segments_new: int = 0
+    segments_skipped: int = 0
 
     def __str__(self) -> str:
+        if self.incremental:
+            return (f"folded {self.segments_new} new segment(s) "
+                    f"({self.records_in} record(s)) from {self.sources} "
+                    f"store(s); {self.segments_skipped} segment(s) already "
+                    f"merged; {self.records_out} record(s) total")
         s = (f"merged {self.records_in} records from {self.sources} stores "
              f"into {self.records_out}")
         if self.conflicts:
@@ -386,7 +420,9 @@ class _MergeView:
                     "later store's sweep", key[0], key[1],
                     _meta_settings(old), _meta_settings(rec))
                 self.stats.conflicts.append(key)
-                for d in (self.points, self.sens, self.done):
+                # mirror CampaignStore._drop_measured: stale audit evidence
+                # from the superseded settings must not survive the merge
+                for d in (self.points, self.sens, self.done, self.audits):
                     d.pop(key, None)
             self.meta[key] = rec
         elif kind == "region":
@@ -415,22 +451,75 @@ class _MergeView:
         return sorted(out, key=_canon_sort_key)
 
 
-def merge_stores(dest: str, sources: Sequence[str]) -> MergeStats:
+def _read_any_store(src: str) -> list[dict]:
+    """Records of a source store in replay order, whichever layout it has."""
+    if seg_mod.is_segmented(src):
+        return seg_mod.SegmentStore(src, readonly=True).load()
+    return read_store_records(src)[0]
+
+
+# concurrent merges to the same dest must never share a tmp name: each call
+# gets a pid+counter-unique one, so neither racer can rename or remove the
+# other's half-written output (last os.replace still wins the dest)
+_MERGE_TMP_COUNT = itertools.count()
+
+
+def merge_stores(dest: str, sources: Sequence[str], *,
+                 incremental: Optional[bool] = None) -> MergeStats:
     """Fold worker stores into one canonical store at ``dest``.
 
-    Sources stream in argument order, so later sources supersede earlier ones
-    under the schema's supersede/meta-conflict rules. The output is written
-    with records in a canonical sort order and canonical key order, then
-    atomically renamed over ``dest`` — so merging is idempotent (re-merging
-    the output is a byte-level no-op), order-independent when sources'
-    keys are disjoint, and safe when ``dest`` is itself one of the sources.
+    Two strategies share this entry point:
+
+    * **incremental** (segmented ``dest``): adopt whole source segments the
+      destination manifest has never seen — O(new segments) reads, never
+      O(store); supersede resolution happens at read time. Chosen
+      automatically when ``dest`` is (or, with segmented sources and no
+      legacy dest file, becomes) a segmented store; dest-as-source is a
+      no-op.
+    * **full canonical** (legacy single-file ``dest``): sources stream in
+      argument order, so later sources supersede earlier ones under the
+      schema's supersede/meta-conflict rules; the output is written with
+      records in a canonical sort order and canonical key order, then
+      atomically renamed over ``dest`` — merging is idempotent (re-merging
+      the output is a byte-level no-op), order-independent when sources'
+      keys are disjoint, and safe when ``dest`` is itself one of the
+      sources. ``incremental=False`` forces this path (segmented sources
+      are read through their deterministic replay order), which is how a
+      segmented store is flattened to a canonical single file.
     """
+    dest_seg = seg_mod.is_segmented(dest)
+    dest_file = os.path.isfile(dest)
+    if dest_seg and dest_file:
+        raise CampaignStoreError(
+            f"{dest}: both a legacy store file and a segment dir exist; "
+            "merge or remove one before merging into it")
+    if incremental is None:
+        incremental = dest_seg or (not dest_file and
+                                   any(seg_mod.is_segmented(s)
+                                       for s in sources))
+    if incremental:
+        if dest_file:
+            raise CampaignStoreError(
+                f"{dest}: incremental merge needs a segmented destination "
+                "but a legacy store file is in the way (pass "
+                "incremental=False for a full canonical merge, or pick a "
+                "fresh dest)")
+        r = seg_mod.adopt_segments(dest, sources)
+        return MergeStats(sources=len(sources), records_in=r["records_in"],
+                          records_out=r["records_out"], incremental=True,
+                          segments_new=r["segments_new"],
+                          segments_skipped=r["segments_skipped"])
+    if dest_seg:
+        raise CampaignStoreError(
+            f"{dest}: destination is a segmented store; a full canonical "
+            "merge would leave both layouts in place — use the incremental "
+            "merge, or flatten into a different dest path")
     stats = MergeStats(sources=len(sources))
     view = _MergeView(stats)
     d = os.path.dirname(dest)
     if d:
         os.makedirs(d, exist_ok=True)
-    tmp = dest + ".merge-tmp"
+    tmp = f"{dest}.merge-tmp.{os.getpid()}.{next(_MERGE_TMP_COUNT)}"
     try:
         with open(tmp, "w") as f:
             # sources stream with the tmp already open, so a corrupt source
@@ -438,7 +527,7 @@ def merge_stores(dest: str, sources: Sequence[str]) -> MergeStats:
             # the aborted tmp never outlives the call — ``dest`` only ever
             # sees the atomic rename of a COMPLETE merge
             for src in sources:
-                for rec in read_store_records(src)[0]:
+                for rec in _read_any_store(src):
                     view.ingest(rec)
             records = view.records()
             stats.records_out = len(records)
@@ -449,6 +538,56 @@ def merge_stores(dest: str, sources: Sequence[str]) -> MergeStats:
         if os.path.exists(tmp):
             os.remove(tmp)
     return stats
+
+
+@dataclasses.dataclass
+class CompactStats:
+    """What ``compact_store`` reclaimed."""
+    records_in: int = 0
+    records_out: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+    segments_in: int = 0          # 0 for a legacy single-file store
+
+    def __str__(self) -> str:
+        pct = 1.0 - (self.bytes_out / self.bytes_in) if self.bytes_in else 0.0
+        s = (f"compacted {self.records_in} -> {self.records_out} record(s), "
+             f"{self.bytes_in} -> {self.bytes_out} bytes ({pct:.0%} "
+             "reclaimed)")
+        if self.segments_in:
+            s += f"; {self.segments_in} segment(s) -> 1"
+        return s
+
+
+def compact_store(path: str) -> CompactStats:
+    """Rewrite a store in place with superseded/discarded records dropped.
+
+    A segmented store collapses to ONE canonical segment: the compaction
+    commit publishes a manifest whose ``folded`` list names every prior
+    segment id, so an interrupted cleanup can never resurrect superseded
+    records and future incremental merges still skip already-folded source
+    segments. A legacy store is rewritten through the canonical full merge
+    (``merge_stores(path, [path])``). Do not compact a store a live writer
+    is appending to.
+    """
+    if not seg_mod.store_exists(path):
+        raise FileNotFoundError(f"campaign store {path} does not exist")
+    if seg_mod.is_segmented(path):
+        backend = seg_mod.SegmentStore(path)   # writable: heals orphans in
+        raw = backend.load()
+        view = _MergeView(MergeStats())
+        for rec in raw:
+            view.ingest(rec)
+        records = view.records()
+        r = seg_mod.replace_all_segments(
+            path, [_canon_line(rec) for rec in records], records)
+        return CompactStats(records_in=len(raw), records_out=len(records),
+                            bytes_in=r["bytes_in"], bytes_out=r["bytes_out"],
+                            segments_in=r["segments_in"])
+    bytes_in = os.path.getsize(path)
+    ms = merge_stores(path, [path], incremental=False)
+    return CompactStats(records_in=ms.records_in, records_out=ms.records_out,
+                        bytes_in=bytes_in, bytes_out=os.path.getsize(path))
 
 
 @dataclasses.dataclass
@@ -786,9 +925,19 @@ def _cli(argv: Optional[Sequence[str]] = None) -> int:
                     "inspect contents)")
     sub = ap.add_subparsers(dest="cmd", required=True)
     mp = sub.add_parser("merge", help="fold worker stores into one "
-                                      "canonical store")
+                                      "canonical store (incremental when "
+                                      "the destination is segmented)")
     mp.add_argument("dest")
     mp.add_argument("sources", nargs="+")
+    mp.add_argument("--canonical", action="store_true",
+                    help="force a full canonical single-file merge even for "
+                         "segmented sources (reads every record; this is "
+                         "how a segmented store flattens to one JSONL file)")
+    cp = sub.add_parser("compact", help="rewrite a store in place, dropping "
+                                        "superseded/discarded records (a "
+                                        "segmented store collapses to one "
+                                        "canonical segment)")
+    cp.add_argument("path")
     ip = sub.add_parser("inspect", help="summarize one store with per-"
                                         "(region, mode) grid completeness")
     ip.add_argument("path")
@@ -799,8 +948,17 @@ def _cli(argv: Optional[Sequence[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     if args.cmd == "merge":
-        stats = merge_stores(args.dest, args.sources)
+        stats = merge_stores(args.dest, args.sources,
+                             incremental=False if args.canonical else None)
         print(f"{args.dest}: {stats}")
+        return 0
+    if args.cmd == "compact":
+        try:
+            cstats = compact_store(args.path)
+        except FileNotFoundError as e:
+            print(e)
+            return 2
+        print(f"{args.path}: {cstats}")
         return 0
     try:   # readonly: inspecting must neither create nor heal the store
         st = CampaignStore(args.path, readonly=True)

@@ -6,8 +6,10 @@ and a retry budget). ``run_fleet`` (executor.py) drives it end to end:
 spawn N worker shards through a pluggable ``Launcher`` (launchers.py —
 local subprocesses, ssh hosts from a hosts.json, or a deterministic
 fault-injection mock), retry failed shards within the ``RetryBudget``,
-survive crashes, merge worker stores, classify from the merged store.
-``python -m repro.fleet`` is the CLI (plan / run / doctor / status).
+survive crashes, merge worker stores (incrementally, by segment adoption,
+when the plan declares ``store_format: "segments"``), classify from the
+merged store. ``python -m repro.fleet`` is the CLI
+(plan / run / audit / doctor / status / watch).
 """
 from repro.fleet.executor import (FleetError, FleetResult, FleetState,  # noqa: F401
                                   fleet_doctor, in_process_launcher,

@@ -30,6 +30,11 @@ budgets), diagnose and inspect fleet state.
     PYTHONPATH=src python -m repro.fleet doctor --plan plan.json
     PYTHONPATH=src python -m repro.fleet status --plan plan.json
 
+    # live progress while workers run: segmented stores are polled through
+    # their manifests alone (no record data is read), so watching never
+    # contends with the writers; --once prints one frame and exits
+    PYTHONPATH=src python -m repro.fleet watch --plan plan.json --once
+
 docs/orchestration.md documents the hosts.json format, the retry budget,
 and the manual fallback recipe for hosts without ssh.
 """
@@ -137,7 +142,8 @@ def _build_plan(args) -> "object":
                      compile_once=not args.no_compile_once,
                      backend=args.backend,
                      launcher=_launcher_spec(args),
-                     retry=_retry_spec(args))
+                     retry=_retry_spec(args),
+                     store_format=args.store_format)
     try:
         plan.validate()
     except PlanError as e:
@@ -263,7 +269,7 @@ def _cmd_doctor(args) -> int:
 
 
 def _cmd_status(args) -> int:
-    from repro.core import CampaignStore
+    from repro.core import CampaignStore, store_exists
     from repro.fleet.executor import FleetState
     from repro.fleet.plan import SweepPlan
 
@@ -291,7 +297,7 @@ def _cmd_status(args) -> int:
     else:
         print(f"fleet state {fleet_path}: not created yet")
     incomplete_pairs = 0
-    if os.path.exists(plan.store):
+    if store_exists(plan.store):
         st = CampaignStore(plan.store, readonly=True)
         status = st.grid_status(grid)
         incomplete_pairs = sum(not ps.complete for ps in status.values())
@@ -303,7 +309,7 @@ def _cmd_status(args) -> int:
     for i in range(plan.shards):
         ws = plan.worker_stores()[i]
         mine = grid[i::plan.shards]
-        if not os.path.exists(ws):
+        if not store_exists(ws):
             print(f"  worker store {i}: absent ({len(mine)} pair slice)")
             continue
         st = CampaignStore(ws, readonly=True)
@@ -311,6 +317,83 @@ def _cmd_status(args) -> int:
         print(f"  worker store {i}: {done}/{len(mine)} slice pair(s) "
               "complete")
     return 1 if incomplete_pairs else 0
+
+
+def _watch_frame(plan, grid) -> tuple[str, bool]:
+    """One rendered ``fleet watch`` frame plus grid completeness.
+
+    Segmented stores are summarized from their MANIFESTs alone (sealed
+    segment/record/byte totals, live-or-orphan unsealed segments, and the
+    aggregated per-pair ``done`` coverage) — no record data is read, so a
+    2-second poll never contends with active writers. Legacy single-file
+    stores fall back to a full readonly load. ``done`` markers are trusted
+    as-is here; ``doctor``/``status`` own the precise per-k check.
+    """
+    from repro.core import (CampaignStore, is_segmented, manifest_status,
+                            store_exists)
+
+    out = [f"== fleet watch: plan {plan.name!r}, {len(grid)} pair(s)"]
+    done: set = set()
+    stores = [("canonical", plan.store)]
+    stores += [(f"worker {i}", ws)
+               for i, ws in enumerate(plan.worker_stores())]
+    for label, path in stores:
+        if not store_exists(path):
+            out.append(f"  {label} ({path}): absent")
+            continue
+        if is_segmented(path):
+            st = manifest_status(path)
+            seen = sorted((str(r), str(m)) for (r, m), p
+                          in st["pairs"].items() if p.get("done"))
+            done.update((r, m) for (r, m), p in st["pairs"].items()
+                        if p.get("done"))
+            extra = (f", {st['orphans']} unsealed segment(s) "
+                     f"[{st['orphan_bytes']} B live/orphan]"
+                     if st["orphans"] else "")
+            out.append(f"  {label} ({path}): {st['segments']} sealed "
+                       f"segment(s), {st['records']} record(s), "
+                       f"{st['bytes']} B{extra}")
+            if seen:
+                out.append("    done: " + ", ".join(f"{r}/{m}"
+                                                    for r, m in seen))
+        else:
+            st = CampaignStore(path, readonly=True)
+            comp = {k for k, ps in st.grid_status(grid).items()
+                    if ps.complete}
+            done.update(comp)
+            out.append(f"  {label} ({path}): legacy file, "
+                       f"{os.path.getsize(path)} B, {len(comp)}/{len(grid)} "
+                       "grid pair(s) complete")
+    missing = [k for k in grid if k not in done]
+    line = (f"  grid: {len(grid) - len(missing)}/{len(grid)} "
+            "pair(s) done")
+    if missing:
+        head = ", ".join(f"{r}/{m}" for r, m in missing[:6])
+        line += (f" — waiting on {head}"
+                 + (f" (+{len(missing) - 6} more)" if len(missing) > 6
+                    else ""))
+    out.append(line)
+    return "\n".join(out), not missing
+
+
+def _cmd_watch(args) -> int:
+    import time
+
+    from repro.fleet.plan import PlanError, SweepPlan
+
+    try:
+        plan = SweepPlan.load(args.plan)
+        grid = plan.grid()
+    except (OSError, PlanError) as e:
+        raise SystemExit(f"watch: {e}")
+    while True:
+        frame, complete = _watch_frame(plan, grid)
+        print(frame, flush=True)
+        if complete:
+            return 0
+        if args.once:
+            return 1
+        time.sleep(max(0.2, args.interval))
 
 
 def _add_launcher_flags(p, *, for_plan: bool) -> None:
@@ -353,6 +436,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="plan name (default: derived from the target)")
     pp.add_argument("--store", default=None,
                     help=f"campaign store (default: under {CAMPAIGN_DIR}/)")
+    pp.add_argument("--store-format", default=None,
+                    choices=("jsonl", "segments"),
+                    help="store layout: one legacy JSONL file (default) or "
+                         "an append-only segment directory with a "
+                         "checksummed manifest (incremental merges, "
+                         "manifest-driven fleet watch)")
     pp.add_argument("--pallas", default=None, metavar="KERNEL",
                     help="pallas kernel family target "
                          "(matmul|spmxv|attention|probe)")
@@ -438,11 +527,24 @@ def build_parser() -> argparse.ArgumentParser:
     sp.add_argument("--plan", required=True,
                     help="the SweepPlan JSON to summarize")
     sp.set_defaults(fn=_cmd_status)
+
+    wp = sub.add_parser("watch", help="live store progress: manifest-driven "
+                                      "for segmented stores (no record "
+                                      "reads), polled until the grid is "
+                                      "done")
+    wp.add_argument("--plan", required=True,
+                    help="the SweepPlan JSON to watch")
+    wp.add_argument("--interval", type=float, default=2.0,
+                    help="seconds between frames (default 2)")
+    wp.add_argument("--once", action="store_true",
+                    help="print one frame and exit (1 while incomplete)")
+    wp.set_defaults(fn=_cmd_watch)
     return ap
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
-    """CLI entry: dispatch to the plan/run/doctor/status subcommand."""
+    """CLI entry: dispatch to the plan/run/audit/doctor/status/watch
+    subcommand."""
     args = build_parser().parse_args(argv)
     return args.fn(args)
 

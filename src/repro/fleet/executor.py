@@ -168,11 +168,10 @@ def audit_fleet_plan(plan: SweepPlan, store=None, *, gate: str = "gate",
     Returns ``{(region, mode): audit record}`` for the plan's whole grid.
     """
     from repro.analysis import AuditReport, audit_plan
-    from repro.core import CampaignStore
 
     owned = store is None
     if owned:
-        store = CampaignStore(plan.store)
+        store = _plan_store(plan, plan.store)
     try:
         grid = plan.grid()
         skip = frozenset() if force else frozenset(store.audits)
@@ -219,6 +218,17 @@ def audit_fleet_plan(plan: SweepPlan, store=None, *, gate: str = "gate",
 # ---------------------------------------------------------------------------
 # the single-process worker entry (probe --plan lands here)
 # ---------------------------------------------------------------------------
+
+
+def _plan_store(plan: SweepPlan, path: str, *, readonly: bool = False):
+    """Open a store under the plan's declared layout: ``store_format:
+    "segments"`` opts writable opens into the segmented backend (readonly
+    opens auto-detect — they must never create anything)."""
+    from repro.core import CampaignStore
+
+    seg = True if plan.store_format == "segments" else None
+    return CampaignStore(path, readonly=readonly,
+                         segmented=None if readonly else seg)
 
 
 def _stats_path(store: str) -> str:
@@ -272,7 +282,7 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
 
     Returns ``(results_or_reports, CampaignStats)``.
     """
-    from repro.core import Campaign, Controller, worker_store
+    from repro.core import Campaign, Controller, remove_store, worker_store
 
     _check_audit_choice(audit)
 
@@ -285,13 +295,13 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
         store = worker_store(plan.store, index, count)
     else:
         store = plan.store
-    if fresh and os.path.exists(store):
-        os.unlink(store)
+    if fresh:
+        remove_store(store)
     host = _handshake(plan)
     title = header or f"fleet plan {plan.name!r} [{plan.digest()}]"
     plan.grid()     # rejects plans whose targets enumerate duplicate pairs
     ctl = Controller(reps=plan.reps, compile_once=plan.compile_once)
-    camp = Campaign(store, ctl, workers=plan.workers)
+    camp = Campaign(_plan_store(plan, store), ctl, workers=plan.workers)
     try:
         pairs = plan.pairs()
         if index is not None:
@@ -477,9 +487,9 @@ def _incomplete_shards(plan: SweepPlan, grid) -> list[int]:
     The canonical store is consulted first: once a fleet has merged (or the
     same plan ran single-process), a complete canonical store means NO shard
     has anything left to do, even if worker stores were deleted."""
-    from repro.core import CampaignStore
+    from repro.core import CampaignStore, store_exists
 
-    if os.path.exists(plan.store):
+    if store_exists(plan.store):
         st = CampaignStore(plan.store, readonly=True)
         if all(ps.complete for ps in st.grid_status(grid).values()):
             return []
@@ -489,7 +499,7 @@ def _incomplete_shards(plan: SweepPlan, grid) -> list[int]:
         if not mine:
             continue
         ws = plan.worker_stores()[i]
-        if not os.path.exists(ws):
+        if not store_exists(ws):
             out.append(i)
             continue
         # readonly: completeness probing must not heal anything — the worker
@@ -506,7 +516,7 @@ def _classify(plan: SweepPlan):
     from repro.core import Campaign, Controller
 
     ctl = Controller(reps=plan.reps, compile_once=plan.compile_once)
-    camp = Campaign(plan.store, ctl, workers=plan.workers)
+    camp = Campaign(_plan_store(plan, plan.store), ctl, workers=plan.workers)
     try:
         reports = {}
         for spec, regions in plan.resolve():
@@ -519,9 +529,13 @@ def _classify(plan: SweepPlan):
 
 
 def _clean_fleet(plan: SweepPlan) -> None:
-    paths = [plan.store, plan.fleet_path(), plan.report_path()]
-    for ws in plan.worker_stores():
-        paths += [ws, _stats_path(ws)]
+    from repro.core import remove_store
+
+    stores = [plan.store] + plan.worker_stores()
+    for s in stores:
+        remove_store(s)            # removes either layout (file/segment dir)
+    paths = [plan.fleet_path(), plan.report_path()]
+    paths += [_stats_path(ws) for ws in plan.worker_stores()]
     for p in paths:
         if os.path.exists(p):
             os.unlink(p)
@@ -677,13 +691,15 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
               f"{plan.shards} shard slice(s) already complete, "
               "nothing to launch")
 
-    from repro.core import merge_stores
+    from repro.core import merge_stores, store_exists
 
-    sources = [ws for ws in plan.worker_stores() if os.path.exists(ws)]
+    sources = [ws for ws in plan.worker_stores() if store_exists(ws)]
     if sources:
         # the canonical store (when present) streams FIRST so freshly
-        # re-measured worker records supersede any stale merged ones
-        if os.path.exists(plan.store):
+        # re-measured worker records supersede any stale merged ones (an
+        # incremental merge into a segmented canonical store skips the
+        # self-source and adopts only never-seen worker segments)
+        if store_exists(plan.store):
             sources = [plan.store] + sources
         mstats = merge_stores(plan.store, sources)
         state.merge = {"dest": plan.store, "sources": sources,
@@ -692,6 +708,9 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
                        "conflicts": sorted(set(map(tuple, mstats.conflicts)))}
         state.merge["conflicts"] = [list(c) for c in
                                     state.merge["conflicts"]]
+        if mstats.incremental:
+            state.merge["segments_new"] = mstats.segments_new
+            state.merge["segments_skipped"] = mstats.segments_skipped
         print(f"== merge: {mstats}")
 
     reports, cstats = _classify(plan)
@@ -719,23 +738,33 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
 def _pair_lines(store_path: str, mine, canon_status) -> tuple[list[str], int]:
     """Diagnose one shard's slice against its worker store (and the
     canonical store): returns (report lines, #pairs still owing)."""
-    from repro.core import CampaignStore, CampaignStoreError
+    from repro.core import (CampaignStore, CampaignStoreError, is_segmented,
+                            manifest_status, store_exists)
     from repro.core.campaign import read_store_records
 
     lines: list[str] = []
-    if not os.path.exists(store_path):
+    if not store_exists(store_path):
         status = {}
         lines.append(f"  worker store {store_path}: absent")
     else:
         try:
-            records, valid = read_store_records(store_path)
-            size = os.path.getsize(store_path)
-            if valid < size:
-                lines.append(
-                    f"  worker store {store_path}: torn tail — "
-                    f"{size - valid} byte(s) past the last valid record (a "
-                    "SIGKILL mid-append; healed automatically on the next "
-                    "load, costing at most one point)")
+            if is_segmented(store_path):
+                ms = manifest_status(store_path)
+                if ms["orphans"]:
+                    lines.append(
+                        f"  worker store {store_path}: {ms['orphans']} "
+                        f"unsealed segment(s) ({ms['orphan_bytes']} byte(s))"
+                        " — a live or killed writer; healed (sealed, torn "
+                        "tail truncated) on the next writable open")
+            else:
+                records, valid = read_store_records(store_path)
+                size = os.path.getsize(store_path)
+                if valid < size:
+                    lines.append(
+                        f"  worker store {store_path}: torn tail — "
+                        f"{size - valid} byte(s) past the last valid record "
+                        "(a SIGKILL mid-append; healed automatically on the "
+                        "next load, costing at most one point)")
             status = CampaignStore(store_path,
                                    readonly=True).grid_status(mine)
         except CampaignStoreError as e:
@@ -782,7 +811,7 @@ def fleet_doctor(plan: SweepPlan,
     missing ks when the ``done`` marker pins them. Returns
     ``(exit_code, report)``: 0 when the grid is fully covered, 1 otherwise.
     """
-    from repro.core import CampaignStore
+    from repro.core import CampaignStore, store_exists
 
     grid = plan.grid()
     budget = budget if budget is not None else RetryBudget.from_dict(plan.retry)
@@ -798,7 +827,7 @@ def fleet_doctor(plan: SweepPlan,
         out.append(f"fleet ledger {plan.fleet_path()}: STALE — built by "
                    f"plan digest {state.plan_digest}; --fresh required")
     canon_status = None
-    if os.path.exists(plan.store):
+    if store_exists(plan.store):
         canon = CampaignStore(plan.store, readonly=True)
         canon_status = canon.grid_status(grid)
         done = sum(ps.complete for ps in canon_status.values())

@@ -477,29 +477,85 @@ class SSHLauncher(Launcher):
 # ---------------------------------------------------------------------------
 
 
+def _loads(line: str) -> dict:
+    """Tolerant record parse for fault injection: a torn line is just not a
+    match, never a crash (read_store_records owns real corruption policy)."""
+    try:
+        rec = json.loads(line)
+        return rec if isinstance(rec, dict) else {}
+    except ValueError:
+        return {}
+
+
+def _store_segment_files(path: str) -> tuple[dict, list]:
+    """A segmented store's ``(manifest, [(name, entry_or_None, lines)])`` in
+    replay order — manifest segments first, then unfolded orphans by name."""
+    from repro.core.segments import load_manifest, segments_dir
+
+    sdir = segments_dir(path)
+    m = load_manifest(sdir)
+    listed = {e["file"] for e in m["segments"]}
+    folded = set(m["folded"])
+    order = [(e["file"], e) for e in m["segments"]]
+    order += [(n, None) for n in sorted(os.listdir(sdir))
+              if n.endswith(".jsonl") and n not in listed
+              and n[:-len(".jsonl")] not in folded]
+    out = []
+    for name, ent in order:
+        with open(os.path.join(sdir, name)) as f:
+            out.append((name, ent,
+                        [ln for ln in f.read().split("\n") if ln]))
+    return m, out
+
+
+def _torn(lines: Sequence[str]) -> Optional[bytes]:
+    """The torn-tail byte image of ``lines``: last ``done`` marker dropped,
+    then truncated mid-way into the (now) trailing record. None when there
+    is no done marker to tear."""
+    done_idx = max((i for i, ln in enumerate(lines)
+                    if _loads(ln).get("kind") == "done"), default=None)
+    if done_idx is None:
+        return None
+    rest = [ln for i, ln in enumerate(lines) if i != done_idx]
+    return ("\n".join(rest) + "\n").encode()[:-9]
+
+
 def tear_store_tail(path: str) -> None:
     """Reproduce the damage a SIGKILL mid-append leaves in a worker store:
-    drop the final ``done`` marker, then truncate the file mid-way into the
-    (now) trailing record. ``read_store_records`` heals exactly this shape."""
-    lines = [ln for ln in open(path).read().split("\n") if ln]
-    done_idx = max((i for i, ln in enumerate(lines)
-                    if json.loads(ln).get("kind") == "done"), default=None)
-    if done_idx is None:
-        raise FleetError(f"{path}: no done-marked sweep to tear")
-    del lines[done_idx]
-    data = ("\n".join(lines) + "\n").encode()
-    with open(path, "wb") as f:
-        f.write(data[:-9])
+    drop the final ``done`` marker, then truncate mid-way into the (now)
+    trailing record. ``read_store_records`` heals exactly this shape.
+
+    On a segmented store the same crash leaves a different artifact: the
+    writer dies before SEALING, so its done-bearing segment must lose its
+    manifest entry (becoming an unsealed orphan) as well as its tail — the
+    shape the next writable open heals."""
+    from repro.core.segments import is_segmented, save_manifest, segments_dir
+
+    if not is_segmented(path):
+        lines = [ln for ln in open(path).read().split("\n") if ln]
+        data = _torn(lines)
+        if data is None:
+            raise FleetError(f"{path}: no done-marked sweep to tear")
+        with open(path, "wb") as f:
+            f.write(data)
+        return
+    sdir = segments_dir(path)
+    m, files = _store_segment_files(path)
+    for name, ent, lines in reversed(files):
+        data = _torn(lines)
+        if data is None:
+            continue
+        with open(os.path.join(sdir, name), "wb") as f:
+            f.write(data)
+        if ent is not None:     # un-seal: the crash shape is an orphan
+            m["segments"] = [e for e in m["segments"] if e is not ent]
+            save_manifest(sdir, m)
+        return
+    raise FleetError(f"{path}: no done-marked sweep to tear")
 
 
-def drop_done_point(path: str) -> None:
-    """Delete one done-promised ``point`` record while KEEPING its ``done``
-    marker — the store shape a lost append or partial merge leaves behind.
-    ``pair_status`` then names exactly which (pair, k) is missing, and a
-    relaunch re-measures only that point."""
-    lines = [ln for ln in open(path).read().split("\n") if ln]
-    recs = [json.loads(ln) for ln in lines]
-    victim = None
+def _done_point_victim(recs: Sequence[dict]) -> Optional[int]:
+    """Index (in replay order) of one done-promised point record, or None."""
     for i in range(len(recs) - 1, -1, -1):
         if recs[i].get("kind") == "done" and recs[i].get("ks"):
             key = (recs[i]["region"], recs[i]["mode"])
@@ -508,15 +564,49 @@ def drop_done_point(path: str) -> None:
                 r = recs[j]
                 if (r.get("kind") == "point" and int(r.get("k", -1)) in ks
                         and (r.get("region"), r.get("mode")) == key):
-                    victim = j
-                    break
-            if victim is not None:
-                break
+                    return j
+    return None
+
+
+def drop_done_point(path: str) -> None:
+    """Delete one done-promised ``point`` record while KEEPING its ``done``
+    marker — the store shape a lost append or partial merge leaves behind.
+    ``pair_status`` then names exactly which (pair, k) is missing, and a
+    relaunch re-measures only that point. On a segmented store the victim's
+    segment is rewritten and its manifest entry (bytes/records/coverage)
+    updated, so the store still loads cleanly — the damage is semantic, not
+    structural."""
+    from repro.core import segments as seg_mod
+
+    if not seg_mod.is_segmented(path):
+        lines = [ln for ln in open(path).read().split("\n") if ln]
+        victim = _done_point_victim([_loads(ln) for ln in lines])
+        if victim is None:
+            raise FleetError(f"{path}: no done-promised point to drop")
+        del lines[victim]
+        with open(path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        return
+    sdir = seg_mod.segments_dir(path)
+    m, files = _store_segment_files(path)
+    flat = [(fi, li) for fi, (_, _, lines) in enumerate(files)
+            for li in range(len(lines))]
+    victim = _done_point_victim(
+        [_loads(files[fi][2][li]) for fi, li in flat])
     if victim is None:
         raise FleetError(f"{path}: no done-promised point to drop")
-    del lines[victim]
-    with open(path, "w") as f:
-        f.write("\n".join(lines) + "\n")
+    fi, li = flat[victim]
+    name, ent, lines = files[fi]
+    del lines[li]
+    fp = os.path.join(sdir, name)
+    with open(fp, "w") as f:
+        for ln in lines:
+            f.write(ln + "\n")
+    if ent is not None:         # keep the sealed entry honest about the file
+        ent["bytes"] = os.path.getsize(fp)
+        ent["records"] = len(lines)
+        ent["pairs"] = seg_mod._coverage(_loads(ln) for ln in lines)
+        seg_mod.save_manifest(sdir, m)
 
 
 class MockClusterLauncher(Launcher):

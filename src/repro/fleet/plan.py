@@ -155,6 +155,12 @@ class SweepPlan:
     serialized into the digest when set (a different cluster layout or
     retry policy is a different plan identity); when absent, the digest is
     byte-identical to a pre-launcher plan.
+
+    ``store_format`` (optional) selects the campaign-store layout:
+    ``"jsonl"`` (one legacy file, the default) or ``"segments"``
+    (``repro.core.segments`` — append-only segments + manifest, giving
+    incremental merges and ``fleet watch`` live status). Serialized — and
+    hashed into the digest — only when set, like launcher/retry.
     """
     name: str
     store: str
@@ -166,6 +172,7 @@ class SweepPlan:
     backend: str = "auto"
     launcher: Optional[dict] = None
     retry: Optional[dict] = None
+    store_format: Optional[str] = None
 
     # -- validation / identity ----------------------------------------------
     def validate(self) -> None:
@@ -188,6 +195,16 @@ class SweepPlan:
         launchers module sits above plan in the layer order)."""
         from repro.fleet import launchers as ln
 
+        if self.store_format not in (None, "jsonl", "segments"):
+            raise PlanError(f"store_format {self.store_format!r} unknown; "
+                            "one of ['jsonl', 'segments']")
+        if (self.store_format == "segments" and self.launcher is not None
+                and self.launcher.get("kind") == "ssh"):
+            # the ssh launcher pushes/pulls ONE file per worker store; a
+            # segment directory doesn't fit that staging protocol yet
+            raise PlanError("store_format 'segments' is not supported with "
+                            "the ssh launcher (single-file staging); use "
+                            "local/mock, or the default jsonl layout")
         if self.launcher is not None:
             kind = self.launcher.get("kind")
             if kind not in ln.LAUNCHER_KINDS:
@@ -227,6 +244,8 @@ class SweepPlan:
             d["launcher"] = self.launcher
         if self.retry is not None:
             d["retry"] = self.retry
+        if self.store_format is not None:
+            d["store_format"] = self.store_format
         return d
 
     def canonical_json(self) -> str:
@@ -268,7 +287,8 @@ class SweepPlan:
                    workers=int(d.get("workers", 1)),
                    compile_once=bool(d.get("compile_once", True)),
                    backend=d.get("backend", "auto"),
-                   launcher=d.get("launcher"), retry=d.get("retry"))
+                   launcher=d.get("launcher"), retry=d.get("retry"),
+                   store_format=d.get("store_format"))
         plan.validate()
         return plan
 

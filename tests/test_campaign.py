@@ -1,6 +1,7 @@
 """Campaign engine + compile-once sweep path: trace-count guarantees,
 static/runtime-k equivalence, store resume semantics, multi-store
 fan-out/merge, store-backed DECAN."""
+import glob
 import json
 import os
 
@@ -432,11 +433,110 @@ def test_merge_stores_cleans_tmp_on_corrupt_source(tmp_path):
     before = open(dest).read()
     with pytest.raises(CampaignStoreError):
         merge_stores(dest, [good, bad])
-    assert not os.path.exists(dest + ".merge-tmp")
+    assert not glob.glob(dest + ".merge-tmp*")
     assert open(dest).read() == before          # dest untouched by the abort
     # and a successful merge leaves no tmp either
     merge_stores(dest, [good])
-    assert not os.path.exists(dest + ".merge-tmp")
+    assert not glob.glob(dest + ".merge-tmp*")
+
+
+def test_concurrent_merges_use_distinct_tmp_names(tmp_path):
+    """Regression: two merges into the SAME dest used to share the literal
+    ``dest + '.merge-tmp'`` scratch name, so concurrent merges could rename
+    each other's half-written tmp into place. The tmp name is now unique
+    per call, and every call still cleans its own tmp up."""
+    import threading
+
+    from repro.core.campaign import _MERGE_TMP_COUNT
+
+    srcs = []
+    for i in range(4):
+        p = str(tmp_path / f"s{i}.jsonl")
+        st = CampaignStore(p)
+        for k in range(32):
+            st.append({"kind": "point", "region": f"r{i}", "mode": "m",
+                       "k": k, "t": 0.1 * (k + 1)})
+        st.close()
+        srcs.append(p)
+    dest = str(tmp_path / "dest.jsonl")
+    c0 = next(_MERGE_TMP_COUNT)
+    errs = []
+
+    def one():
+        try:
+            merge_stores(dest, srcs)
+        except Exception as e:          # pragma: no cover - the regression
+            errs.append(e)
+
+    threads = [threading.Thread(target=one) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert next(_MERGE_TMP_COUNT) >= c0 + 5     # each call drew a fresh name
+    assert not glob.glob(dest + ".merge-tmp*")  # nobody leaked a tmp
+    st = CampaignStore(dest, readonly=True)
+    st.close()
+    assert len(st.points) == 4 and all(len(v) == 32
+                                       for v in st.points.values())
+
+
+def _meta(reps, **kw):
+    return {"kind": "meta", "region": "r", "mode": "m", "reps": reps,
+            "compile_once": True, **kw}
+
+
+_AUDIT = {"kind": "audit", "region": "r", "mode": "m", "verdict": "dead",
+          "survival": 0.0, "corruption": None, "predicted": "fp",
+          "target": "fp", "agrees": None, "resources": {}, "k_lo": 1,
+          "k_hi": 8, "detail": "stale"}
+
+
+def test_meta_conflict_drops_stale_audit_in_store_replay(tmp_path):
+    """Regression: a settings change discarded the pair's points/sens/done
+    but KEPT its audit record, so stale static-audit evidence (measured
+    under the old settings) annotated the re-measured pair. preds carry
+    their settings inline and must survive."""
+    path = str(tmp_path / "s.jsonl")
+    st = CampaignStore(path)
+    st.append(_meta(2))
+    st.append({"kind": "point", "region": "r", "mode": "m", "k": 0, "t": 1.0})
+    st.append(dict(_AUDIT))
+    st.append({"kind": "pred", "region": "r", "mode": "m", "ks": [0],
+               "ts": [1.0], "fit": {}, "hw": {}, "terms": {}, "alpha": 1.0,
+               "tol": 0.05, "k_max": 8})
+    st.append(_meta(3))                         # settings conflict
+    st.close()
+    assert ("r", "m") not in st.points
+    assert ("r", "m") not in st.audits          # the stale audit is gone
+    assert ("r", "m") in st.preds               # preds supersede on their own
+    # and the same discard happens on a cold replay of the file
+    st2 = CampaignStore(path, readonly=True)
+    st2.close()
+    assert ("r", "m") not in st2.audits and ("r", "m") in st2.preds
+
+
+def test_merge_meta_conflict_drops_stale_audit(tmp_path):
+    """The merge view applies the same rule across stores: the earlier
+    source's audit must not survive a meta conflict with a later source."""
+    a, b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    st = CampaignStore(a)
+    st.append(_meta(2))
+    st.append(dict(_AUDIT))
+    st.close()
+    st = CampaignStore(b)
+    st.append(_meta(3))
+    st.append({"kind": "point", "region": "r", "mode": "m", "k": 0, "t": 2.0})
+    st.close()
+    out = str(tmp_path / "m.jsonl")
+    stats = merge_stores(out, [a, b])
+    assert ("r", "m") in stats.conflicts
+    merged = CampaignStore(out, readonly=True)
+    merged.close()
+    assert ("r", "m") not in merged.audits
+    assert merged.stored_ts("r", "m") == {0: 2.0}
+    assert "audit" not in open(out).read()      # dropped from the bytes too
 
 
 def test_inspect_reports_grid_completeness(tmp_path, capsys):

@@ -294,8 +294,24 @@ def test_ssh_requires_relative_store(tmp_path, monkeypatch):
 
 
 def test_host_store_namespacing():
-    assert host_store("a/b.jsonl", "alice@n0") == "a/b.halice-n0.jsonl"
-    assert host_store("a/b", "n0") == "a/b.hn0.jsonl"
+    name = host_store("a/b.jsonl", "alice@n0")
+    assert name.startswith("a/b.halice-n0-") and name.endswith(".jsonl")
+    assert host_store("a/b", "n0").startswith("a/b.hn0-")
+    assert host_store("a/b", "n0").endswith(".jsonl")
+    # stable: the same host always stages under the same name
+    assert host_store("a/b.jsonl", "alice@n0") == name
+
+
+def test_host_store_distinct_hosts_never_collide():
+    """Regression: sanitization used to map distinct raw host names (every
+    non-alnum char -> '-') onto ONE staging file, so two hosts' pulled
+    stores could clobber each other. A short hash of the raw name now keeps
+    them apart."""
+    a = host_store("a/b.jsonl", "node:1")
+    b = host_store("a/b.jsonl", "node-1")
+    assert a != b
+    assert host_store("s.jsonl", "user@h.x") != host_store("s.jsonl",
+                                                           "user-h-x")
 
 
 # ---------------------------------------------------------------------------

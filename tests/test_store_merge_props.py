@@ -7,7 +7,11 @@ Pinned properties:
   * later records supersede earlier ones for the same key (within a store
     by line order, across stores by source order);
   * when metas agree, merge(a, b)'s replay view equals the union of the
-    two stores' replay views (b winning point collisions).
+    two stores' replay views (b winning point collisions);
+  * LAYOUT EQUIVALENCE — the same record stream written as a legacy single
+    file and as a segmented store (arbitrary session splits, optional torn
+    tail, meta conflicts included) flattens to byte-identical canonical
+    output through ``merge_stores(..., incremental=False)``.
 """
 try:
     import hypothesis
@@ -101,6 +105,53 @@ def test_later_records_supersede_within_a_store(recs):
                 want_sens[key] = rec["value"]
         assert store.points == want_points
         assert store.sens == want_sens
+
+
+meta = st.fixed_dictionaries({
+    "kind": st.just("meta"),
+    "region": st.sampled_from(REGIONS),
+    "mode": st.sampled_from(MODES),
+    "reps": st.sampled_from([2, 3]),      # two settings -> real conflicts
+    "compile_once": st.just(True),
+})
+mixed_records = st.lists(st.one_of(point, sens, meta), max_size=24)
+
+
+@hypothesis.given(mixed_records, st.lists(st.integers(0, 24), max_size=3),
+                  st.booleans())
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_segmented_flatten_matches_legacy_store(recs, cuts, torn):
+    """The segmented layout is INVISIBLE to merge semantics: the same
+    record stream, split across writer sessions at arbitrary cut points
+    (one sealed segment each) and optionally finished with the same torn
+    partial tail, flattens to the byte-identical canonical store."""
+    from repro.core import segments_dir
+
+    with tempfile.TemporaryDirectory() as d:
+        legacy = os.path.join(d, "legacy.jsonl")
+        _write(legacy, recs)
+        seg = os.path.join(d, "seg.jsonl")
+        prev = 0
+        for cut in sorted({min(c, len(recs)) for c in cuts} | {len(recs)}):
+            store = CampaignStore(seg, segmented=True)
+            for rec in recs[prev:cut]:
+                store.append(rec)
+            store.close()
+            prev = cut
+        if torn:
+            partial = b'{"kind": "point", "region": "rA", "mo'
+            with open(legacy, "ab") as f:
+                f.write(partial)
+            # the same torn bytes as an unsealed orphan segment (a sealed
+            # segment is immutable; only orphans can carry a torn tail)
+            with open(os.path.join(segments_dir(seg),
+                                   "999999-torn.jsonl"), "wb") as f:
+                f.write(partial)
+        flat_l = os.path.join(d, "flat_legacy.jsonl")
+        flat_s = os.path.join(d, "flat_seg.jsonl")
+        merge_stores(flat_l, [legacy], incremental=False)
+        merge_stores(flat_s, [seg], incremental=False)
+        assert open(flat_l).read() == open(flat_s).read()
 
 
 @hypothesis.given(records, records)
