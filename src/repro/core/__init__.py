@@ -11,10 +11,13 @@ Two injection sites (DESIGN.md §2):
 from repro.core.absorption import (  # noqa: F401
     AbsorptionCurve,
     AbsorptionFit,
+    MeasureTimeout,
+    Sample,
     absorption,
     cluster_times,
     fit_three_phase,
     measure,
+    measure_sample,
     sweep,
 )
 from repro.core.analytic import (  # noqa: F401
@@ -32,7 +35,10 @@ from repro.core.segments import (SegmentStore, io_tally, is_segmented,  # noqa: 
                                  manifest_status, remove_store, segments_dir,
                                  store_exists)
 from repro.core.classifier import (BottleneckReport, apply_audit_evidence,  # noqa: F401
-                                   classify, cross_check_with_decan)
+                                   apply_quality_evidence, classify,
+                                   cross_check_with_decan)
+from repro.core.quality import (QualityPolicy, RemeasureBudget,  # noqa: F401
+                                measure_quality, quality_from_dict)
 from repro.core.controller import Controller, RegionReport, RegionTarget, loop_region  # noqa: F401
 from repro.core.decan import DecanResult, DecanTarget, run_decan  # noqa: F401
 from repro.core.injector import (inject, inject_rt, init_state, probe_step,  # noqa: F401

@@ -10,7 +10,9 @@ renormalizes by the size of the original loop body.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
+import threading
 import time
 import warnings
 from typing import Any, Callable, Optional, Sequence
@@ -30,10 +32,45 @@ import numpy as np
 # Never set it for real measurements.
 SYNTH_MEASURE_VAR = "REPRO_SYNTH_MEASURE"
 
+# Deterministic perturbations of the synthetic clock, for driving the
+# measurement-integrity guard in tests and CI (all inert unless
+# REPRO_SYNTH_MEASURE is also set):
+#   REPRO_SYNTH_JITTER=amp    rep r>0 of every sample reads
+#                             t*(1 + amp*u(k, r)) with u a hash-derived
+#                             uniform in [0, 1); rep 0 is always exactly t,
+#                             so MIN-OF-REPS VALUES ARE UNCHANGED — only the
+#                             spread inflates (jittered and clean runs yield
+#                             byte-identical curves and reports).
+#   REPRO_SYNTH_DRIFT=f@n     every sample after the n-th synthetic
+#                             measurement in this process is multiplied by f
+#                             (mid-sweep interference for sentinel tests).
+#   REPRO_SYNTH_HANG=k1,k2    a measurement at one of these noise quantities
+#                             blocks until release_synth_hang() (a hung
+#                             kernel for watchdog tests).
+SYNTH_JITTER_VAR = "REPRO_SYNTH_JITTER"
+SYNTH_DRIFT_VAR = "REPRO_SYNTH_DRIFT"
+SYNTH_HANG_VAR = "REPRO_SYNTH_HANG"
 
-def _synth_time(args: tuple, base: float) -> float:
-    """t(k) with a knee at k=6 — flat absorption then a linear ramp, enough
-    structure for the fit/classifier to produce stable, non-trivial output."""
+_SYNTH_CALLS = 0                      # samples taken (REPRO_SYNTH_DRIFT)
+_SYNTH_HANG_RELEASE = threading.Event()
+
+
+def reset_synth_state() -> None:
+    """Reset the synthetic clock's process state (call counter, hang latch).
+    Tests that use REPRO_SYNTH_DRIFT / REPRO_SYNTH_HANG call this so one
+    test's synthetic history can't leak into the next."""
+    global _SYNTH_CALLS
+    _SYNTH_CALLS = 0
+    _SYNTH_HANG_RELEASE.clear()
+
+
+def release_synth_hang() -> None:
+    """Unblock any measurement parked by REPRO_SYNTH_HANG (lets a test's
+    timed-out daemon thread finish instead of sleeping forever)."""
+    _SYNTH_HANG_RELEASE.set()
+
+
+def _synth_k(args: tuple) -> int:
     k = 0
     if args:
         try:
@@ -42,48 +79,182 @@ def _synth_time(args: tuple, base: float) -> float:
                 k = int(a0)
         except (TypeError, ValueError):
             pass
-    return base * (1.0 + 0.05 * max(0, k - 6))
+    return k
+
+
+def _synth_time(args: tuple, base: float) -> float:
+    """t(k) with a knee at k=6 — flat absorption then a linear ramp, enough
+    structure for the fit/classifier to produce stable, non-trivial output."""
+    return base * (1.0 + 0.05 * max(0, _synth_k(args) - 6))
+
+
+def _synth_u(k: int, r: int) -> float:
+    """Deterministic uniform in [0, 1) for rep ``r`` of noise quantity ``k``
+    — hash-derived so every process, platform and run agrees."""
+    h = hashlib.sha256(f"{k}:{r}".encode()).digest()
+    return int.from_bytes(h[:8], "big") / 2.0 ** 64
+
+
+def _synth_sample(args: tuple, base: float, *, reps: int) -> "Sample":
+    """One synthetic Sample: rep 0 is the exact model time (min-of-reps and
+    therefore curves/reports are jitter-invariant); later reps may be
+    inflated by REPRO_SYNTH_JITTER; REPRO_SYNTH_DRIFT scales whole samples
+    after its call threshold; REPRO_SYNTH_HANG parks matching ks."""
+    global _SYNTH_CALLS
+    k = _synth_k(args)
+    hang = os.environ.get(SYNTH_HANG_VAR)
+    if hang and k in {int(p) for p in hang.split(",") if p.strip()}:
+        while not _SYNTH_HANG_RELEASE.wait(0.01):
+            pass
+    t = _synth_time(args, base)
+    _SYNTH_CALLS += 1
+    drift_env = os.environ.get(SYNTH_DRIFT_VAR)
+    if drift_env:
+        factor_s, _, at_s = drift_env.partition("@")
+        if _SYNTH_CALLS > int(at_s or 0):
+            t *= float(factor_s)
+    amp = float(os.environ.get(SYNTH_JITTER_VAR) or 0.0)
+    vals = [t]
+    for r in range(1, max(1, reps)):
+        vals.append(t * (1.0 + amp * _synth_u(k, r)) if amp > 0.0 else t)
+    return Sample(reps=tuple(vals))
 
 # Coarse timers (or a fully cached call) can report 0.0 s; every ratio in this
 # module divides by a baseline, so baselines are floored to one timer tick.
 MIN_MEASURABLE_S = 1e-9
 
+# floor_time fires at most once per distinct ``what`` — on a fast kernel every
+# point of a series trips the floor and the repeated warning floods fleet logs.
+_FLOOR_WARNED: set[str] = set()
+
+
+def reset_floor_warnings() -> None:
+    """Forget which series already warned about the timer floor (per-test
+    isolation; also bounds the dedup set in long-lived processes)."""
+    _FLOOR_WARNED.clear()
+
 
 def floor_time(t: float, what: str = "baseline") -> float:
     """Clamp a measured time to the minimum measurable tick, with a warning —
-    a 0.0 baseline otherwise poisons every downstream ratio (t/t0, drift)."""
+    a 0.0 baseline otherwise poisons every downstream ratio (t/t0, drift).
+    The warning is deduplicated per ``what`` (once per series, not per call)."""
     if t < MIN_MEASURABLE_S:
-        warnings.warn(
-            f"{what} measured {t:.3g}s, below the {MIN_MEASURABLE_S:.0e}s "
-            "timer resolution; clamping (absorption ratios for this series "
-            "are unreliable)", RuntimeWarning, stacklevel=2)
+        if what not in _FLOOR_WARNED:
+            _FLOOR_WARNED.add(what)
+            warnings.warn(
+                f"{what} measured {t:.3g}s, below the {MIN_MEASURABLE_S:.0e}s "
+                "timer resolution; clamping (absorption ratios for this "
+                "series are unreliable)", RuntimeWarning, stacklevel=2)
         return MIN_MEASURABLE_S
     return t
 
 
-def measure(fn: Callable, args: tuple = (), *, reps: int = 5, warmup: int = 2,
-            inner: int = 1) -> float:
-    """Best-of-``reps`` wall time of ``fn(*args)`` in seconds (compile excluded).
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """All rep timings of one measured point, not just the min.
 
-    ``inner`` repeats the call inside the timed region for very short kernels.
-    Min-of-reps is the standard noise-robust estimator for dedicated machines.
-    """
+    ``measure`` still reports ``t`` (min-of-reps, the paper's estimator);
+    the dispersion properties are what the quality policy gates on."""
+    reps: tuple[float, ...]
+
+    def __post_init__(self) -> None:
+        if not self.reps:
+            raise ValueError("Sample needs at least one rep")
+
+    @property
+    def t(self) -> float:
+        """Min-of-reps — the noise-robust point estimate."""
+        return min(self.reps)
+
+    @property
+    def spread(self) -> float:
+        """Relative spread (max-min)/min — 0 for a perfectly quiet clock."""
+        t = self.t
+        return (max(self.reps) - t) / max(t, MIN_MEASURABLE_S)
+
+    @property
+    def mad(self) -> float:
+        """Relative median absolute deviation — a spread estimate robust to
+        a single outlier rep."""
+        a = np.asarray(self.reps, np.float64)
+        med = float(np.median(a))
+        return float(np.median(np.abs(a - med))) / max(med, MIN_MEASURABLE_S)
+
+    def merged(self, other: "Sample") -> "Sample":
+        """The pooled sample after a re-measure round."""
+        return Sample(reps=self.reps + other.reps)
+
+
+class MeasureTimeout(RuntimeError):
+    """A measurement exceeded its watchdog deadline (hung kernel)."""
+
+
+def _measure_sample_inner(fn: Callable, args: tuple, *, reps: int,
+                          warmup: int, inner: int) -> Sample:
     synth = os.environ.get(SYNTH_MEASURE_VAR)
     if synth:
-        return _synth_time(args, float(synth))
+        return _synth_sample(args, float(synth), reps=reps)
     for _ in range(warmup):
         out = fn(*args)
     jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
                  else x, out)
-    best = float("inf")
-    for _ in range(reps):
+    vals = []
+    for _ in range(max(1, reps)):
         t0 = time.perf_counter()
         for _ in range(inner):
             out = fn(*args)
         jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
                      else x, out)
-        best = min(best, (time.perf_counter() - t0) / inner)
-    return best
+        vals.append((time.perf_counter() - t0) / inner)
+    return Sample(reps=tuple(vals))
+
+
+def measure_sample(fn: Callable, args: tuple = (), *, reps: int = 5,
+                   warmup: int = 2, inner: int = 1,
+                   deadline: Optional[float] = None) -> Sample:
+    """Time ``fn(*args)`` and keep every rep (compile excluded).
+
+    With ``deadline`` (seconds), the measurement runs on a watchdog: if it
+    has not finished by then, :class:`MeasureTimeout` is raised and the hung
+    call is abandoned on a daemon thread — a stuck kernel becomes a recorded
+    quarantine instead of a stuck process.
+    """
+    if deadline is None:
+        return _measure_sample_inner(fn, args, reps=reps, warmup=warmup,
+                                     inner=inner)
+    box: dict[str, Any] = {}
+
+    def _run() -> None:
+        try:
+            box["sample"] = _measure_sample_inner(fn, args, reps=reps,
+                                                  warmup=warmup, inner=inner)
+        except BaseException as e:          # re-raised on the caller's thread
+            box["error"] = e
+
+    th = threading.Thread(target=_run, daemon=True,
+                          name="repro-measure-watchdog")
+    th.start()
+    th.join(deadline)
+    if th.is_alive():
+        raise MeasureTimeout(
+            f"measurement still running after the {deadline:.3g}s watchdog "
+            "deadline (hung kernel?); abandoning it")
+    if "error" in box:
+        raise box["error"]
+    return box["sample"]
+
+
+def measure(fn: Callable, args: tuple = (), *, reps: int = 5, warmup: int = 2,
+            inner: int = 1, deadline: Optional[float] = None) -> float:
+    """Best-of-``reps`` wall time of ``fn(*args)`` in seconds (compile excluded).
+
+    ``inner`` repeats the call inside the timed region for very short kernels.
+    Min-of-reps is the standard noise-robust estimator for dedicated machines.
+    (``measure_sample`` is the dispersion-preserving form this wraps;
+    ``deadline`` raises :class:`MeasureTimeout` the same way.)
+    """
+    return measure_sample(fn, args, reps=reps, warmup=warmup, inner=inner,
+                          deadline=deadline).t
 
 
 # ---------------------------------------------------------------------------
@@ -100,8 +271,17 @@ STOP_CONSECUTIVE = 2
 def drift_corrected(ts: Sequence[float], drift: float) -> list[float]:
     """Two-point linear drift correction: the k=0 kernel re-timed after the
     sweep came out at ``drift``×t0, so divide a linear ramp out of the series.
-    Implausible (>2×) or negligible (<2%) drift returns ``ts`` unchanged."""
+    Implausible (>2× either way) or negligible (<2%) drift returns ``ts``
+    unchanged — but an implausible factor is itself evidence of heavy
+    interference, so it warns instead of being swallowed silently (the raw
+    factor also lands in the campaign ``done`` record for ``fleet doctor``)."""
     if len(ts) < 3 or not (0.5 < drift < 2.0 and abs(drift - 1.0) > 0.02):
+        if len(ts) >= 3 and not (0.5 < drift < 2.0):
+            warnings.warn(
+                f"baseline drift factor {drift:.3g} is implausible (outside "
+                "0.5–2.0) — not correcting; the machine was likely under "
+                "heavy interference during this sweep", RuntimeWarning,
+                stacklevel=2)
         return list(ts)
     n = len(ts) - 1
     return [t / (1.0 + (drift - 1.0) * i / n) for i, t in enumerate(ts)]

@@ -43,18 +43,30 @@ Store schema (one JSON object per line):
    |"dead", "survival": f, "corruption": c|null, "predicted": d, "target":
    t, "agrees": b|null, "resources": {...}, "k_lo": n, "k_hi": n,
    "detail": s}                                 # static noise audit
+  {"kind": "quality", "region": r, "mode": m, "k": k, "verdict": "valid"
+   |"quarantine", "reason": null|"timer_floor"|"spread"|"drift_span"
+   |"timeout", "spread": f|null, "reps": n, "detail": s|null}
+                                                # runtime measurement quality
+
+Points measured under a quality policy also carry their sample's relative
+"spread", and their "done" marker an optional "sentinels" list (the
+interleaved k=0 re-timings); both keys are absent when no policy ran, so
+pre-guard stores stay byte-identical.
 
 Supersede rules (they define both in-file appends and ``merge_stores``):
   * later records supersede earlier ones for the same key — (region, mode)
-    for meta/sens/done/pred/audit, (region, mode, k) for points, (region,)
-    for region records, (region, variant) for decan records — so a settings
-    change appends fresh data without rewriting the file;
+    for meta/sens/done/pred/audit, (region, mode, k) for points and quality
+    records, (region,) for region records, (region, variant) for decan
+    records — so a settings change appends fresh data without rewriting the
+    file (and a re-measured point's fresh "valid" quality record clears its
+    old quarantine);
   * a "meta" record whose measurement settings differ from the pair's
-    current meta DISCARDS the pair's accumulated sens/point/done/audit
-    records: timings from different settings (reps, sweep path) must never
-    be spliced into one curve, and stale static-audit evidence must never
-    annotate a re-measured pair. "pred" and "decan" records carry their own
-    settings inline and supersede independently of measured meta;
+    current meta DISCARDS the pair's accumulated sens/point/done/audit/
+    quality records: timings from different settings (reps, sweep path)
+    must never be spliced into one curve, and stale static-audit or
+    measurement-quality evidence must never annotate a re-measured pair.
+    "pred" and "decan" records carry their own settings inline and
+    supersede independently of measured meta;
   * ``merge_stores`` streams source stores in argument order (so a later
     source's records supersede an earlier source's, and a meta CONFLICT
     between stores resolves to the later source, dropping the earlier
@@ -96,14 +108,18 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Mapping, Optional, Sequence
 
 from repro.core.absorption import (DEFAULT_KS, STOP_CONSECUTIVE,
-                                   AbsorptionFit, absorption, assemble_curve,
-                                   floor_time, measure)
+                                   AbsorptionFit, MeasureTimeout, absorption,
+                                   assemble_curve, floor_time, measure,
+                                   measure_sample)
 from repro.core.analytic import StepTerms, predict_absorption, predict_curve
 from repro.core.classifier import BottleneckReport, classify
 from repro.core.controller import (Controller, ModeResult, RegionReport,
                                    RegionTarget, derive_body_size)
 from repro.core import decan as decan_mod
 from repro.core import segments as seg_mod
+from repro.core.quality import (REASON_DRIFT_SPAN, REASON_TIMEOUT,
+                                QualityPolicy, RemeasureBudget,
+                                VERDICT_QUARANTINE, measure_quality)
 from repro.core.payload import InjectionReport
 # the tolerant line-streaming reader and the corrupt-store error live in
 # repro.core.segments (shared with the segmented layout); re-exported here
@@ -154,6 +170,7 @@ class PairStatus:
     expected: Optional[int]           # len(done ks); None until done-marked
     done: bool                        # a "done" marker exists
     missing: tuple[int, ...] = ()     # done-promised ks with no point record
+    quarantined: tuple[int, ...] = ()  # ks whose quality record condemns them
 
     @property
     def complete(self) -> bool:
@@ -184,6 +201,7 @@ class CampaignStore:
         self.preds: dict[tuple[str, str], dict] = {}
         self.decan: dict[tuple[str, str], dict] = {}
         self.audits: dict[tuple[str, str], dict] = {}
+        self.quality: dict[tuple[str, str], dict[int, dict]] = {}
         self.body_sizes: dict[str, int] = {}
         self._lock = threading.Lock()
         self._f = None
@@ -266,6 +284,8 @@ class CampaignStore:
             self.decan[(rec.get("region"), rec.get("variant"))] = rec
         elif kind == "audit":
             self.audits[key] = rec
+        elif kind == "quality":
+            self.quality.setdefault(key, {})[int(rec["k"])] = rec
 
     def append(self, rec: dict) -> None:
         """Ingest one record and flush it to disk (locked; readonly stores
@@ -301,16 +321,26 @@ class CampaignStore:
         """True when the pair's sweep wrote its ``done`` marker."""
         return (region, mode) in self.done
 
+    def quarantined_ks(self, region: str, mode: str) -> tuple[int, ...]:
+        """The pair's ks condemned by a quarantine quality record (a later
+        valid record for the same k clears it — supersede last-wins)."""
+        q = self.quality.get((region, mode), {})
+        return tuple(sorted(k for k, rec in q.items()
+                            if rec.get("verdict") == "quarantine"))
+
     def pair_status(self, region: str, mode: str) -> PairStatus:
         """Completeness of one (region, mode) pair (see ``PairStatus``)."""
         key = (region, mode)
         pts = self.points.get(key, {})
+        quar = self.quarantined_ks(region, mode)
         rec = self.done.get(key)
         if rec is None:
-            return PairStatus(points=len(pts), expected=None, done=False)
+            return PairStatus(points=len(pts), expected=None, done=False,
+                              quarantined=quar)
         ks = [int(k) for k in rec["ks"]]
         return PairStatus(points=len(pts), expected=len(ks), done=True,
-                          missing=tuple(k for k in ks if k not in pts))
+                          missing=tuple(k for k in ks if k not in pts),
+                          quarantined=quar)
 
     def grid_status(self, pairs: Sequence[tuple[str, str]]
                     ) -> dict[tuple[str, str], PairStatus]:
@@ -320,10 +350,12 @@ class CampaignStore:
         return {(r, m): self.pair_status(r, m) for r, m in pairs}
 
     def _drop_measured(self, key: tuple[str, str]) -> None:
-        # audits are settings-scoped evidence measured alongside the pair:
-        # stale ones must not feed apply_audit_evidence after a re-measure.
-        # preds carry their own settings inline and supersede independently.
-        for d in (self.points, self.sens, self.done, self.audits):
+        # audits and quality records are settings-scoped evidence measured
+        # alongside the pair: stale ones must not feed apply_audit_evidence /
+        # apply_quality_evidence after a re-measure. preds carry their own
+        # settings inline and supersede independently.
+        for d in (self.points, self.sens, self.done, self.audits,
+                  self.quality):
             d.pop(key, None)
 
     def discard(self, region: str, mode: str) -> None:
@@ -339,7 +371,7 @@ class CampaignStore:
 # ---------------------------------------------------------------------------
 
 _KIND_ORDER = {"meta": 0, "sens": 1, "point": 2, "done": 3, "region": 4,
-               "decan": 5, "pred": 6, "audit": 7}
+               "decan": 5, "pred": 6, "audit": 7, "quality": 8}
 
 
 def _canon_line(rec: dict) -> str:
@@ -399,6 +431,7 @@ class _MergeView:
         self.regions: dict[str, dict] = {}
         self.decan: dict[tuple, dict] = {}
         self.audits: dict[tuple, dict] = {}
+        self.quality: dict[tuple, dict[int, dict]] = {}
         self.other: dict[str, dict] = {}
         self.stats = stats
 
@@ -420,9 +453,10 @@ class _MergeView:
                     "later store's sweep", key[0], key[1],
                     _meta_settings(old), _meta_settings(rec))
                 self.stats.conflicts.append(key)
-                # mirror CampaignStore._drop_measured: stale audit evidence
-                # from the superseded settings must not survive the merge
-                for d in (self.points, self.sens, self.done, self.audits):
+                # mirror CampaignStore._drop_measured: stale audit/quality
+                # evidence from the superseded settings must not survive
+                for d in (self.points, self.sens, self.done, self.audits,
+                          self.quality):
                     d.pop(key, None)
             self.meta[key] = rec
         elif kind == "region":
@@ -433,6 +467,8 @@ class _MergeView:
             self.decan[(rec.get("region"), rec.get("variant"))] = rec
         elif kind == "audit":
             self.audits[key] = rec
+        elif kind == "quality":
+            self.quality.setdefault(key, {})[int(rec["k"])] = rec
         else:
             self.other[_canon_line(rec)] = rec   # unknown: keep, dedup exact
 
@@ -447,6 +483,8 @@ class _MergeView:
         out.extend(self.decan.values())
         out.extend(self.preds.values())
         out.extend(self.audits.values())
+        for per_k in self.quality.values():
+            out.extend(per_k.values())
         out.extend(self.other.values())
         return sorted(out, key=_canon_sort_key)
 
@@ -614,11 +652,25 @@ class Campaign:
 
     def __init__(self, store: CampaignStore | str,
                  controller: Optional[Controller] = None, *,
-                 workers: int = 1):
+                 workers: int = 1,
+                 quality: Optional[QualityPolicy] = None,
+                 remeasure: Optional[RemeasureBudget] = None,
+                 heal_quarantined: bool = True):
         self.store = store if isinstance(store, CampaignStore) \
             else CampaignStore(store)
         self.ctl = controller if controller is not None else Controller()
         self.workers = max(1, int(workers))
+        # the runtime measurement-integrity guard: with a QualityPolicy,
+        # every fresh point is dispersion-gated (re-measured under the
+        # RemeasureBudget, quarantined when it won't settle), baseline
+        # sentinels interleave when the policy asks, and the watchdog
+        # deadline turns a hung kernel into a recorded timeout quarantine.
+        # heal_quarantined makes resume re-measure previously-quarantined
+        # points (pass False for a replay that must not measure).
+        self.quality = quality
+        self.remeasure = remeasure if remeasure is not None \
+            else (RemeasureBudget() if quality is not None else None)
+        self.heal_quarantined = bool(heal_quarantined)
         self.stats = CampaignStats()
         self._measure_lock = threading.Lock()
         self._stats_lock = threading.Lock()
@@ -651,18 +703,64 @@ class Campaign:
         key = (target.name, mode)
         if key in self.store.sens:
             return self.store.sens[key]
+        # before t(0) is known only the watchdog floor applies — enough to
+        # keep a kernel that hangs on its very first call from parking the
+        # shard forever (the timeout is recorded by sweep_mode's caller)
+        dl = self._deadline(None)
         with self._measure_lock:
-            s = self.ctl.probe_sensitivity(target, mode)
+            s = self.ctl.probe_sensitivity(target, mode, deadline=dl)
         self._note(measured=2)   # t0 + t(probe_k)
         self.store.append({"kind": "sens", "region": target.name,
                            "mode": mode, "value": s})
         return s
+
+    def _deadline(self, t0: Optional[float]) -> Optional[float]:
+        """The quality policy's per-point watchdog deadline (None when no
+        policy is set or its watchdog is off)."""
+        if self.quality is None:
+            return None
+        return self.quality.deadline(t0, stop_ratio=self.ctl.stop_ratio,
+                                     reps=self.ctl.reps, warmup=2)
 
     def _point_fn(self, target: RegionTarget, mode: str, fn_rt, k: int):
         if fn_rt is not None:
             import jax.numpy as jnp
             return fn_rt, (jnp.int32(k), *target.args_for_rt(mode))
         return target.build(mode, k), target.args_for(mode, k)
+
+    def _quality_rec(self, region: str, mode: str, k: int, verdict: str,
+                     reason: Optional[str], *, spread: Optional[float] = None,
+                     reps: Optional[int] = None,
+                     detail: Optional[str] = None) -> None:
+        self.store.append({"kind": "quality", "region": region, "mode": mode,
+                           "k": int(k), "verdict": verdict, "reason": reason,
+                           "spread": spread, "reps": reps, "detail": detail})
+
+    def _sentinel(self, target: RegionTarget, mode: str, fn_rt, k0: int,
+                  t0: float, span: list[int], sentinels: list[dict]) -> None:
+        """Interleaved baseline sentinel: re-time k=k0 mid-sweep (the
+        generalization of the end-of-sweep two-point drift check). A reading
+        outside ``sentinel_tol`` means something changed under the sweep —
+        quarantine ONLY the span of fresh points since the last sentinel."""
+        fn, a = self._point_fn(target, mode, fn_rt, k0)
+        with self._measure_lock:
+            t = measure(fn, a, reps=max(self.ctl.reps - 2, 2),
+                        deadline=self._deadline(t0))
+        self._note(measured=1)
+        ratio = t / floor_time(t0, f"campaign({target.name}/{mode}) t(k=0)")
+        ok = abs(ratio - 1.0) <= self.quality.sentinel_tol
+        sentinels.append({"after_k": int(span[-1]) if span else int(k0),
+                          "ratio": ratio, "ok": ok})
+        if not ok and span:
+            log.warning(
+                "campaign %s/%s: baseline sentinel read %.3gx t(0) "
+                "mid-sweep; quarantining the affected span ks=%s",
+                target.name, mode, ratio, span)
+            for qk in span:
+                self._quality_rec(target.name, mode, qk, VERDICT_QUARANTINE,
+                                  REASON_DRIFT_SPAN,
+                                  detail=f"sentinel ratio {ratio:.4g}")
+        span.clear()
 
     def sweep_mode(self, target: RegionTarget, mode: str) -> ModeResult:
         """Measure (or replay) the k-sweep for one (region, mode) pair."""
@@ -671,8 +769,20 @@ class Campaign:
         if self.store.is_done(*key):
             return self._replay(target, mode)
 
-        ks = self.ctl._ks_for(self._sensitivity(target, mode))
-        stored = self.store.stored_ts(*key)
+        try:
+            ks = self.ctl._ks_for(self._sensitivity(target, mode))
+        except MeasureTimeout as e:
+            # the sensitivity probe (k=0 / probe_k) hung: record the timeout
+            # against k=0 so doctor can explain it, then surface the error —
+            # with no k grid there is nothing to sweep or mark done
+            self._note(measured=1)
+            self._quality_rec(target.name, mode, 0, VERDICT_QUARANTINE,
+                              REASON_TIMEOUT, detail=str(e))
+            raise
+        stored = dict(self.store.stored_ts(*key))
+        if self.quality is not None and self.heal_quarantined:
+            for qk in self.store.quarantined_ks(*key):
+                stored.pop(qk, None)     # quarantined points re-measure
         fn_rt = self.ctl._rt_fn(target, mode)
 
         out_ks: list[int] = []
@@ -680,11 +790,15 @@ class Campaign:
         n_over = 0
         n_fresh = 0
         stopped = False
+        timed_out: list[int] = []
+        sentinels: list[dict] = []
+        span: list[int] = []         # fresh ks since the last sentinel
+        since_sentinel = 0
         for k in ks:
             if k in stored:
                 t = stored[k]
                 self._note(cached=1)
-            else:
+            elif self.quality is None:
                 fn, a = self._point_fn(target, mode, fn_rt, k)
                 with self._measure_lock:
                     t = measure(fn, a, reps=self.ctl.reps)
@@ -692,6 +806,47 @@ class Campaign:
                 n_fresh += 1
                 self.store.append({"kind": "point", "region": target.name,
                                    "mode": mode, "k": k, "t": t})
+            else:
+                # quality-guarded point: dispersion-gated sample under the
+                # re-measure budget, on a watchdog deadline derived from
+                # the worst time the online stop rule would accept
+                fn, a = self._point_fn(target, mode, fn_rt, k)
+                deadline = self._deadline(out_ts[0] if out_ts else None)
+
+                def once(n: int, _fn=fn, _a=a, _dl=deadline):
+                    return measure_sample(_fn, _a, reps=n, deadline=_dl)
+
+                try:
+                    with self._measure_lock:
+                        sample, verdict, reason = measure_quality(
+                            once, reps=self.ctl.reps, policy=self.quality,
+                            budget=self.remeasure)
+                except MeasureTimeout as e:
+                    self._note(measured=1)
+                    log.warning("campaign %s/%s k=%d: %s — recording a "
+                                "timeout quarantine and ending the sweep",
+                                target.name, mode, k, e)
+                    self._quality_rec(target.name, mode, k,
+                                      VERDICT_QUARANTINE, REASON_TIMEOUT,
+                                      reps=self.ctl.reps, detail=str(e))
+                    timed_out.append(k)
+                    break      # the executable hung; later ks would too
+                self._note(measured=1)
+                n_fresh += 1
+                t = sample.t
+                self.store.append({"kind": "point", "region": target.name,
+                                   "mode": mode, "k": k, "t": t,
+                                   "spread": sample.spread})
+                self._quality_rec(target.name, mode, k, verdict, reason,
+                                  spread=sample.spread,
+                                  reps=len(sample.reps))
+                span.append(k)
+                since_sentinel += 1
+                if (self.quality.sentinel_every and out_ts
+                        and since_sentinel >= self.quality.sentinel_every):
+                    self._sentinel(target, mode, fn_rt, out_ks[0], out_ts[0],
+                                   span, sentinels)
+                    since_sentinel = 0
             out_ks.append(k)
             out_ts.append(t)
             # same online saturation rule as absorption.sweep
@@ -706,23 +861,36 @@ class Campaign:
 
         # two-point drift correction (absorption.sweep's behaviour), only
         # when the whole series was measured in THIS run — a drift factor is
-        # meaningless across sessions. Raw points stay raw in the store; the
-        # factor is recorded so replays reproduce this exact curve.
+        # meaningless across sessions (and pointless after a timeout, whose
+        # resume re-measures the pair anyway). Raw points stay raw in the
+        # store; the factor is recorded so replays reproduce this curve.
         drift = None
-        if n_fresh == len(out_ks) and len(out_ts) > 2:
+        if n_fresh == len(out_ks) and len(out_ts) > 2 and not timed_out:
             fn, a = self._point_fn(target, mode, fn_rt, out_ks[0])
             with self._measure_lock:
-                t0_end = measure(fn, a, reps=max(self.ctl.reps - 2, 2))
+                t0_end = measure(fn, a, reps=max(self.ctl.reps - 2, 2),
+                                 deadline=self._deadline(out_ts[0]))
             self._note(measured=1)
             drift = t0_end / floor_time(
                 out_ts[0], f"campaign({target.name}/{mode}) t(k=0)")
 
         inj = self.ctl.verify_mode_payload(target, mode, out_ks) \
-            if self.ctl.verify_payload else None
-        self.store.append({
+            if self.ctl.verify_payload and out_ks else None
+        rec = {
             "kind": "done", "region": target.name, "mode": mode,
-            "ks": out_ks, "stopped_early": stopped, "drift": drift,
-            "payload": dataclasses.asdict(inj) if inj is not None else None})
+            "ks": out_ks + timed_out, "stopped_early": stopped,
+            "drift": drift,
+            "payload": dataclasses.asdict(inj) if inj is not None else None}
+        if sentinels:
+            rec["sentinels"] = sentinels
+        # the done marker is written even after a timeout: its ks then
+        # include the hung point, so the pair reads INCOMPLETE (missing k)
+        # and resume re-enters the measuring path instead of replaying
+        self.store.append(rec)
+        if not out_ts:
+            raise MeasureTimeout(
+                f"campaign {target.name}/{mode}: the first attempted point "
+                f"(k={timed_out[0]}) hit its watchdog deadline; no curve")
         return self._assemble_mode(mode, out_ks, out_ts, drift, stopped, inj)
 
     def _assemble_mode(self, mode, ks, ts, drift, stopped, inj) -> ModeResult:
@@ -737,9 +905,14 @@ class Campaign:
         ts = self.store.stored_ts(target.name, mode)
         ks = [int(k) for k in rec["ks"]]
         missing = [k for k in ks if k not in ts]
-        if missing:   # truncated store: re-enter the measuring path
-            log.warning("campaign store for %s/%s lost points %s; remeasuring",
-                        target.name, mode, missing)
+        heal: list[int] = []
+        if self.quality is not None and self.heal_quarantined:
+            heal = [k for k in self.store.quarantined_ks(target.name, mode)
+                    if k not in missing]
+        if missing or heal:   # truncated store / condemned points: re-enter
+            log.warning("campaign store for %s/%s lost points %s, "
+                        "quarantined %s; remeasuring",
+                        target.name, mode, missing, heal)
             del self.store.done[(target.name, mode)]
             return self.sweep_mode(target, mode)
         self._note(cached=len(ks))
@@ -977,6 +1150,12 @@ def _cli(argv: Optional[Sequence[str]] = None) -> int:
                 state += f", MISSING ks {sorted(ps.missing)}"
         else:
             state = f"{ps.points} point(s), in progress"
+        if ps.quarantined:
+            reasons = sorted({(st.quality.get(key, {}).get(k) or {})
+                              .get("reason") or "?"
+                              for k in ps.quarantined})
+            state += (f", QUARANTINED ks {sorted(ps.quarantined)} "
+                      f"({', '.join(reasons)})")
         meta = _meta_settings(st.meta[key]) if key in st.meta else "?"
         print(f"  measured {key[0]}/{key[1]}: {state}  [settings {meta}]")
     for key, rec in sorted(st.preds.items()):

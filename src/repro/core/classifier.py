@@ -34,6 +34,9 @@ class BottleneckReport:
     decan_hint: Optional[str] = None  # set by the DECAN cross-check
     # static audit evidence per mode (apply_audit_evidence); None = no audit
     evidence: Optional[list] = None
+    # runtime measurement-quality evidence per mode (apply_quality_evidence);
+    # None = no quality guard ran
+    quality: Optional[list] = None
 
     def __str__(self) -> str:
         abss = ", ".join(f"{m}={a:.1f}" for m, a in self.absorptions.items())
@@ -43,6 +46,9 @@ class BottleneckReport:
         if self.evidence is not None:
             n_sup = sum(1 for e in self.evidence if e["supports"])
             s += f" | audit: {n_sup}/{len(self.evidence)} mode(s) support"
+        if self.quality is not None:
+            n_clean = sum(1 for q in self.quality if not q["quarantined"])
+            s += f" | quality: {n_clean}/{len(self.quality)} mode(s) clean"
         return s
 
 
@@ -174,6 +180,56 @@ def apply_audit_evidence(report: BottleneckReport,
         if not supports:
             conf *= downgrade
     return dataclasses.replace(report, confidence=conf, evidence=evidence)
+
+
+UNRELIABLE = "unreliable"    # the refused label: measurements can't back one
+
+
+def apply_quality_evidence(report: BottleneckReport,
+                           quality: Mapping[str, Mapping],
+                           *, downgrade: float = 0.6,
+                           majority: float = 0.5) -> BottleneckReport:
+    """Annotate a classification with runtime measurement-quality evidence
+    (the quality records a guarded campaign persisted, aggregated per mode
+    as ``{"points": n, "quarantined": n, "reasons": {reason: count}}``).
+
+    The mirror of ``apply_audit_evidence`` for *dynamic* validity: a mode
+    with any quarantined points is suspect (its curve was fit through
+    condemned measurements) and multiplies the confidence by ``downgrade``;
+    a mode whose points are MAJORITY-quarantined (> ``majority`` of them)
+    cannot back any label at all — the report's label is refused and
+    replaced with ``unreliable`` at confidence 0, naming the condemned
+    modes and the dominant quarantine reasons.
+
+    Deterministic and measurement-free: two runs over the same store attach
+    byte-identical evidence.
+    """
+    if not quality:
+        return report
+    evidence = []
+    refused = []
+    conf = report.confidence
+    for mode in sorted(quality):
+        rec = quality[mode]
+        points = int(rec.get("points", 0))
+        quarantined = int(rec.get("quarantined", 0))
+        reasons = dict(rec.get("reasons", {}))
+        evidence.append({"mode": mode, "points": points,
+                         "quarantined": quarantined, "reasons": reasons})
+        if quarantined:
+            conf *= downgrade
+        if points and quarantined / points > majority:
+            why = ", ".join(sorted(reasons, key=lambda r: (-reasons[r], r)))
+            refused.append(f"{mode} ({quarantined}/{points} point(s) "
+                           f"quarantined: {why})")
+    if refused:
+        return dataclasses.replace(
+            report, label=UNRELIABLE, confidence=0.0, quality=evidence,
+            explanation="measurement quality refuses a label — majority-"
+                        "quarantined curve(s): " + "; ".join(refused)
+                        + " (re-measure under a quieter clock, e.g. "
+                        "fleet run --resume)")
+    return dataclasses.replace(report, confidence=conf, quality=evidence)
 
 
 def cross_check_with_decan(report: BottleneckReport,

@@ -115,6 +115,11 @@ class RegionReport:
         # reports stay byte-identical to pre-audit output
         if getattr(self.bottleneck, "evidence", None):
             bn["evidence"] = self.bottleneck.evidence
+        # likewise runtime measurement-quality evidence: attached only when
+        # a quality guard found something to say, so clean runs' reports
+        # stay byte-identical to unguarded ones
+        if getattr(self.bottleneck, "quality", None):
+            bn["quality"] = self.bottleneck.quality
         return json.dumps({
             "region": self.region,
             "body_size": self.body_size,
@@ -167,18 +172,22 @@ class Controller:
         return self._rt_cache[key][1]
 
     # -- §3.2: one or two quantities first, to learn the sensitivity --------
-    def probe_sensitivity(self, target: RegionTarget, mode: str) -> float:
+    def probe_sensitivity(self, target: RegionTarget, mode: str,
+                          deadline: Optional[float] = None) -> float:
         reps = max(2, self.reps - 2)
         fn_rt = self._rt_fn(target, mode)
         if fn_rt is not None:
             args = target.args_for_rt(mode)
-            t0 = measure(fn_rt, (jnp.int32(0), *args), reps=reps)
-            tk = measure(fn_rt, (jnp.int32(self.probe_k), *args), reps=reps)
+            t0 = measure(fn_rt, (jnp.int32(0), *args), reps=reps,
+                         deadline=deadline)
+            tk = measure(fn_rt, (jnp.int32(self.probe_k), *args), reps=reps,
+                         deadline=deadline)
         else:
             t0 = measure(target.build(mode, 0), target.args_for(mode, 0),
-                         reps=reps)
+                         reps=reps, deadline=deadline)
             tk = measure(target.build(mode, self.probe_k),
-                         target.args_for(mode, self.probe_k), reps=reps)
+                         target.args_for(mode, self.probe_k), reps=reps,
+                         deadline=deadline)
         return tk / floor_time(t0, f"probe_sensitivity({target.name}/{mode}) t0")
 
     def _ks_for(self, sensitivity: float) -> Sequence[int]:

@@ -234,6 +234,11 @@ def _cov_add(cov: dict, rec: dict) -> None:
         c["points"] += 1
     elif kind == "done":
         c["done"] = True
+    elif kind == "quality":
+        # last verdict per k within this segment (JSON keys are strings);
+        # the key is absent for segments with no quality records, so
+        # pre-guard manifests keep their exact shape
+        c.setdefault("quality", {})[str(rec.get("k"))] = rec.get("verdict")
 
 
 def _cov_list(cov: dict) -> list[dict]:
@@ -549,20 +554,29 @@ def manifest_status(path: str) -> dict:
     so ``fleet watch`` can poll this every couple of seconds against a store
     that active writers are appending to. Returns segment/record/byte totals,
     unsealed-orphan counts (live or crashed writers), and aggregated
-    per-(region, mode) pair coverage ``{(r, m): {"points": n, "done": b}}``
-    from the sealed segments' coverage entries."""
+    per-(region, mode) pair coverage ``{(r, m): {"points": n, "done": b,
+    "quarantined": n}}`` from the sealed segments' coverage entries."""
     sdir = segments_dir(path)
     m = load_manifest(sdir)
     pairs: dict[tuple, dict] = {}
+    verdicts: dict[tuple, dict] = {}
     records = nbytes = 0
     for ent in m["segments"]:
         records += int(ent.get("records", 0))
         nbytes += int(ent.get("bytes", 0))
         for c in ent.get("pairs", []):
-            p = pairs.setdefault((c.get("region"), c.get("mode")),
-                                 {"points": 0, "done": False})
+            key = (c.get("region"), c.get("mode"))
+            p = pairs.setdefault(key, {"points": 0, "done": False,
+                                       "quarantined": 0})
             p["points"] += int(c.get("points", 0))
             p["done"] = p["done"] or bool(c.get("done"))
+            # segments are listed in seal order, so a later segment's
+            # verdict for the same k supersedes (a healed point clears
+            # its quarantine)
+            verdicts.setdefault(key, {}).update(c.get("quality", {}))
+    for key, per_k in verdicts.items():
+        pairs[key]["quarantined"] = sum(
+            1 for v in per_k.values() if v == "quarantine")
     listed = {e["file"] for e in m["segments"]}
     folded = set(m["folded"])
     orphans = orphan_bytes = 0

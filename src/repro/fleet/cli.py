@@ -67,6 +67,23 @@ def _parse_mock_script(text: Optional[str]) -> Optional[dict]:
                          "nor a path to one")
 
 
+def _parse_quality_policy(text: Optional[str]) -> Optional[dict]:
+    """``--quality-policy`` accepts inline JSON or a path to a JSON file:
+    the plan-embedded measurement-integrity policy (QualityPolicy keys like
+    max_spread/sentinel_every/watchdog_floor_s, plus RemeasureBudget keys
+    like max_attempts/extra_reps — validated by ``plan.validate()``)."""
+    if text is None:
+        return None
+    if os.path.exists(text):
+        with open(text) as f:
+            return json.load(f)
+    try:
+        return json.loads(text)
+    except ValueError:
+        raise SystemExit(f"--quality-policy: {text!r} is neither a JSON "
+                         "object nor a path to one")
+
+
 def _launcher_spec(args) -> Optional[dict]:
     """The plan-embedded launcher spec the ``plan`` subcommand's flags
     describe (None when no launcher flag was given)."""
@@ -143,7 +160,8 @@ def _build_plan(args) -> "object":
                      backend=args.backend,
                      launcher=_launcher_spec(args),
                      retry=_retry_spec(args),
-                     store_format=args.store_format)
+                     store_format=args.store_format,
+                     quality=_parse_quality_policy(args.quality_policy))
     try:
         plan.validate()
     except PlanError as e:
@@ -167,6 +185,8 @@ def _cmd_plan(args) -> int:
         print(f"  launcher: {plan.launcher}")
     if plan.retry:
         print(f"  retry: {plan.retry}")
+    if plan.quality:
+        print(f"  quality: {plan.quality}")
     for r, m in grid:
         print(f"    {r}/{m}")
     print(f"run it:   PYTHONPATH=src python -m repro.fleet run "
@@ -218,7 +238,8 @@ def _cmd_run(args) -> int:
     try:
         res = run_fleet(args.plan, resume=args.resume, fresh=args.fresh,
                         expect_no_measure=args.expect_no_measure,
-                        launcher=launcher, retry=retry, audit=args.audit)
+                        launcher=launcher, retry=retry, audit=args.audit,
+                        quality=args.quality)
     except FleetError as e:
         raise SystemExit(f"fleet: {e}")
     print(f"fleet {res.plan.name!r} complete: {len(res.reports)} region(s) "
@@ -356,14 +377,27 @@ def _watch_frame(plan, grid) -> tuple[str, bool]:
             if seen:
                 out.append("    done: " + ", ".join(f"{r}/{m}"
                                                     for r, m in seen))
+            quar = sorted((str(r), str(m), p["quarantined"])
+                          for (r, m), p in st["pairs"].items()
+                          if p.get("quarantined"))
+            if quar:
+                out.append("    quarantined: " + ", ".join(
+                    f"{r}/{m} ({n} point(s))" for r, m, n in quar)
+                    + " — doctor names each point and why")
         else:
             st = CampaignStore(path, readonly=True)
-            comp = {k for k, ps in st.grid_status(grid).items()
-                    if ps.complete}
+            gs = st.grid_status(grid)
+            comp = {k for k, ps in gs.items() if ps.complete}
             done.update(comp)
             out.append(f"  {label} ({path}): legacy file, "
                        f"{os.path.getsize(path)} B, {len(comp)}/{len(grid)} "
                        "grid pair(s) complete")
+            quar = sorted((r, m, len(ps.quarantined))
+                          for (r, m), ps in gs.items() if ps.quarantined)
+            if quar:
+                out.append("    quarantined: " + ", ".join(
+                    f"{r}/{m} ({n} point(s))" for r, m, n in quar)
+                    + " — doctor names each point and why")
     missing = [k for k in grid if k not in done]
     line = (f"  grid: {len(grid) - len(missing)}/{len(grid)} "
             "pair(s) done")
@@ -473,6 +507,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="pallas execution backend")
     pp.add_argument("--no-compile-once", action="store_true",
                     help="force the trace-per-k fallback sweep path")
+    pp.add_argument("--quality-policy", default=None, metavar="JSON",
+                    help="serialize a runtime measurement-integrity policy "
+                         "into the plan (inline JSON or a file): "
+                         "QualityPolicy keys (max_spread, timer_floor_s, "
+                         "sentinel_every, sentinel_tol, watchdog_margin, "
+                         "watchdog_floor_s) plus RemeasureBudget keys "
+                         "(max_attempts, extra_reps, max_total_reps); "
+                         "workers then variance-gate, sentinel-check and "
+                         "watchdog every measured point")
     _add_launcher_flags(pp, for_plan=True)
     pp.set_defaults(fn=_cmd_plan)
 
@@ -482,8 +525,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="the SweepPlan JSON to execute")
     rp.add_argument("--resume", action="store_true",
                     help="continue an existing fleet: re-launch only "
-                         "incomplete shards; a complete fleet replays with "
-                         "zero new measurements")
+                         "incomplete shards (quarantined points count as "
+                         "incomplete and are re-measured); a clean complete "
+                         "fleet replays with zero new measurements")
     rp.add_argument("--fresh", action="store_true",
                     help="delete this plan's stores and fleet state first")
     rp.add_argument("--expect-no-measure", action="store_true",
@@ -497,6 +541,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="static noise-audit policy before launch: gate "
                          "(default) refuses statically-dead pairs, warn "
                          "measures anyway, off skips the audit")
+    rp.add_argument("--quality", default="gate",
+                    choices=("gate", "warn", "off"),
+                    help="runtime measurement-quality policy after the "
+                         "merge: gate (default) refuses a majority-"
+                         "quarantined classification, warn reports it, off "
+                         "attaches no quality evidence (the plan's quality "
+                         "policy still guards the measurements themselves)")
     _add_launcher_flags(rp, for_plan=False)
     rp.set_defaults(fn=_cmd_run)
 

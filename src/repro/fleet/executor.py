@@ -124,10 +124,33 @@ def characterize_region(region, modes: Sequence[str], *, controller,
 
 AUDIT_CHOICES = ("gate", "warn", "off")
 
+# the runtime measurement-quality gate mirrors the static audit gate, but
+# runs AFTER the merge (quality is a property of the measurements, so it
+# cannot be checked before they exist): "gate" refuses a fleet whose
+# classification was refused (majority-quarantined curves), "warn" reports
+# and proceeds, "off" skips evidence attachment entirely
+QUALITY_CHOICES = ("gate", "warn", "off")
+
 
 def _check_audit_choice(audit: str) -> None:
     if audit not in AUDIT_CHOICES:
         raise FleetError(f"audit policy {audit!r}: one of {AUDIT_CHOICES}")
+
+
+def _check_quality_choice(quality: str) -> None:
+    if quality not in QUALITY_CHOICES:
+        raise FleetError(
+            f"quality policy {quality!r}: one of {QUALITY_CHOICES}")
+
+
+def _plan_quality(plan: SweepPlan):
+    """The plan's declared (QualityPolicy, RemeasureBudget), or (None, None)
+    when the plan doesn't opt into the measurement-integrity guard."""
+    if plan.quality is None:
+        return None, None
+    from repro.core import quality_from_dict
+
+    return quality_from_dict(plan.quality)
 
 
 def _attach_audit_evidence(rep, store):
@@ -143,6 +166,62 @@ def _attach_audit_evidence(rep, store):
         return rep
     return dataclasses.replace(
         rep, bottleneck=apply_audit_evidence(rep.bottleneck, audits))
+
+
+def _attach_quality_evidence(rep, store):
+    """Fold the store's runtime measurement-quality records into one
+    RegionReport's classification (per-mode aggregate of quarantined
+    points and why — ``apply_quality_evidence`` decides the downgrade or
+    the label refusal).
+
+    A no-op for regions with no quarantined points, so a clean guarded run
+    serializes byte-identically to an unguarded one."""
+    from repro.core import apply_quality_evidence
+
+    agg = {}
+    any_quarantined = False
+    for (r, m), per_k in store.quality.items():
+        if r != rep.region or m not in rep.results:
+            continue
+        reasons: dict[str, int] = {}
+        quarantined = 0
+        for rec in per_k.values():
+            if rec.get("verdict") == "quarantine":
+                quarantined += 1
+                reason = rec.get("reason") or "unknown"
+                reasons[reason] = reasons.get(reason, 0) + 1
+        agg[m] = {"points": len(per_k), "quarantined": quarantined,
+                  "reasons": reasons}
+        any_quarantined = any_quarantined or bool(quarantined)
+    if not any_quarantined:
+        return rep
+    return dataclasses.replace(
+        rep, bottleneck=apply_quality_evidence(rep.bottleneck, agg))
+
+
+def _gate_quality(reports: dict, quality: str) -> None:
+    """The runtime quality gate: a region whose label was REFUSED by
+    ``apply_quality_evidence`` (majority-quarantined curve) fails the fleet
+    under ``"gate"``, is printed and tolerated under ``"warn"``."""
+    from repro.core.classifier import UNRELIABLE
+
+    if quality == "off":
+        return
+    bad = {name: rep for name, rep in sorted(reports.items())
+           if rep.bottleneck.label == UNRELIABLE}
+    if not bad:
+        return
+    lines = "\n".join(f"  {name}: {rep.bottleneck.explanation}"
+                      for name, rep in bad.items())
+    msg = (f"quality gate: {len(bad)} region(s) are majority-quarantined — "
+           f"the measurements cannot back a label:\n{lines}")
+    if quality == "gate":
+        raise FleetError(
+            msg + "\n`python -m repro.fleet doctor --plan ...` names every "
+            "quarantined point and why; re-measure under a quieter clock "
+            "with `fleet run --plan ... --resume`, or report anyway with "
+            "--quality warn")
+    print(f"!! {msg}\n!! --quality warn: reporting anyway")
 
 
 def audit_fleet_plan(plan: SweepPlan, store=None, *, gate: str = "gate",
@@ -267,7 +346,8 @@ def _handshake(plan: SweepPlan) -> str:
 def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
                count: Optional[int] = None, fresh: bool = False,
                expect_no_measure: bool = False,
-               header: Optional[str] = None, audit: str = "gate"):
+               header: Optional[str] = None, audit: str = "gate",
+               quality: str = "gate"):
     """Execute a plan (or one shard of it) in THIS process.
 
     ``index``/``count`` given: measure shard ``index`` of ``count``'s slice
@@ -280,11 +360,19 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
     any measurement, ``"gate"`` refusing statically-dead pairs, and its
     records back the per-mode evidence attached to every classification.
 
+    A plan that declares a ``quality`` policy measures under the runtime
+    integrity guard on BOTH paths (variance gating, sentinels, watchdog —
+    quality records land in the store either way); ``quality`` then governs
+    the classification side on the whole-plan path: ``"gate"`` refuses a
+    majority-quarantined region, ``"warn"`` reports it, ``"off"`` attaches
+    no quality evidence.
+
     Returns ``(results_or_reports, CampaignStats)``.
     """
     from repro.core import Campaign, Controller, remove_store, worker_store
 
     _check_audit_choice(audit)
+    _check_quality_choice(quality)
 
     if index is not None:
         count = plan.shards if count is None else count
@@ -301,7 +389,9 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
     title = header or f"fleet plan {plan.name!r} [{plan.digest()}]"
     plan.grid()     # rejects plans whose targets enumerate duplicate pairs
     ctl = Controller(reps=plan.reps, compile_once=plan.compile_once)
-    camp = Campaign(_plan_store(plan, store), ctl, workers=plan.workers)
+    qpolicy, qbudget = _plan_quality(plan)
+    camp = Campaign(_plan_store(plan, store), ctl, workers=plan.workers,
+                    quality=qpolicy, remeasure=qbudget)
     try:
         pairs = plan.pairs()
         if index is not None:
@@ -330,8 +420,11 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
             for region in regions:
                 rep = _attach_audit_evidence(
                     camp.characterize(region, list(spec.modes)), camp.store)
+                if quality != "off":
+                    rep = _attach_quality_evidence(rep, camp.store)
                 reports[region.name] = rep
                 print_report(rep, name_line=many)
+        _gate_quality(reports, quality)
         write_report(plan.report_path(), reports)
         finish_stats(camp.stats, expect_no_measure)
         return reports, camp.stats
@@ -481,17 +574,25 @@ class FleetResult:
     launched: list[int]              # shard indices (re)launched this run
 
 
-def _incomplete_shards(plan: SweepPlan, grid) -> list[int]:
+def _incomplete_shards(plan: SweepPlan, grid, *,
+                       heal: bool = False) -> list[int]:
     """Which shards still owe measurements — decided from the stores alone.
 
     The canonical store is consulted first: once a fleet has merged (or the
     same plan ran single-process), a complete canonical store means NO shard
-    has anything left to do, even if worker stores were deleted."""
+    has anything left to do, even if worker stores were deleted.
+
+    ``heal``: treat a complete pair that carries QUARANTINED points as still
+    owing, so a resume re-launches its shard and the worker re-measures the
+    condemned points (hopefully under a quieter clock)."""
     from repro.core import CampaignStore, store_exists
+
+    def ok(ps) -> bool:
+        return ps.complete and not (heal and ps.quarantined)
 
     if store_exists(plan.store):
         st = CampaignStore(plan.store, readonly=True)
-        if all(ps.complete for ps in st.grid_status(grid).values()):
+        if all(ok(ps) for ps in st.grid_status(grid).values()):
             return []
     out = []
     for i in range(plan.shards):
@@ -505,24 +606,32 @@ def _incomplete_shards(plan: SweepPlan, grid) -> list[int]:
         # readonly: completeness probing must not heal anything — the worker
         # owns its store and heals the torn tail itself on relaunch
         st = CampaignStore(ws, readonly=True)
-        if not all(ps.complete for ps in st.grid_status(mine).values()):
+        if not all(ok(ps) for ps in st.grid_status(mine).values()):
             out.append(i)
     return out
 
 
-def _classify(plan: SweepPlan):
+def _classify(plan: SweepPlan, quality: str = "gate"):
     """Merge-side finalize: replay the canonical store into one RegionReport
-    per region (a complete store measures nothing here)."""
+    per region (a complete store measures nothing here — quarantined points
+    are NOT healed by finalize; it must classify what the fleet measured,
+    with the quality evidence attached when ``quality`` != "off")."""
     from repro.core import Campaign, Controller
 
+    qpolicy, qbudget = _plan_quality(plan)
     ctl = Controller(reps=plan.reps, compile_once=plan.compile_once)
-    camp = Campaign(_plan_store(plan, plan.store), ctl, workers=plan.workers)
+    camp = Campaign(_plan_store(plan, plan.store), ctl, workers=plan.workers,
+                    quality=qpolicy, remeasure=qbudget,
+                    heal_quarantined=False)
     try:
         reports = {}
         for spec, regions in plan.resolve():
             for region in regions:
-                reports[region.name] = _attach_audit_evidence(
+                rep = _attach_audit_evidence(
                     camp.characterize(region, list(spec.modes)), camp.store)
+                if quality != "off":
+                    rep = _attach_quality_evidence(rep, camp.store)
+                reports[region.name] = rep
     finally:
         camp.store.close()
     return reports, camp.stats
@@ -545,7 +654,7 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
               expect_no_measure: bool = False,
               launcher: Union[Launcher, Callable, None] = None,
               retry: Optional[RetryBudget] = None,
-              audit: str = "gate") -> FleetResult:
+              audit: str = "gate", quality: str = "gate") -> FleetResult:
     """Plan → audit → spawn (with retries) → merge → classify, resumably.
 
     * the static noise audit runs FIRST, before anything launches: every
@@ -563,8 +672,15 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
       round, so a retried shard heals its torn store and re-measures only
       missing points; every attempt lands in ``fleet.json``'s per-shard
       attempt log (launcher, host, rc, heal stats);
+    * a plan that declares a ``quality`` policy measures every point under
+      the runtime integrity guard; after the merge, ``quality="gate"``
+      refuses a fleet whose classification was refused (majority-quarantined
+      curve — the ``unreliable`` label), ``"warn"`` reports it and writes
+      the report anyway, ``"off"`` attaches no quality evidence;
     * ``resume`` after a crash: re-launches ONLY incomplete shards, then
-      merges and classifies as usual;
+      merges and classifies as usual; a resume also re-launches shards whose
+      pairs are complete but QUARANTINED, so the workers re-measure the
+      condemned points (run it under a quieter clock to heal the fleet);
     * ``resume`` on a completed fleet: launches nothing and the classify
       step replays the canonical store with ZERO new measurements;
     * ``fresh``: delete every store/state file of this plan first.
@@ -579,6 +695,7 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
     has exhausted its lifetime ``per_shard_cap``.
     """
     _check_audit_choice(audit)
+    _check_quality_choice(quality)
     plan = SweepPlan.load(plan_path)
     if fresh:
         _clean_fleet(plan)
@@ -607,7 +724,7 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
         # so the merge streams them through) and back the evidence below
         audit_fleet_plan(plan, gate=audit)
 
-    incomplete = sorted(_incomplete_shards(plan, grid))
+    incomplete = sorted(_incomplete_shards(plan, grid, heal=resume))
     for i, ss in state.shards.items():
         ss.status = "pending" if i in incomplete else "done"
     state.save()
@@ -658,7 +775,7 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
         state.save()
         outcomes = lch.launch(plan_path, plan, runnable,
                               attempts=attempts_map)
-        still = set(_incomplete_shards(plan, grid))
+        still = set(_incomplete_shards(plan, grid, heal=resume))
         for i in runnable:
             ss = state.shards[i]
             o = outcomes.get(i)
@@ -713,7 +830,7 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
             state.merge["segments_skipped"] = mstats.segments_skipped
         print(f"== merge: {mstats}")
 
-    reports, cstats = _classify(plan)
+    reports, cstats = _classify(plan, quality)
     state.classification = {
         name: {"label": rep.bottleneck.label,
                "confidence": rep.bottleneck.confidence,
@@ -721,6 +838,9 @@ def run_fleet(plan_path: str, *, resume: bool = False, fresh: bool = False,
         for name, rep in sorted(reports.items())}
     state.stats = {"measured": cstats.measured, "cached": cstats.cached}
     state.save()
+    # the ledger records the refused classification (forensics) but the gate
+    # refuses to WRITE a report a majority-quarantined fleet cannot back
+    _gate_quality(reports, quality)
     write_report(plan.report_path(), reports)
     print(f"== classification ({plan.report_path()}):")
     for name, rep in sorted(reports.items()):
@@ -743,6 +863,7 @@ def _pair_lines(store_path: str, mine, canon_status) -> tuple[list[str], int]:
     from repro.core.campaign import read_store_records
 
     lines: list[str] = []
+    wstore = None
     if not store_exists(store_path):
         status = {}
         lines.append(f"  worker store {store_path}: absent")
@@ -765,8 +886,8 @@ def _pair_lines(store_path: str, mine, canon_status) -> tuple[list[str], int]:
                         f"{size - valid} byte(s) past the last valid record "
                         "(a SIGKILL mid-append; healed automatically on the "
                         "next load, costing at most one point)")
-            status = CampaignStore(store_path,
-                                   readonly=True).grid_status(mine)
+            wstore = CampaignStore(store_path, readonly=True)
+            status = wstore.grid_status(mine)
         except CampaignStoreError as e:
             lines.append(f"  worker store {store_path}: CORRUPT beyond the "
                          f"final record — {e}; delete it and relaunch the "
@@ -775,6 +896,18 @@ def _pair_lines(store_path: str, mine, canon_status) -> tuple[list[str], int]:
     owing = 0
     for pair in mine:
         r, m = pair
+        # quarantine evidence lives in the worker store even before any
+        # merge, so a hung-kernel timeout is explainable right after the
+        # failed round, not only once a canonical store exists
+        qwhy = ""
+        if wstore is not None:
+            per_k = wstore.quality.get(pair, {})
+            by: dict[str, list[int]] = {}
+            for k in wstore.quarantined_ks(r, m):
+                reason = per_k.get(k, {}).get("reason") or "unknown"
+                by.setdefault(reason, []).append(k)
+            qwhy = "; ".join(f"{reason} at k(s) {sorted(ks)}"
+                             for reason, ks in sorted(by.items()))
         if canon_status and canon_status.get(pair) \
                 and canon_status[pair].complete:
             continue                      # already satisfied by the merge
@@ -782,7 +915,13 @@ def _pair_lines(store_path: str, mine, canon_status) -> tuple[list[str], int]:
         if ps is None or (not ps.done and not ps.points):
             owing += 1
             lines.append(f"  {r}/{m}: absent — never measured")
+            if qwhy:      # e.g. the sensitivity probe itself timed out
+                lines.append(f"    quarantined: {qwhy}")
         elif ps.complete:
+            if qwhy:
+                lines.append(
+                    f"  {r}/{m}: complete but quarantined — {qwhy}; "
+                    "`--resume` re-measures exactly these points")
             continue
         elif ps.done and ps.missing:
             owing += 1
@@ -790,12 +929,16 @@ def _pair_lines(store_path: str, mine, canon_status) -> tuple[list[str], int]:
                 f"  {r}/{m}: done-marked but {ps.points}/{ps.expected} "
                 f"point(s) present — missing k(s) {sorted(ps.missing)}; a "
                 "relaunch re-measures ONLY these")
+            if qwhy:
+                lines.append(f"    quarantined: {qwhy}")
         else:
             owing += 1
             lines.append(
                 f"  {r}/{m}: in progress — {ps.points} point(s), no done "
                 "marker (the k grid is adaptive; a relaunch resumes at the "
                 "first missing k)")
+            if qwhy:
+                lines.append(f"    quarantined: {qwhy}")
     return lines, owing
 
 
@@ -852,6 +995,41 @@ def fleet_doctor(plan: SweepPlan,
                         out.append("    (the audit gate refuses this pair; "
                                    "fix the noise body or run with "
                                    "--audit warn)")
+        # runtime measurement quality: quarantined points, and why
+        qpairs = {key: canon.quarantined_ks(*key) for key in grid}
+        qpairs = {key: ks for key, ks in qpairs.items() if ks}
+        if qpairs:
+            nq = sum(len(ks) for ks in qpairs.values())
+            out.append(f"measurement quality: {nq} quarantined point(s) "
+                       f"across {len(qpairs)} pair(s)")
+            for (r, m), ks in sorted(qpairs.items()):
+                per_k = canon.quality.get((r, m), {})
+                reasons: dict[str, list[int]] = {}
+                for k in ks:
+                    reason = per_k.get(k, {}).get("reason") or "unknown"
+                    reasons.setdefault(reason, []).append(k)
+                why = "; ".join(f"{reason} at k(s) {sorted(kk)}"
+                                for reason, kk in sorted(reasons.items()))
+                out.append(f"  {r}/{m}: {why}")
+                for k in ks:
+                    detail = per_k.get(k, {}).get("detail")
+                    if detail:
+                        out.append(f"    k={k}: {detail}")
+            out.append("  (a quarantined point condemns its reading, not "
+                       "the pair; `fleet run --plan ... --resume` "
+                       "re-measures exactly these points — run it under a "
+                       "quieter clock)")
+        # implausible baseline drift the campaign refused to correct for
+        for key in grid:
+            rec = canon.done.get(key)
+            drift = (rec or {}).get("drift")
+            if drift is not None and not (0.5 < drift < 2.0):
+                r, m = key
+                out.append(f"  {r}/{m}: implausible baseline drift factor "
+                           f"{drift:.3g} recorded — outside (0.5, 2.0), so "
+                           "drift correction was refused and the sweep's "
+                           "tail is suspect; re-measure under a steadier "
+                           "clock")
     else:
         out.append(f"canonical store {plan.store}: absent (no merge yet)")
     total_owing = 0

@@ -161,6 +161,15 @@ class SweepPlan:
     (``repro.core.segments`` — append-only segments + manifest, giving
     incremental merges and ``fleet watch`` live status). Serialized — and
     hashed into the digest — only when set, like launcher/retry.
+
+    ``quality`` (optional) declares the runtime measurement-integrity
+    guard: one flat dict of ``repro.core.quality`` QualityPolicy and
+    RemeasureBudget fields (e.g. ``{"max_spread": 0.15, "sentinel_every":
+    4, "watchdog_floor_s": 0.5, "max_attempts": 2}``). Workers then
+    dispersion-gate every fresh point, interleave baseline sentinels,
+    quarantine what can't be trusted, and re-measure quarantined points on
+    resume. Serialized — and hashed — only when set: measurement validity
+    thresholds are part of the plan's identity.
     """
     name: str
     store: str
@@ -173,6 +182,7 @@ class SweepPlan:
     launcher: Optional[dict] = None
     retry: Optional[dict] = None
     store_format: Optional[str] = None
+    quality: Optional[dict] = None
 
     # -- validation / identity ----------------------------------------------
     def validate(self) -> None:
@@ -230,6 +240,12 @@ class SweepPlan:
                 ln.RetryBudget.from_dict(self.retry)
             except ln.FleetError as e:
                 raise PlanError(str(e)) from e
+        if self.quality is not None:
+            from repro.core.quality import quality_from_dict
+            try:
+                quality_from_dict(self.quality)
+            except ValueError as e:
+                raise PlanError(str(e)) from e
 
     def to_dict(self) -> dict:
         """The canonical JSON-able form; ``launcher``/``retry`` appear only
@@ -246,6 +262,8 @@ class SweepPlan:
             d["retry"] = self.retry
         if self.store_format is not None:
             d["store_format"] = self.store_format
+        if self.quality is not None:
+            d["quality"] = self.quality
         return d
 
     def canonical_json(self) -> str:
@@ -288,7 +306,8 @@ class SweepPlan:
                    compile_once=bool(d.get("compile_once", True)),
                    backend=d.get("backend", "auto"),
                    launcher=d.get("launcher"), retry=d.get("retry"),
-                   store_format=d.get("store_format"))
+                   store_format=d.get("store_format"),
+                   quality=d.get("quality"))
         plan.validate()
         return plan
 

@@ -120,7 +120,8 @@ def build_step_region(arch: str, kind: str, modes: Sequence[str], *,
 def _run_adhoc(spec, *, reps: int, store: str | None, fresh: bool,
                workers: int, compile_once: bool,
                shard: Optional[tuple[int, int]], expect_no_measure: bool,
-               header: str, audit: str = "gate") -> None:
+               header: str, audit: str = "gate",
+               quality: str = "gate") -> None:
     """Build a one-target SweepPlan from CLI flags and execute it through
     the fleet worker — the campaign tail (store naming, shard dispatch,
     reporting) lives behind that API now."""
@@ -137,7 +138,7 @@ def _run_adhoc(spec, *, reps: int, store: str | None, fresh: bool,
     run_worker(plan, index=(shard[0] if shard else None),
                count=(shard[1] if shard else None), fresh=fresh,
                expect_no_measure=expect_no_measure, header=header,
-               audit=audit)
+               audit=audit, quality=quality)
 
 
 def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
@@ -146,7 +147,7 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
                    compile_once: bool = True,
                    shard: Optional[tuple[int, int]] = None,
                    expect_no_measure: bool = False,
-                   audit: str = "gate") -> None:
+                   audit: str = "gate", quality: str = "gate") -> None:
     """Measured graph-level probe of one model step (smoke config, host
     backend): builds a one-target SweepPlan from the flags and runs it
     through the fleet worker's campaign tail."""
@@ -164,6 +165,7 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
     _run_adhoc(spec, reps=reps, store=store, fresh=fresh, workers=workers,
                compile_once=compile_once, shard=shard,
                expect_no_measure=expect_no_measure, audit=audit,
+               quality=quality,
                header=f"measured probe: {arch} {kind} seq={seq} "
                       f"batch={batch}")
 
@@ -174,7 +176,7 @@ def pallas_probe(kernel: str, modes: Optional[list[str]], *, reps: int,
                  compile_once: bool = True,
                  shard: Optional[tuple[int, int]] = None,
                  expect_no_measure: bool = False,
-                 audit: str = "gate") -> None:
+                 audit: str = "gate", quality: str = "gate") -> None:
     """Run the paper's methodology against a real Pallas kernel (interpret
     mode off-TPU). The sweep rides the compile-once runtime-k path: ≤2
     Pallas executables per (kernel, mode)."""
@@ -202,12 +204,12 @@ def pallas_probe(kernel: str, modes: Optional[list[str]], *, reps: int,
     _run_adhoc(spec, reps=reps, store=store, fresh=fresh, workers=workers,
                compile_once=compile_once, shard=shard,
                expect_no_measure=expect_no_measure, audit=audit,
-               header=f"pallas probe: {kernel}")
+               quality=quality, header=f"pallas probe: {kernel}")
 
 
 def plan_probe(plan_path: str, *, shard: Optional[tuple[int, int]],
                fresh: bool, expect_no_measure: bool,
-               audit: str = "gate") -> None:
+               audit: str = "gate", quality: str = "gate") -> None:
     """The fleet worker entry: execute (a shard of) a saved SweepPlan."""
     from repro.fleet.executor import FleetError, run_worker
     from repro.fleet.plan import PlanError, SweepPlan
@@ -219,7 +221,8 @@ def plan_probe(plan_path: str, *, shard: Optional[tuple[int, int]],
     try:
         run_worker(plan, index=(shard[0] if shard else None),
                    count=(shard[1] if shard else None), fresh=fresh,
-                   expect_no_measure=expect_no_measure, audit=audit)
+                   expect_no_measure=expect_no_measure, audit=audit,
+                   quality=quality)
     except (FleetError, PlanError) as e:
         raise SystemExit(str(e))
 
@@ -360,6 +363,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "runs (shards never audit): gate (default) refuses "
                          "statically-dead pairs before measuring, warn "
                          "measures anyway, off skips the audit")
+    ap.add_argument("--quality", default="gate",
+                    choices=("gate", "warn", "off"),
+                    help="runtime measurement-quality policy for whole-plan/"
+                         "ad-hoc runs: gate (default) refuses a majority-"
+                         "quarantined classification, warn reports it, off "
+                         "attaches no quality evidence (only plans that "
+                         "declare a quality policy guard their measurements)")
     return ap
 
 
@@ -388,7 +398,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                              + ", ".join(overridden))
         plan_probe(args.plan, shard=shard, fresh=args.fresh,
                    expect_no_measure=args.expect_no_measure,
-                   audit=args.audit)
+                   audit=args.audit, quality=args.quality)
         return
     if args.pallas is not None:
         if args.analytic:
@@ -398,7 +408,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                      workers=args.workers,
                      compile_once=not args.no_compile_once, shard=shard,
                      expect_no_measure=args.expect_no_measure,
-                     audit=args.audit)
+                     audit=args.audit, quality=args.quality)
         return
     if args.arch is None:
         raise SystemExit("--arch is required unless --pallas or --plan "
@@ -420,7 +430,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                        compile_once=not args.no_compile_once,
                        shard=shard,
                        expect_no_measure=args.expect_no_measure,
-                       audit=args.audit)
+                       audit=args.audit, quality=args.quality)
 
 
 if __name__ == "__main__":

@@ -15,6 +15,23 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(autouse=True)
+def _fresh_measure_state():
+    """Per-test isolation for absorption's process-level measurement state:
+    the per-series floor_time warning dedup and the synthetic clock's
+    drift counter / hang latch."""
+    import importlib
+
+    # note: ``repro.core.absorption`` the *attribute* is the absorption()
+    # function (re-exported by the package); go through importlib to get
+    # the module itself
+    absorption_mod = importlib.import_module("repro.core.absorption")
+    absorption_mod.reset_floor_warnings()
+    absorption_mod.reset_synth_state()
+    yield
+    absorption_mod.release_synth_hang()  # never leave a parked thread behind
+
+
 class _HypothesisStub:
     """Stands in for ``hypothesis`` when it isn't installed: ``@given`` marks
     the test skipped (instead of the import crashing collection), ``settings``

@@ -23,6 +23,13 @@ pin-dependent only at REGEN time; the replay itself never compiles.
 Regenerate ONLY when a change to curve assembly / fitting / classification
 / the audit pass is intentional, and say so in the commit that updates
 these files.
+
+NOTE (measurement-integrity guard): the runtime quality guard grew the
+store schema — "quality" records, an optional "spread" on points and
+"sentinels" on done markers — but these goldens are deliberately left
+byte-identical: they are synthesized without a quality policy, so the new
+fields never appear and every curve/fit/classify expectation is unchanged.
+``test_golden_store_is_policyless_and_guard_invariant`` pins exactly that.
 """
 from __future__ import annotations
 

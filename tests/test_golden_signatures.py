@@ -62,6 +62,32 @@ def test_golden_signature_replays_identically(golden_store, region):
                 "regenerate via tests/golden/regen.py")
 
 
+def test_golden_store_is_policyless_and_guard_invariant(golden_store):
+    """The measurement-integrity guard grew the store schema — "quality"
+    records, point "spread", done "sentinels" — but the golden fixtures are
+    intentionally UNCHANGED: they were measured without a policy so they
+    carry none of the new fields, and replaying them with a quality policy
+    attached still measures nothing and classifies identically (every point
+    is cached and nothing is quarantined, so nothing heals)."""
+    from repro.core import QualityPolicy
+
+    with open(os.path.join(GOLDEN_DIR, "signatures.jsonl")) as f:
+        recs = [json.loads(line) for line in f if line.strip()]
+    assert all(r["kind"] != "quality" for r in recs)
+    assert all("spread" not in r for r in recs if r["kind"] == "point")
+    assert all("sentinels" not in r for r in recs if r["kind"] == "done")
+
+    region = sorted(EXPECTED)[0]
+    exp = EXPECTED[region]
+    camp = Campaign(golden_store, Controller(reps=2, verify_payload=False),
+                    quality=QualityPolicy())
+    target = RegionTarget(name=region, build=_fail_build,
+                          args_for=_fail_build)
+    rep = camp.characterize(target, sorted(exp["modes"]))
+    assert camp.stats.measured == 0
+    assert rep.bottleneck.label == exp["label"]
+
+
 def test_golden_covers_every_decision_label():
     labels = {e["label"] for e in EXPECTED.values()}
     assert labels == {"compute", "bandwidth", "latency", "ici", "overlap",

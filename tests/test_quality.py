@@ -1,0 +1,358 @@
+"""Runtime measurement-integrity guard: the valid/re-measure/quarantine
+decision table, the bounded re-measure loop, Sample dispersion math, the
+deterministic synthetic-clock perturbations (jitter/drift/hang), watchdog
+timeouts, and the campaign-level quarantine/heal round-trip.
+
+Measurement determinism: REPRO_SYNTH_MEASURE + REPRO_SYNTH_JITTER /
+REPRO_SYNTH_DRIFT / REPRO_SYNTH_HANG drive every scenario with a pure
+function of (k, rep), so the quarantine sets asserted here are exact."""
+import importlib
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (Campaign, CampaignStore, Controller, MeasureTimeout,
+                        QualityPolicy, RemeasureBudget, Sample,
+                        apply_quality_evidence, classify, measure_quality,
+                        measure_sample, quality_from_dict, step_region)
+from repro.core.noise import NoiseScale, make_modes
+from repro.core.quality import (REASON_SPREAD, REASON_TIMER_FLOOR,
+                                VERDICT_QUARANTINE, VERDICT_REMEASURE,
+                                VERDICT_VALID, decide)
+
+# the package re-export shadows the submodule attribute, so import the
+# module explicitly to reach the synth-state helpers
+absorption_mod = importlib.import_module("repro.core.absorption")
+
+MODES = make_modes(NoiseScale(hbm_mib=4, chase_len=1 << 16, mxu_dim=32))
+
+
+def _region(name):
+    def step(x):
+        W = jnp.eye(64) * 0.5
+        return jnp.tanh(x @ W) @ W
+
+    X = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+    return step_region(name, step, (X,), MODES)
+
+
+# ---------------------------------------------------------------------------
+# Sample math
+# ---------------------------------------------------------------------------
+
+def test_sample_min_spread_mad_and_merge():
+    s = Sample(reps=(2.0, 1.0, 1.5))
+    assert s.t == 1.0
+    assert s.spread == pytest.approx(1.0)          # (2 - 1) / 1
+    assert s.mad == pytest.approx(0.5 / 1.5)       # median-relative MAD
+    m = s.merged(Sample(reps=(0.5,)))
+    assert m.reps == (2.0, 1.0, 1.5, 0.5)
+    assert m.t == 0.5
+
+
+def test_sample_rejects_empty():
+    with pytest.raises(ValueError):
+        Sample(reps=())
+
+
+# ---------------------------------------------------------------------------
+# decision table
+# ---------------------------------------------------------------------------
+
+def test_decide_timer_floor_beats_spread():
+    """A sub-floor time quarantines even when the spread is also terrible:
+    more reps cannot fix a timer that cannot resolve the kernel."""
+    policy = QualityPolicy(max_spread=0.1, timer_floor_s=1e-6)
+    s = Sample(reps=(1e-9, 5e-9))
+    assert decide(s, policy) == (VERDICT_QUARANTINE, REASON_TIMER_FLOOR)
+
+
+def test_decide_valid_remeasure_quarantine():
+    policy = QualityPolicy(max_spread=0.1)
+    clean = Sample(reps=(1.0, 1.05))
+    noisy = Sample(reps=(1.0, 1.5))
+    assert decide(clean, policy) == (VERDICT_VALID, None)
+    assert decide(noisy, policy) == (VERDICT_REMEASURE, None)
+    assert decide(noisy, policy, can_remeasure=False) == \
+        (VERDICT_QUARANTINE, REASON_SPREAD)
+
+
+def test_measure_quality_stabilizes_with_extra_reps():
+    """A noisy first sample earns extra reps; once the merged spread is in
+    tolerance the point is valid and the loop stops."""
+    calls = []
+
+    def once(n):
+        calls.append(n)
+        # first round noisy, extra rounds tight around the true minimum
+        return Sample(reps=(1.0, 1.4) if len(calls) == 1
+                      else tuple([1.0] * n))
+
+    policy = QualityPolicy(max_spread=0.1)
+    sample, verdict, reason = measure_quality(
+        once, reps=2, policy=policy,
+        budget=RemeasureBudget(max_attempts=2, extra_reps=3))
+    assert verdict == VERDICT_VALID and reason is None
+    assert calls == [2, 3]
+    assert len(sample.reps) == 5 and sample.t == 1.0
+
+
+def test_measure_quality_exhausts_budget_to_quarantine():
+    def once(n):
+        # spread never settles: reps alternate around a 40% band
+        return Sample(reps=tuple(1.0 + 0.4 * (i % 2) for i in range(n)))
+
+    policy = QualityPolicy(max_spread=0.1)
+    budget = RemeasureBudget(max_attempts=2, extra_reps=3, max_total_reps=6)
+    sample, verdict, reason = measure_quality(
+        once, reps=2, policy=policy, budget=budget)
+    assert (verdict, reason) == (VERDICT_QUARANTINE, REASON_SPREAD)
+    assert len(sample.reps) <= budget.max_total_reps
+
+
+def test_quality_from_dict_round_trip_and_validation():
+    policy, budget = quality_from_dict(
+        {"max_spread": 0.2, "sentinel_every": 4, "extra_reps": 2})
+    assert policy.max_spread == 0.2 and policy.sentinel_every == 4
+    assert budget.extra_reps == 2
+    with pytest.raises(ValueError, match="unknown quality key"):
+        quality_from_dict({"max_spred": 0.2})
+    with pytest.raises(ValueError, match="max_spread"):
+        quality_from_dict({"max_spread": -1.0})
+    with pytest.raises(ValueError, match="dict"):
+        quality_from_dict([1, 2])
+
+
+def test_watchdog_deadline_shape():
+    off = QualityPolicy()
+    assert off.deadline(1e-3, stop_ratio=4.0, reps=3) is None
+    on = QualityPolicy(watchdog_floor_s=0.5, watchdog_margin=8.0)
+    # before t(0) exists only the floor applies
+    assert on.deadline(None, stop_ratio=4.0, reps=3) == 0.5
+    # 8 * 4 * 1e-3 * (2 warmup + 3 reps) = 0.16 < floor
+    assert on.deadline(1e-3, stop_ratio=4.0, reps=3, warmup=2) == 0.5
+    assert on.deadline(1.0, stop_ratio=4.0, reps=3, warmup=2) == \
+        pytest.approx(8.0 * 4.0 * 1.0 * 5)
+
+
+# ---------------------------------------------------------------------------
+# synthetic clock perturbations
+# ---------------------------------------------------------------------------
+
+def test_synth_jitter_is_deterministic_and_min_invariant(monkeypatch):
+    monkeypatch.setenv("REPRO_SYNTH_MEASURE", "1e-3")
+    args = (jnp.int32(8),)
+    clean = measure_sample(None, args, reps=4)
+    monkeypatch.setenv("REPRO_SYNTH_JITTER", "0.6")
+    j1 = measure_sample(None, args, reps=4)
+    j2 = measure_sample(None, args, reps=4)
+    assert j1.reps == j2.reps                  # hash-derived, not random
+    assert j1.reps[0] == clean.t               # rep 0 is always exact
+    assert j1.t == clean.t                     # min-of-reps is unchanged
+    assert j1.spread > clean.spread == 0.0
+
+
+def test_synth_hang_trips_the_watchdog(monkeypatch):
+    monkeypatch.setenv("REPRO_SYNTH_MEASURE", "1e-3")
+    monkeypatch.setenv("REPRO_SYNTH_HANG", "8")
+    t0 = time.monotonic()
+    with pytest.raises(MeasureTimeout, match="deadline"):
+        measure_sample(None, (jnp.int32(8),), reps=2, deadline=0.1)
+    assert time.monotonic() - t0 < 5.0         # bounded, not stuck
+    absorption_mod.release_synth_hang()
+    # un-hung ks measure normally under the same deadline
+    assert measure_sample(None, (jnp.int32(4),), reps=2,
+                          deadline=0.1).t == pytest.approx(1e-3)
+
+
+# ---------------------------------------------------------------------------
+# campaign integration: quarantine, heal, sentinel spans, timeouts
+# ---------------------------------------------------------------------------
+
+def _quality_campaign(path, policy):
+    return Campaign(path, Controller(reps=2, verify_payload=False),
+                    quality=policy)
+
+
+def test_sweep_quarantines_jitter_and_heals_on_clean_resume(tmp_path,
+                                                            monkeypatch):
+    """The tentpole round-trip: a jittery clock condemns points (recorded,
+    not dropped), a resume under a clean clock re-measures EXACTLY those
+    points, and the healed curve is identical to the undisturbed one."""
+    monkeypatch.setenv("REPRO_SYNTH_MEASURE", "1e-3")
+    monkeypatch.setenv("REPRO_SYNTH_JITTER", "0.6")
+    path = str(tmp_path / "q.jsonl")
+    policy = QualityPolicy(max_spread=0.15)
+    camp = _quality_campaign(path, policy)
+    res = camp.sweep_mode(_region("qr"), "fp_add32")
+    quar = camp.store.quarantined_ks("qr", "fp_add32")
+    assert quar, "deterministic jitter at amp 0.6 must condemn some ks"
+    ps = camp.store.pair_status("qr", "fp_add32")
+    assert ps.quarantined == quar and ps.complete
+    # every measured point carries a quality record and its spread
+    qrecs = camp.store.quality[("qr", "fp_add32")]
+    assert set(qrecs) == set(res.curve.ks)
+    assert all(rec["spread"] is not None for rec in qrecs.values())
+    camp.store.close()
+
+    monkeypatch.delenv("REPRO_SYNTH_JITTER")
+    absorption_mod.reset_synth_state()
+    camp2 = _quality_campaign(path, policy)
+    res2 = camp2.sweep_mode(_region("qr"), "fp_add32")
+    # only the condemned points re-measured; fresh valid records supersede
+    assert camp2.stats.measured == len(quar)
+    assert camp2.store.quarantined_ks("qr", "fp_add32") == ()
+    # rep 0 is always the exact model time, so the healed curve is
+    # byte-identical to the jittered one (and to an undisturbed run)
+    assert res2.curve.ks == res.curve.ks and res2.curve.ts == res.curve.ts
+    camp2.store.close()
+
+    # a third open replays with zero measurements — the pair is clean now
+    camp3 = _quality_campaign(path, policy)
+    camp3.sweep_mode(_region("qr"), "fp_add32")
+    assert camp3.stats.measured == 0
+    camp3.store.close()
+
+
+def test_classify_campaign_does_not_heal(tmp_path, monkeypatch):
+    """heal_quarantined=False (the fleet finalize path) must replay the
+    stored curve as-is — classification never measures behind the gate."""
+    monkeypatch.setenv("REPRO_SYNTH_MEASURE", "1e-3")
+    monkeypatch.setenv("REPRO_SYNTH_JITTER", "0.6")
+    path = str(tmp_path / "nf.jsonl")
+    policy = QualityPolicy(max_spread=0.15)
+    camp = _quality_campaign(path, policy)
+    camp.sweep_mode(_region("nh"), "fp_add32")
+    assert camp.store.quarantined_ks("nh", "fp_add32")
+    camp.store.close()
+    camp2 = Campaign(path, Controller(reps=2, verify_payload=False),
+                     quality=policy, heal_quarantined=False)
+    camp2.sweep_mode(_region("nh"), "fp_add32")
+    assert camp2.stats.measured == 0
+    assert camp2.store.quarantined_ks("nh", "fp_add32")   # still condemned
+    camp2.store.close()
+
+
+def test_sentinel_quarantines_only_the_drifted_span(tmp_path, monkeypatch):
+    """Mid-sweep interference: the interleaved k=0 sentinel detects a
+    baseline shift and condemns the span since the previous sentinel with
+    reason drift_span — earlier spans stay valid."""
+    monkeypatch.setenv("REPRO_SYNTH_MEASURE", "1e-3")
+    # sens probe takes 2 samples; every sample after the 6th is 1.5x
+    monkeypatch.setenv("REPRO_SYNTH_DRIFT", "1.5@6")
+    policy = QualityPolicy(max_spread=0.15, sentinel_every=2,
+                           sentinel_tol=0.25)
+    camp = _quality_campaign(str(tmp_path / "d.jsonl"), policy)
+    camp.sweep_mode(_region("dr"), "fp_add32")
+    q = camp.store.quality[("dr", "fp_add32")]
+    spans = {k for k, rec in q.items()
+             if rec["verdict"] == VERDICT_QUARANTINE
+             and rec["reason"] == "drift_span"}
+    assert spans, "the sentinel must condemn the drifted span"
+    valid = {k for k, rec in q.items() if rec["verdict"] == VERDICT_VALID}
+    assert valid, "pre-drift points must stay valid"
+    assert max(valid & set(q)) is not None
+    # the done record carries the sentinel readings for forensics
+    done = camp.store.done[("dr", "fp_add32")]
+    assert any(not s["ok"] for s in done["sentinels"])
+    camp.store.close()
+
+
+def test_hung_kernel_becomes_timeout_quarantine_not_stuck(tmp_path,
+                                                          monkeypatch):
+    """The acceptance scenario: a kernel that hangs mid-sweep trips the
+    watchdog, lands as a recorded timeout quarantine with the pair left
+    INCOMPLETE, and a resume (hang cleared) finishes the pair."""
+    monkeypatch.setenv("REPRO_SYNTH_MEASURE", "1e-3")
+    monkeypatch.setenv("REPRO_SYNTH_HANG", "8")
+    path = str(tmp_path / "h.jsonl")
+    policy = QualityPolicy(watchdog_floor_s=0.1)
+    camp = _quality_campaign(path, policy)
+    t0 = time.monotonic()
+    res = camp.sweep_mode(_region("hg"), "fp_add32")
+    assert time.monotonic() - t0 < 30.0        # the sweep did not hang
+    assert 8 not in res.curve.ks               # no fabricated point
+    q = camp.store.quality[("hg", "fp_add32")]
+    assert q[8]["verdict"] == VERDICT_QUARANTINE
+    assert q[8]["reason"] == "timeout"
+    ps = camp.store.pair_status("hg", "fp_add32")
+    assert not ps.complete and 8 in ps.missing
+    camp.store.close()
+
+    absorption_mod.release_synth_hang()
+    time.sleep(0.05)                           # let the parked thread drain
+    absorption_mod.reset_synth_state()
+    monkeypatch.delenv("REPRO_SYNTH_HANG")
+    camp2 = _quality_campaign(path, policy)
+    res2 = camp2.sweep_mode(_region("hg"), "fp_add32")
+    assert 8 in res2.curve.ks
+    assert camp2.store.pair_status("hg", "fp_add32").complete
+    assert camp2.store.quarantined_ks("hg", "fp_add32") == ()
+    camp2.store.close()
+
+
+def test_first_point_timeout_raises_measure_timeout(tmp_path, monkeypatch):
+    """When even k=0 hangs there is no curve to return — the sweep raises
+    instead of fabricating one, but the timeout quarantine is recorded."""
+    monkeypatch.setenv("REPRO_SYNTH_MEASURE", "1e-3")
+    monkeypatch.setenv("REPRO_SYNTH_HANG", "0")
+    path = str(tmp_path / "h0.jsonl")
+    camp = _quality_campaign(path, QualityPolicy(watchdog_floor_s=0.1))
+    # pre-seed the sensitivity so the guarded sweep itself reaches k=0
+    camp.store.append({"kind": "sens", "region": "h0", "mode": "fp_add32",
+                       "value": 1.9})
+    with pytest.raises(MeasureTimeout, match="no curve"):
+        camp.sweep_mode(_region("h0"), "fp_add32")
+    assert camp.store.quality[("h0", "fp_add32")][0]["reason"] == "timeout"
+    camp.store.close()
+
+
+def test_sensitivity_probe_timeout_is_recorded_not_stuck(tmp_path,
+                                                         monkeypatch):
+    """A kernel that hangs on its very first call parks the SENSITIVITY
+    probe, before any sweep point exists — the watchdog floor still bounds
+    it, and the timeout lands as a recorded quarantine."""
+    monkeypatch.setenv("REPRO_SYNTH_MEASURE", "1e-3")
+    monkeypatch.setenv("REPRO_SYNTH_HANG", "0")
+    camp = _quality_campaign(str(tmp_path / "hs.jsonl"),
+                             QualityPolicy(watchdog_floor_s=0.1))
+    t0 = time.monotonic()
+    with pytest.raises(MeasureTimeout):
+        camp.sweep_mode(_region("hs"), "fp_add32")
+    assert time.monotonic() - t0 < 30.0
+    assert camp.store.quality[("hs", "fp_add32")][0]["reason"] == "timeout"
+    camp.store.close()
+
+
+# ---------------------------------------------------------------------------
+# classifier evidence
+# ---------------------------------------------------------------------------
+
+def test_apply_quality_evidence_downgrades_then_refuses():
+    rep = classify({"fp_add32": 1.0, "hbm_stream": 30.0})
+    base_conf = rep.confidence
+    # one quarantined point: downgrade, label kept
+    down = apply_quality_evidence(rep, {
+        "fp_add32": {"points": 8, "quarantined": 1,
+                     "reasons": {"spread": 1}},
+        "hbm_stream": {"points": 8, "quarantined": 0, "reasons": {}}})
+    assert down.label == rep.label
+    assert down.confidence == pytest.approx(base_conf * 0.6)
+    assert down.quality is not None and len(down.quality) == 2
+    # majority-quarantined: the label is refused outright
+    refused = apply_quality_evidence(rep, {
+        "fp_add32": {"points": 8, "quarantined": 6,
+                     "reasons": {"spread": 4, "timeout": 2}}})
+    assert refused.label == "unreliable"
+    assert refused.confidence == 0.0
+    assert "fp_add32" in refused.explanation
+    assert "spread" in refused.explanation
+    # str() surfaces the per-mode cleanliness tally
+    assert "quality:" in str(down)
+
+
+def test_apply_quality_evidence_empty_is_identity():
+    rep = classify({"fp_add32": 1.0, "hbm_stream": 30.0})
+    assert apply_quality_evidence(rep, {}) is rep

@@ -11,7 +11,11 @@ Pinned properties:
   * LAYOUT EQUIVALENCE — the same record stream written as a legacy single
     file and as a segmented store (arbitrary session splits, optional torn
     tail, meta conflicts included) flattens to byte-identical canonical
-    output through ``merge_stores(..., incremental=False)``.
+    output through ``merge_stores(..., incremental=False)``;
+  * QUALITY EVIDENCE — measurement-quality records ride every property
+    above (same (region, mode, k) last-wins supersede as points), a meta
+    conflict discards them with the rest of the pair's measured evidence,
+    and ``compact_store`` preserves the quality view in both layouts.
 """
 try:
     import hypothesis
@@ -41,7 +45,20 @@ sens = st.fixed_dictionaries({
     "mode": st.sampled_from(MODES),
     "value": st.floats(0.1, 10.0, allow_nan=False, allow_infinity=False),
 })
-records = st.lists(st.one_of(point, sens), max_size=24)
+quality = st.fixed_dictionaries({
+    "kind": st.just("quality"),
+    "region": st.sampled_from(REGIONS),
+    "mode": st.sampled_from(MODES),
+    "k": st.integers(0, 6),
+    "verdict": st.sampled_from(["valid", "quarantine"]),
+    "reason": st.sampled_from([None, "timer_floor", "spread", "drift_span",
+                               "timeout"]),
+    "spread": st.one_of(st.none(), st.floats(0.0, 2.0, allow_nan=False,
+                                             allow_infinity=False)),
+    "reps": st.sampled_from([2, 5]),
+    "detail": st.just(None),
+})
+records = st.lists(st.one_of(point, sens, quality), max_size=24)
 
 
 def _write(path, recs):
@@ -96,15 +113,18 @@ def test_later_records_supersede_within_a_store(recs):
         _write(path, recs)
         store = _load(path)
         # the in-memory view must equal a left-to-right last-wins fold
-        want_points, want_sens = {}, {}
+        want_points, want_sens, want_quality = {}, {}, {}
         for rec in recs:
             key = (rec["region"], rec["mode"])
             if rec["kind"] == "point":
                 want_points.setdefault(key, {})[rec["k"]] = rec["t"]
+            elif rec["kind"] == "quality":
+                want_quality.setdefault(key, {})[rec["k"]] = rec
             else:
                 want_sens[key] = rec["value"]
         assert store.points == want_points
         assert store.sens == want_sens
+        assert store.quality == want_quality
 
 
 meta = st.fixed_dictionaries({
@@ -114,7 +134,7 @@ meta = st.fixed_dictionaries({
     "reps": st.sampled_from([2, 3]),      # two settings -> real conflicts
     "compile_once": st.just(True),
 })
-mixed_records = st.lists(st.one_of(point, sens, meta), max_size=24)
+mixed_records = st.lists(st.one_of(point, sens, meta, quality), max_size=24)
 
 
 @hypothesis.given(mixed_records, st.lists(st.integers(0, 24), max_size=3),
@@ -166,9 +186,57 @@ def test_merge_replay_is_union_when_metas_agree(recs_a, recs_b):
         assert not stats.conflicts          # no metas at all -> no conflicts
         merged = _load(m)
         va, vb = _load(a), _load(b)
-        want = {}
+        want, want_q = {}, {}
         for src in (va, vb):                # b streams later: b wins ties
             for key, per_k in src.points.items():
                 want.setdefault(key, {}).update(per_k)
+            for key, per_k in src.quality.items():
+                want_q.setdefault(key, {}).update(per_k)
         assert merged.points == want
         assert merged.sens == {**va.sens, **vb.sens}
+        assert merged.quality == want_q
+
+
+@hypothesis.given(st.lists(quality, min_size=1, max_size=12))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_meta_conflict_discards_quality_evidence(qrecs):
+    """Quality records are settings-scoped: a meta conflict that drops a
+    pair's points must drop its quality evidence too, both across stores
+    (merge) and within one store's append order."""
+    qrecs = [dict(r, region="rA", mode="m1") for r in qrecs]
+    meta2 = {"kind": "meta", "region": "rA", "mode": "m1", "reps": 2,
+             "compile_once": True}
+    meta3 = dict(meta2, reps=3)
+    with tempfile.TemporaryDirectory() as d:
+        a, b = os.path.join(d, "a.jsonl"), os.path.join(d, "b.jsonl")
+        _write(a, [meta2] + qrecs)
+        _write(b, [meta3])
+        m = os.path.join(d, "m.jsonl")
+        stats = merge_stores(m, [a, b])
+        assert stats.conflicts == [("rA", "m1")]
+        assert _load(m).quality == {}
+        c = os.path.join(d, "c.jsonl")
+        _write(c, [meta2] + qrecs + [meta3])
+        assert _load(c).quality == {}
+
+
+@hypothesis.given(mixed_records, st.booleans())
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_compaction_preserves_the_quality_view(recs, segmented):
+    """``compact_store`` drops superseded lines, never surviving evidence:
+    the points/sens/quality views are identical before and after, in both
+    the legacy and the segmented layout."""
+    from repro.core import compact_store
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "s.jsonl")
+        store = CampaignStore(path, segmented=segmented)
+        for rec in recs:
+            store.append(rec)
+        store.close()
+        before = _load(path)
+        compact_store(path)
+        after = _load(path)
+        assert after.points == before.points
+        assert after.sens == before.sens
+        assert after.quality == before.quality
