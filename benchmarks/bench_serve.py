@@ -1,0 +1,160 @@
+"""Serving benchmark: paged vs dense engine throughput, probe overhead.
+
+Drives the ``quick`` synthetic load mix (``repro.serve.load.MIXES``) through
+``ServeEngine`` twice — once on the per-slot dense KV layout, once on the
+paged page-pool layout — and reports tokens/sec for both plus the speedup.
+The paged engine admits each wave with ONE batched prefill call and keeps
+per-tick bookkeeping on-device with a single host sync, so it must not lose
+to the dense engine on this mix; the harness exits nonzero if it does.
+
+The probe-overhead section answers "what does wrapping the serve cells in
+the noise harness cost when no noise is injected?": the engine's decode tick
+is timed clean and wrapped (``repro.core.injector.inject`` at k=0), on the
+same operands the ``"serve"`` fleet kind probes.
+
+Writes ``experiments/bench/BENCH_serve.json``. Imports stay lazy so
+``python -m benchmarks.bench_serve --help`` works without JAX.
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+
+from benchmarks.common import banner, save, timer
+
+DEFAULT_ARCH = "gemma_2b"
+
+
+def _time_fn(fn, args, *, reps: int) -> float:
+    """Median wall-clock of ``fn(*args)`` after one warmup/compile call."""
+    import jax
+
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        with timer() as t:
+            jax.block_until_ready(fn(*args))
+        ts.append(t.dt)
+    return statistics.median(ts)
+
+
+def _load_mix(arch: str, mix: str, *, paged: bool, slots: int,
+              max_seq: int, seed: int) -> dict:
+    """One load-harness run; returns the engine report + latency stats."""
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models.model import build
+    from repro.serve import MIXES, ServeEngine
+    from repro.serve.load import run_load, sample_requests
+
+    cfg = get_smoke_config(arch)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(api, params, n_slots=slots, max_seq=max_seq,
+                      paged=paged, seed=seed)
+    spec = MIXES[mix]
+    rep = run_load(eng, spec)
+    rep["n_requests"] = len(sample_requests(spec, cfg.vocab_size, max_seq))
+    return rep
+
+
+def bench_throughput(arch: str, mix: str, *, slots: int, max_seq: int,
+                     seed: int) -> dict:
+    """Paged vs dense tokens/sec on the same request stream."""
+    out: dict = {"mix": mix, "slots": slots, "max_seq": max_seq}
+    for layout, paged in (("dense", False), ("paged", True)):
+        rep = _load_mix(arch, mix, paged=paged, slots=slots,
+                        max_seq=max_seq, seed=seed)
+        out[layout] = {
+            "total_tok_s": round(rep["total_tok_s"], 1),
+            "decode_tok_s": round(rep["decode_tok_s"], 1),
+            "prefill_calls": rep["prefill_calls"],
+            "ticks": rep["ticks"],
+            "wall_s": round(rep["wall_s"], 3),
+            "requests_done": rep["requests_done"],
+            "latency_ticks_p50": rep["latency_ticks_p50"],
+            "latency_ticks_p95": rep["latency_ticks_p95"],
+        }
+        if paged:
+            out[layout]["mean_pool_occupancy"] = round(
+                rep["mean_pool_occupancy"], 3)
+        print(f"  [{layout:5s} {out[layout]['requests_done']} request(s): "
+              f"{out[layout]['total_tok_s']:.1f} tok/s total, "
+              f"{out[layout]['prefill_calls']} prefill call(s), "
+              f"{out[layout]['ticks']} tick(s)]")
+    out["speedup"] = round(out["paged"]["total_tok_s"]
+                           / max(out["dense"]["total_tok_s"], 1e-9), 2)
+    print(f"  paged/dense speedup: {out['speedup']:.2f}x")
+    return out
+
+
+def bench_probe_overhead(arch: str, *, slots: int, prompt: int,
+                         reps: int) -> dict:
+    """Clean vs noise-wrapped (k=0) timings of the serve prefill/tick cells
+    — the fixed cost the ``"serve"`` probe harness adds before any noise."""
+    import jax
+
+    from repro.core.injector import inject
+    from repro.core.noise import NoiseScale, make_modes
+    from repro.serve.load import _build_engine_for_probe
+
+    mode = make_modes(NoiseScale(hbm_mib=32, chase_len=1 << 20))["fp_add32"]
+    state = mode.make_state(jax.random.PRNGKey(0))
+    eng = _build_engine_for_probe(arch, slots=slots, prompt=prompt,
+                                  max_new=8, page_size=16)
+    prefill_fn, prefill_args, tick_fn, tick_args = eng.probe_cells()
+    out: dict = {}
+    for name, fn, args in (("prefill", prefill_fn, prefill_args),
+                           ("decode_tick", tick_fn, tick_args)):
+        t_clean = _time_fn(jax.jit(fn), args, reps=reps)
+        t_wrapped = _time_fn(jax.jit(inject(fn, mode, 0)), (state, *args),
+                             reps=reps)
+        out[name] = {"clean_ms": round(t_clean * 1e3, 4),
+                     "wrapped_k0_ms": round(t_wrapped * 1e3, 4),
+                     "overhead_pct": round(
+                         100.0 * (t_wrapped - t_clean) / max(t_clean, 1e-9),
+                         1)}
+        print(f"  [{name}: clean {out[name]['clean_ms']:.3f}ms vs wrapped "
+              f"k=0 {out[name]['wrapped_k0_ms']:.3f}ms "
+              f"({out[name]['overhead_pct']:+.1f}%)]")
+    return out
+
+
+def run(arch: str = DEFAULT_ARCH, *, quick: bool = True) -> dict:
+    banner(f"serve benchmark — paged vs dense on {arch}")
+    mix = "quick" if quick else "chat"
+    slots, max_seq = (4, 64) if quick else (8, 256)
+    out = {"arch": arch, "quick": quick,
+           "throughput": bench_throughput(arch, mix, slots=slots,
+                                          max_seq=max_seq, seed=0),
+           "probe_overhead": bench_probe_overhead(
+               arch, slots=2, prompt=16, reps=5 if quick else 20)}
+    if out["throughput"]["speedup"] < 1.0:
+        raise SystemExit(
+            "bench_serve: paged engine LOST to dense on the "
+            f"{mix!r} mix: {out['throughput']['speedup']:.2f}x")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.bench_serve",
+        description="serving-engine benchmark: paged vs dense tokens/sec on "
+                    "a synthetic load mix, probe wrapper overhead at k=0 "
+                    "-> experiments/bench/BENCH_serve.json")
+    ap.add_argument("--arch", default=DEFAULT_ARCH)
+    ap.add_argument("--quick", action="store_true",
+                    help="small mix / few reps (the CI serve-smoke "
+                         "configuration; also the default)")
+    ap.add_argument("--full", action="store_true",
+                    help="chat mix, more slots, longer sequences")
+    args = ap.parse_args(argv)
+    out = run(args.arch, quick=not args.full)
+    save("BENCH_serve", out)
+    print("wrote experiments/bench/BENCH_serve.json")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

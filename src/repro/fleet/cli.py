@@ -126,6 +126,8 @@ def _build_plan(args) -> "object":
     if bool(args.pallas) == bool(args.arch):
         raise SystemExit("plan: give exactly one of --pallas KERNEL or "
                          "--arch ARCH")
+    if args.serve and not args.arch:
+        raise SystemExit("plan: --serve needs --arch ARCH")
     if args.pallas:
         from repro.kernels.region import KERNEL_MODES, SIZE_DEFAULT
         if args.pallas not in KERNEL_MODES:
@@ -142,6 +144,14 @@ def _build_plan(args) -> "object":
             params["nnz_per_row"] = args.nnz_per_row
         spec = TargetSpec("pallas", tuple(modes), params)
         default_name = f"fleet_{args.pallas}"
+    elif args.serve:
+        from repro.launch.probe import DEFAULT_GRAPH_MODES
+        modes = (_csv(args.modes, str) if args.modes
+                 else list(DEFAULT_GRAPH_MODES))
+        spec = TargetSpec("serve", tuple(modes),
+                          {"arch": args.arch, "slots": args.batch,
+                           "prompt": args.seq, "max_new": args.max_new})
+        default_name = f"fleet_{args.arch}_serve"
     else:
         from repro.launch.probe import DEFAULT_GRAPH_MODES
         modes = (_csv(args.modes, str) if args.modes
@@ -488,6 +498,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="spmxv nonzeros per row")
     pp.add_argument("--arch", default=None,
                     help="model-step target architecture")
+    pp.add_argument("--serve", action="store_true",
+                    help="with --arch: plan a 'serve' target (the paged "
+                         "serving engine's prefill + decode regions; --seq "
+                         "is the prompt length, --batch the slot count)")
+    pp.add_argument("--max-new", type=int, default=8,
+                    help="decode budget per request of a --serve target")
     pp.add_argument("--kind", default="train", choices=("train", "decode"),
                     help="model-step flavour to probe")
     pp.add_argument("--seq", type=int, default=128,

@@ -53,7 +53,11 @@ class TargetSpec:
       * "pallas" — params {kernel, sizes[, qs, ...spec kwargs]}; resolves via
         ``pallas_family`` to one RegionTarget per size/q;
       * "step"   — params {arch[, kind, seq, batch]}; resolves via
-        ``repro.launch.probe.build_step_region`` to one model-step region.
+        ``repro.launch.probe.build_step_region`` to one model-step region;
+      * "serve"  — params {arch[, slots, prompt, max_new, page_size]};
+        resolves via ``repro.serve.load.build_serve_regions`` to TWO regions
+        of one paged serving workload: the engine's batched prefill and its
+        decode tick, probed (and classified) separately.
     """
     kind: str
     modes: tuple[str, ...]
@@ -86,16 +90,22 @@ class TargetSpec:
             if bad:
                 raise PlanError(f"kernel {kernel!r} supports modes "
                                 f"{KERNEL_MODES[kernel]}, not {bad}")
-        elif self.kind == "step":
+        elif self.kind in ("step", "serve"):
             if not self.params.get("arch"):
-                raise PlanError("step target needs an 'arch'")
+                raise PlanError(f"{self.kind} target needs an 'arch'")
             from repro.core.noise import make_modes
             bad = [m for m in self.modes if m not in make_modes()]
             if bad:
                 raise PlanError(f"unknown graph-level mode(s) {bad}")
+            if self.kind == "serve":
+                for key in ("slots", "prompt", "max_new", "page_size"):
+                    v = self.params.get(key)
+                    if v is not None and (not isinstance(v, int) or v < 1):
+                        raise PlanError(f"serve target {key}={v!r}: want a "
+                                        "positive int")
         else:
             raise PlanError(f"unknown target kind {self.kind!r}; "
-                            "one of ['pallas', 'step']")
+                            "one of ['pallas', 'step', 'serve']")
 
     def _extra_params(self) -> dict:
         return {k: v for k, v in self.params.items()
@@ -108,8 +118,15 @@ class TargetSpec:
             return pallas_family(self.params["kernel"], self.params["sizes"],
                                  qs=self.params.get("qs"), backend=backend,
                                  **self._extra_params())
-        from repro.launch.probe import build_step_region
         p = self.params
+        if self.kind == "serve":
+            from repro.serve.load import build_serve_regions
+            return build_serve_regions(
+                p["arch"], list(self.modes), slots=int(p.get("slots", 4)),
+                prompt=int(p.get("prompt", 32)),
+                max_new=int(p.get("max_new", 8)),
+                page_size=int(p.get("page_size", 16)))
+        from repro.launch.probe import build_step_region
         return [build_step_region(p["arch"], p.get("kind", "train"),
                                   list(self.modes), seq=int(p.get("seq", 128)),
                                   batch=int(p.get("batch", 4)))]
@@ -123,8 +140,13 @@ class TargetSpec:
             return family_names(self.params["kernel"], self.params["sizes"],
                                 qs=self.params.get("qs"),
                                 **self._extra_params())
-        from repro.configs import get_smoke_config   # a dataclass, no jax
         p = self.params
+        if self.kind == "serve":
+            from repro.serve.load import serve_region_names
+            return serve_region_names(p["arch"],
+                                      slots=int(p.get("slots", 4)),
+                                      prompt=int(p.get("prompt", 32)))
+        from repro.configs import get_smoke_config   # a dataclass, no jax
         return [f"{get_smoke_config(p['arch']).name}_{p.get('kind', 'train')}"
                 f"_s{int(p.get('seq', 128))}_b{int(p.get('batch', 4))}"]
 

@@ -18,6 +18,13 @@ executable per mode instead of one per sweep point):
         --kind train --modes fp_add32,vmem_ld,hbm_stream \
         [--store PATH] [--fresh] [--workers N] [--no-compile-once]
 
+Serve mode probes the paged serving engine as TWO regions — the batched
+prefill and the decode tick — under one campaign, so the two phases of one
+workload classify separately (docs/methodology.md §Serving):
+
+    PYTHONPATH=src python -m repro.launch.probe --serve --arch gemma-2b \
+        --seq 16 --batch 4 [--modes fp_add32,hbm_stream] [--store PATH]
+
 Pallas mode probes one of the real kernels (matmul / spmxv / attention /
 probe; interpret mode off-TPU) through the SAME campaign machinery — the
 noise quantity is a runtime operand of the kernel itself, so the whole
@@ -170,6 +177,35 @@ def measured_probe(arch: str, kind: str, modes: list[str], *, seq: int,
                       f"batch={batch}")
 
 
+def serve_probe(arch: str, modes: list[str], *, slots: int, prompt: int,
+                max_new: int, reps: int, store: str | None = None,
+                fresh: bool = False, workers: int = 1,
+                compile_once: bool = True,
+                shard: Optional[tuple[int, int]] = None,
+                expect_no_measure: bool = False,
+                audit: str = "gate", quality: str = "gate") -> None:
+    """Measured probe of the paged serving engine (smoke config, host
+    backend): one plan, TWO regions — the engine's batched prefill and its
+    decode tick (``repro.serve.load.build_serve_regions``) — so prefill and
+    decode classify separately under the same campaign store."""
+    from repro.core.noise import make_modes
+
+    unknown = [m for m in modes if m not in make_modes()]
+    if unknown:
+        raise SystemExit(f"unknown mode(s) {unknown}; available: "
+                         f"{', '.join(sorted(make_modes()))}")
+    from repro.fleet.plan import TargetSpec
+
+    spec = TargetSpec("serve", tuple(modes),
+                      {"arch": arch, "slots": slots, "prompt": prompt,
+                       "max_new": max_new})
+    _run_adhoc(spec, reps=reps, store=store, fresh=fresh, workers=workers,
+               compile_once=compile_once, shard=shard,
+               expect_no_measure=expect_no_measure, audit=audit,
+               quality=quality,
+               header=f"serve probe: {arch} slots={slots} prompt={prompt}")
+
+
 def pallas_probe(kernel: str, modes: Optional[list[str]], *, reps: int,
                  n: Optional[int] = None, store: str | None = None,
                  fresh: bool = False, workers: int = 1,
@@ -318,6 +354,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "REPRO_FLEET_EXPECT_DIGEST/REPRO_FLEET_HOST "
                          "handshake env); without, run the whole plan "
                          "in-process, classify, and write the report")
+    ap.add_argument("--serve", action="store_true",
+                    help="probe the paged serving engine instead of a bare "
+                         "model step: two regions (batched prefill + decode "
+                         "tick) under one campaign; --seq is the prompt "
+                         "length, --batch the slot count")
+    ap.add_argument("--max-new", type=int, default=8,
+                    help="decode budget per request of the probed serve "
+                         "workload (--serve)")
     ap.add_argument("--pallas", default=None,
                     metavar="{matmul,spmxv,attention,probe}",
                     help="probe a Pallas kernel region instead of a model "
@@ -386,6 +430,7 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         # user believe they changed the measurement settings
         overridden = [flag for flag, given in (
             ("--arch", args.arch), ("--pallas", args.pallas),
+            ("--serve", args.serve),
             ("--analytic", args.analytic), ("--modes", modes),
             ("--store", args.store), ("--reps", args.reps != 3),
             ("--workers", args.workers != 1),
@@ -401,8 +446,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                    audit=args.audit, quality=args.quality)
         return
     if args.pallas is not None:
-        if args.analytic:
-            raise SystemExit("--pallas and --analytic are mutually exclusive")
+        if args.analytic or args.serve:
+            raise SystemExit("--pallas excludes --analytic and --serve")
         pallas_probe(args.pallas, modes, reps=args.reps, n=args.pallas_n,
                      store=args.store, fresh=args.fresh,
                      workers=args.workers,
@@ -413,6 +458,17 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     if args.arch is None:
         raise SystemExit("--arch is required unless --pallas or --plan "
                          "is given")
+    if args.serve:
+        if args.analytic:
+            raise SystemExit("--serve and --analytic are mutually exclusive")
+        serve_probe(args.arch, modes or list(DEFAULT_GRAPH_MODES),
+                    slots=args.batch, prompt=args.seq, max_new=args.max_new,
+                    reps=args.reps, store=args.store, fresh=args.fresh,
+                    workers=args.workers,
+                    compile_once=not args.no_compile_once, shard=shard,
+                    expect_no_measure=args.expect_no_measure,
+                    audit=args.audit, quality=args.quality)
+        return
     if args.analytic:
         if shard is not None:
             raise SystemExit("--shard applies to measured mode only "

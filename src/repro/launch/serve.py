@@ -1,4 +1,5 @@
-"""Serving launcher: batched generation with continuous batching.
+"""Serving launcher: batched generation with continuous batching over the
+paged KV-cache pool (``--dense`` forces the per-slot dense layout).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
         --requests 8 --slots 4 --max-new 16
@@ -20,6 +21,9 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense (non-paged) cache layout")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
@@ -31,7 +35,9 @@ def main() -> None:
     api = build(cfg)
     params = api.init(jax.random.PRNGKey(0))
     eng = ServeEngine(api, params, n_slots=args.slots, max_seq=args.max_seq,
-                      temperature=args.temperature)
+                      temperature=args.temperature,
+                      page_size=args.page_size,
+                      paged=False if args.dense else None)
 
     rng = np.random.RandomState(0)
     reqs = []
@@ -44,8 +50,12 @@ def main() -> None:
     eng.run(max_ticks=args.requests * (args.max_new + 4))
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.out) for r in reqs)
-    print(f"{len(reqs)} requests on {args.slots} slots -> {n_tok} tokens "
-          f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
+    layout = "paged" if eng.paged else "dense"
+    print(f"{len(reqs)} requests on {args.slots} slots ({layout}) -> "
+          f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
+    rep = eng.report()
+    print(f"  prefill calls: {rep['prefill_calls']}, mean pool occupancy: "
+          f"{rep['mean_pool_occupancy']:.2f}")
     for r in reqs[:4]:
         print(f"  req {r.uid}: prompt={r.prompt[:6]}... out={r.out[:8]}... "
               f"done={r.done}")

@@ -5,6 +5,17 @@ repro.kernels.flash_attention is the TPU-optimized path).
 
 Cache layout: k, v are (B, Kh, S, hd). Ring caches (sliding window) add
 ``kpos`` (S,) holding the absolute position stored in each slot (-1 = empty).
+
+Paged layout (serving): one pool of fixed-size KV pages shared by every slot
+— ``kp``/``vp`` are (P, Kh, page, hd) — plus a per-slot int32 page table
+(B, max_pages) mapping logical page j of slot b to a pool page id. Logical
+position t of slot b lives at pool[table[b, t // page], :, t % page]. Every
+table entry must be a valid pool index; the serving engine points unassigned
+entries at a dedicated trash page, so the attention code needs no sentinel
+handling. Writes land on pages owned by exactly one slot (or the trash
+page, which is never read), and reads gather a slot's pages in logical
+order — so the paged softmax sees the same keys, in the same order, as the
+dense (B, Kh, S, hd) layout and the two are numerically identical.
 """
 from __future__ import annotations
 
@@ -304,19 +315,63 @@ def init_cache(cfg, batch, max_seq, *, window=None):
     return cache
 
 
-def cache_logical():
+def cache_logical(*, paged=False):
+    if paged:
+        return {"kp": ("cache_pages", "cache_kv_heads", None, None),
+                "vp": ("cache_pages", "cache_kv_heads", None, None)}
     return {"k": ("cache_batch", "cache_kv_heads", "cache_seq", None),
             "v": ("cache_batch", "cache_kv_heads", "cache_seq", None)}
 
 
-def attn_decode(p, cfg, x, cache, pos):
+def init_paged_cache(cfg, n_pages, page_size):
+    """Allocate the shared KV page pool: {"kp","vp"} (P, Kh, page, hd).
+
+    No batch dimension — slots share the pool through a page table (see the
+    module docstring). Paged caches support full attention only (window=0);
+    a ring would need per-slot wrap bookkeeping the table doesn't carry.
+    """
+    if cfg.window:
+        raise NotImplementedError("paged KV cache needs window=0")
+    kh, hd = cfg.n_kv_heads, cfg.head_dim
+    z = jnp.zeros((n_pages, kh, page_size, hd), cdtype_of(cfg))
+    return {"kp": z, "vp": z}
+
+
+def paged_prefill_scatter(cache, kv, page_rows):
+    """Scatter a batched-prefill KV into the page pool.
+
+    kv: {"k","v"} (B, Kh, Sp, hd) from ``attn_train(return_cache=True)``;
+    Sp must be a multiple of the page size. page_rows (B, Sp // page) int32
+    pool page ids; duplicate ids are only legal for trash pages (rows of a
+    padded, non-admitted batch entry) since the scatter order is undefined.
+    """
+    kp = cache["kp"]
+    _, kh, page, hd = kp.shape
+    B, _, Sp, _ = kv["k"].shape
+    assert Sp % page == 0, (Sp, page)
+    npp = Sp // page
+    flat = page_rows.reshape(B * npp)
+
+    def scat(pool, x):  # x (B,Kh,Sp,hd) -> pages (B*npp,Kh,page,hd)
+        xb = x.reshape(B, kh, npp, page, hd).transpose(0, 2, 1, 3, 4)
+        return pool.at[flat].set(xb.reshape(B * npp, kh, page, hd))
+
+    return dict(cache, kp=scat(kp, kv["k"]), vp=scat(cache["vp"], kv["v"]))
+
+
+def attn_decode(p, cfg, x, cache, pos, *, page_table=None):
     """One-token decode. x (B,1,D).
 
     pos: scalar int32 (all slots aligned) or (B,) int32 per-slot positions
     (continuous batching; full cache only). Full cache: write at slot
     ``pos``. Ring cache (has "kpos"): write at ``pos % S`` and mask by
-    stored positions.
+    stored positions. Paged cache (has "kp"): per-slot positions plus a
+    (B, max_pages) ``page_table`` are required.
     """
+    if "kp" in cache:
+        if pos.ndim != 1 or page_table is None:
+            raise ValueError("paged decode needs pos (B,) and a page_table")
+        return _attn_decode_paged(p, cfg, x, cache, pos, page_table)
     is_ring = "kpos" in cache
     S = cache["k"].shape[2]
     if pos.ndim == 1:
@@ -369,6 +424,47 @@ def _attn_decode_vec(p, cfg, x, cache, pos):
         keep &= pos[:, None] - kidx[None, :] < cfg.window
 
     kf, vf = _repeat_kv(cfg, ck), _repeat_kv(cfg, cv)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    s = jnp.einsum("bhqk,bhtk->bhqt", q.astype(jnp.float32) * scale,
+                   kf.astype(jnp.float32))
+    s = jnp.where(keep[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqt,bhtk->bhqk", w, vf.astype(jnp.float32)).astype(x.dtype)
+    return _out_proj(p, cfg, out), new_cache
+
+
+def _attn_decode_paged(p, cfg, x, cache, pos, page_table):
+    """Paged per-slot decode: cache {"kp","vp"} (P,Kh,page,hd) pool;
+    page_table (B, max_pages) int32 pool page ids; pos (B,) positions.
+
+    Write: slot b's token lands at pool[table[b, pos//page], :, pos%page]
+    (a batched scatter — active slots own disjoint pages). Read: gather the
+    slot's pages in logical order into (B, Kh, max_pages*page, hd) and mask
+    exactly like ``_attn_decode_vec`` — same keys, same order, so the two
+    layouts agree numerically.
+    """
+    kp, vp = cache["kp"], cache["vp"]
+    _, kh, page, hd = kp.shape
+    maxp = page_table.shape[1]
+    positions = pos[:, None].astype(jnp.int32)                 # (B,1)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+
+    pids = jnp.take_along_axis(page_table, (pos // page)[:, None], axis=1)
+    pids = pids[:, 0]                                          # (B,)
+    offs = pos % page
+    ck = kp.at[pids, :, offs].set(k[:, :, 0, :])
+    cv = vp.at[pids, :, offs].set(v[:, :, 0, :])
+    new_cache = dict(cache, kp=ck, vp=cv)
+
+    B = pos.shape[0]
+    S = maxp * page
+    ks = ck[page_table].transpose(0, 2, 1, 3, 4).reshape(B, kh, S, hd)
+    vs = cv[page_table].transpose(0, 2, 1, 3, 4).reshape(B, kh, S, hd)
+
+    kidx = jnp.arange(S, dtype=jnp.int32)
+    keep = kidx[None, :] <= pos[:, None]                       # (B,S)
+
+    kf, vf = _repeat_kv(cfg, ks), _repeat_kv(cfg, vs)
     scale = 1.0 / math.sqrt(cfg.head_dim)
     s = jnp.einsum("bhqk,bhtk->bhqt", q.astype(jnp.float32) * scale,
                    kf.astype(jnp.float32))

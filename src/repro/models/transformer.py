@@ -64,9 +64,10 @@ def layer_fwd(p, cfg, h, positions, *, n_groups=1):
     return h + y, aux
 
 
-def layer_decode(p, cfg, h, cache, pos):
+def layer_decode(p, cfg, h, cache, pos, *, page_table=None):
     a, cache = attn.attn_decode(p["attn"], cfg,
-                                L.rmsnorm(p["ln1"], h, cfg.norm_eps), cache, pos)
+                                L.rmsnorm(p["ln1"], h, cfg.norm_eps), cache, pos,
+                                page_table=page_table)
     h = h + a
     x = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
     if _is_moe(cfg):
@@ -225,6 +226,68 @@ def lm_decode_step(params, cfg, cache, tokens, pos):
         hh = carry
         lp, c = xs
         hh, c = layer_decode(lp, cfg, hh, c, pos)
+        return hh, c
+
+    h, new_kv = jax.lax.scan(body, h, (params["layers"], cache["kv"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h, cfg)
+    return logits, {"kv": new_kv}
+
+
+# ---------------------------------------------------------------------------
+# Paged serving path (models/attention.py paged layout)
+# ---------------------------------------------------------------------------
+
+def lm_paged_decode_init(params, cfg, n_pages, page_size):
+    """Per-layer page pools stacked (L, P, Kh, page, hd). The page table is
+    NOT part of the cache: slot->page assignment is a host (engine) decision
+    and is passed into each decode step as a plain operand."""
+    del params
+    pool = attn.init_paged_cache(cfg, n_pages, page_size)
+    return {"kv": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), pool)}
+
+
+def lm_paged_cache_logical(cfg):
+    if cfg.window:
+        raise NotImplementedError("paged KV cache needs window=0")
+    kv = jax.tree.map(
+        lambda lg: (None,) + lg, attn.cache_logical(paged=True),
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return {"kv": kv}
+
+
+def lm_paged_prefill(params, cfg, batch, cache, page_rows):
+    """Batched prefill of a whole admission wave, scattered into the pool.
+
+    batch {"tokens": (B, Sp)} — B admitted prompts right-padded to a common
+    Sp (a multiple of the page size); page_rows (B, Sp // page) pool page
+    ids covering each prompt's padded extent (padding garbage lands on pages
+    the slot owns at positions beyond its length, masked until decode
+    overwrites them — non-admitted rows point every entry at a trash page).
+    Returns (logits (B, Sp, V), new cache).
+    """
+    logits, _aux, kv = lm_forward(params, cfg, batch, return_cache=True)
+
+    def scat(c, k, v):
+        return attn.paged_prefill_scatter(c, {"k": k, "v": v}, page_rows)
+
+    # one vmapped scatter over the layer axis: kv (L,B,Kh,Sp,hd) -> pool
+    new_kv = jax.vmap(scat)(cache["kv"], kv["k"], kv["v"])
+    return logits, {"kv": new_kv}
+
+
+def lm_paged_decode_step(params, cfg, cache, tokens, pos, page_table):
+    """tokens (B,1), pos (B,), page_table (B, max_pages) ->
+    (logits (B,1,V), new cache). The table is scan-invariant: every layer
+    reads the same slot->page mapping."""
+    h = L.embed(params["embed"], tokens, cfg)
+
+    def body(carry, xs):
+        hh = carry
+        lp, c = xs
+        hh, c = layer_decode(lp, cfg, hh, c, pos, page_table=page_table)
         return hh, c
 
     h, new_kv = jax.lax.scan(body, h, (params["layers"], cache["kv"]))

@@ -1,1 +1,12 @@
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
+
+_LOAD_EXPORTS = ("LoadSpec", "MIXES", "run_load", "sample_requests")
+
+
+def __getattr__(name):
+    # lazy: `python -m repro.serve.load` warns if the package __init__ has
+    # already imported the submodule eagerly
+    if name in _LOAD_EXPORTS:
+        from repro.serve import load
+        return getattr(load, name)
+    raise AttributeError(name)

@@ -1,0 +1,319 @@
+"""Paged KV-cache serving: dense/paged numerical equivalence, page-pool
+lifecycle (refill, retire, free/reuse, stall/resume), engine bookkeeping
+fixes (uid monotonicity, late submissions, declared-axis scatter), and the
+fleet's "serve" target kind end to end (classify + replay)."""
+import dataclasses
+import os
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import transformer as tf
+from repro.models.model import build
+from repro.serve import ServeEngine
+
+ARCH = "deepseek_coder_33b"
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_smoke_config(ARCH)
+    api = build(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def smoke_f32():
+    cfg = dataclasses.replace(get_smoke_config(ARCH),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    api = build(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+def _prompts(n, rng=None, lo=2, hi=10):
+    rng = rng or np.random.default_rng(7)
+    return [rng.integers(1, 64, size=int(rng.integers(lo, hi))).tolist()
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# dense vs paged numerical equivalence
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_logits_match_dense_f32(smoke_f32):
+    """Per-step decode logits agree with the dense cache path to f32
+    tolerance (the paged read is the same computation re-laid-out)."""
+    api, params = smoke_f32
+    cfg = api.cfg
+    page, max_seq = 4, 16
+    maxp = max_seq // page
+    B, sp = 2, 8
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        1, cfg.vocab_size, size=(B, sp)), jnp.int32)
+
+    _, cache_d = tf.lm_prefill(params, cfg, {"tokens": toks}, max_seq)
+    n_pages = B * maxp
+    cache_p = tf.lm_paged_decode_init(params, cfg, n_pages + 1, page)
+    npp = sp // page
+    # each slot's full worst case pre-assigned (the engine grows tables
+    # lazily, but attention only reads positions <= pos either way)
+    table = jnp.arange(B * maxp, dtype=jnp.int32).reshape(B, maxp)
+    _, cache_p = tf.lm_paged_prefill(params, cfg, {"tokens": toks}, cache_p,
+                                     table[:, :npp])
+
+    pos = jnp.full((B,), sp, jnp.int32)
+    cur = toks[:, -1:]
+    for _ in range(4):
+        lg_d, cache_d = api.decode_step(params, cache_d, cur, pos)
+        lg_p, cache_p = tf.lm_paged_decode_step(params, cfg, cache_p, cur,
+                                                pos, table)
+        np.testing.assert_allclose(np.asarray(lg_d[:, -1]),
+                                   np.asarray(lg_p[:, -1]),
+                                   atol=1e-5, rtol=1e-5)
+        cur = jnp.argmax(lg_d[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        pos = pos + 1
+
+
+def test_engine_dense_paged_tokens_equal(smoke):
+    """Greedy decode through the engine is token-identical across layouts,
+    at the configs' default (bfloat16) dtypes."""
+    api, params = smoke
+    prompts = _prompts(5)
+    outs = {}
+    for paged in (False, True):
+        eng = ServeEngine(api, params, n_slots=2, max_seq=64, paged=paged)
+        reqs = [eng.submit(p, max_new=6) for p in prompts]
+        eng.run()
+        assert all(r.done for r in reqs)
+        outs[paged] = [r.out for r in reqs]
+    assert outs[False] == outs[True]
+
+
+# ---------------------------------------------------------------------------
+# slot refill / retirement / page lifecycle
+# ---------------------------------------------------------------------------
+
+def test_slot_refill_matches_solo(smoke):
+    """More requests than slots: refilled slots produce the same tokens as
+    solo runs (no state leaks across waves), over multiple prefill waves."""
+    api, params = smoke
+    prompts = _prompts(5, np.random.default_rng(3))
+    news = [3, 7, 4, 6, 5]
+    solo = []
+    for p, n in zip(prompts, news):
+        eng = ServeEngine(api, params, n_slots=1, max_seq=64, paged=True)
+        r = eng.submit(p, max_new=n)
+        eng.run()
+        solo.append(r.out)
+    eng = ServeEngine(api, params, n_slots=2, max_seq=64, paged=True)
+    reqs = [eng.submit(p, max_new=n) for p, n in zip(prompts, news)]
+    eng.run()
+    assert eng.report()["prefill_calls"] >= 2     # multiple admission waves
+    for r, want in zip(reqs, solo):
+        assert r.done and r.out == want, (r.out, want)
+
+
+def test_eos_retirement(smoke):
+    api, params = smoke
+    prompt = [3, 1, 4, 1, 5]
+    ref = ServeEngine(api, params, n_slots=1, max_seq=64, paged=True)
+    r0 = ref.submit(prompt, max_new=8)
+    ref.run()
+    eos = r0.out[1]               # eos is only checked on decode ticks
+    stop = next(i for i in range(1, len(r0.out)) if r0.out[i] == eos)
+
+    eng = ServeEngine(api, params, n_slots=1, max_seq=64, paged=True,
+                      eos_id=eos)
+    r = eng.submit(prompt, max_new=20)
+    eng.run()
+    assert r.done and r.out == r0.out[:stop + 1]
+
+
+def test_max_new_and_max_seq_retirement(smoke):
+    api, params = smoke
+    eng = ServeEngine(api, params, n_slots=2, max_seq=32, paged=True,
+                      page_size=16)
+    short = eng.submit([1, 2, 3], max_new=3)
+    capped = eng.submit(list(range(1, 29)), max_new=100)   # hits max_seq
+    eng.run()
+    assert short.done and len(short.out) == 3
+    assert capped.done and len(capped.out) < 100
+    assert len(capped.prompt) + len(capped.out) <= 32
+
+
+def test_page_free_and_reuse(smoke):
+    api, params = smoke
+    eng = ServeEngine(api, params, n_slots=2, max_seq=32, paged=True,
+                      page_size=8)
+    assert eng.n_pages == 8
+    reqs = [eng.submit(p, max_new=4) for p in _prompts(2)]
+    eng.step()
+    first = {pid for pages in eng._slot_pages for pid in pages}
+    assert first and eng._trash not in first
+    assert eng.pool_occupancy() == pytest.approx(len(first) / eng.n_pages)
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert sorted(eng._free) == list(range(eng.n_pages))   # all freed
+    assert (eng._table_np == eng._trash).all()
+
+    reqs2 = [eng.submit(p, max_new=4) for p in _prompts(2)]
+    eng.step()
+    second = {pid for pages in eng._slot_pages for pid in pages}
+    assert first & second                                  # pages reused
+    eng.run()
+    assert all(r.done for r in reqs2)
+
+
+def test_stall_and_resume(smoke):
+    """A slot that cannot grow (empty free list) stalls with its state
+    intact and resumes — producing the same tokens — once pages free up."""
+    api, params = smoke
+    prompt = [5, 6, 7]
+    ref = ServeEngine(api, params, n_slots=2, max_seq=32, paged=True,
+                      page_size=4)
+    r_ref = ref.submit(prompt, max_new=10)
+    ref.run()
+
+    eng = ServeEngine(api, params, n_slots=2, max_seq=32, paged=True,
+                      page_size=4)
+    r = eng.submit(prompt, max_new=10)
+    eng.step()                                   # admit: 1 page in use
+    stolen, eng._free = eng._free, []            # pool "exhausted"
+    for _ in range(8):
+        eng.step()
+        if eng._stalled.any():
+            break
+    assert eng._stalled[0] and not eng.active[0] and not r.done
+    eng._free = stolen
+    eng.run()
+    assert r.done and r.out == r_ref.out
+
+
+def test_pool_exhaustion_raises(smoke):
+    """Every in-flight request stalled with nothing retirable is a
+    deadlock: the engine must fail loudly, not spin."""
+    api, params = smoke
+    eng = ServeEngine(api, params, n_slots=2, max_seq=16, paged=True,
+                      page_size=4, n_pages=4)
+    for p in _prompts(2, lo=2, hi=4):
+        eng.submit(p, max_new=14)               # both need all 4 pages
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        eng.run()
+
+
+def test_pool_below_single_request_rejected(smoke):
+    api, params = smoke
+    with pytest.raises(ValueError, match="pool smaller"):
+        ServeEngine(api, params, n_slots=1, max_seq=32, paged=True,
+                    page_size=4, n_pages=2)
+
+
+# ---------------------------------------------------------------------------
+# engine bookkeeping fixes
+# ---------------------------------------------------------------------------
+
+def test_uids_monotonic_never_reused(smoke):
+    api, params = smoke
+    eng = ServeEngine(api, params, n_slots=1, max_seq=64)
+    a = eng.submit([1, 2], max_new=2)
+    eng.run()
+    b = eng.submit([3, 4], max_new=2)            # queue drained and refilled
+    c = eng.submit([5, 6], max_new=2)
+    assert (a.uid, b.uid, c.uid) == (a.uid, a.uid + 1, a.uid + 2)
+
+
+def test_run_returns_late_and_stepped_completions(smoke):
+    """run() completions cover requests finished by manual step() calls and
+    requests submitted after a previous run — not a startup snapshot."""
+    api, params = smoke
+    eng = ServeEngine(api, params, n_slots=1, max_seq=64)
+    a = eng.submit([1, 2, 3], max_new=2)
+    while not a.done:
+        eng.step()
+    b = eng.submit([4, 5], max_new=2)
+    done = eng.run()
+    assert {r.uid for r in done} == {a.uid, b.uid}
+    assert eng.run() == []                       # drained
+
+
+def test_scatter_slot_respects_declared_axes():
+    """Only leaves whose cache_spec declares a "cache_batch" axis are
+    scattered, on THAT axis; shared leaves (no batch axis) pass through."""
+    spec = {"kv": (None, "cache_batch", "cache_seq"), "kpos": ("cache_seq",)}
+    fake = SimpleNamespace(api=SimpleNamespace(cache_spec=lambda: spec))
+    big = {"kv": jnp.zeros((2, 4, 6)), "kpos": jnp.arange(6.0)}
+    small = {"kv": jnp.ones((2, 1, 6)), "kpos": jnp.full((6,), 9.0)}
+    out = ServeEngine._scatter_slot(fake, big, small, 2)
+    kv = np.asarray(out["kv"])
+    assert (kv[:, 2] == 1).all() and kv.sum() == 12      # axis 1, slot 2 only
+    np.testing.assert_array_equal(np.asarray(out["kpos"]), np.arange(6.0))
+
+
+# ---------------------------------------------------------------------------
+# fleet "serve" target kind
+# ---------------------------------------------------------------------------
+
+def test_serve_plan_roundtrip_and_names(tmp_path):
+    from repro.fleet.plan import SweepPlan, TargetSpec
+
+    spec = TargetSpec("serve", ("fp_add32",),
+                      {"arch": ARCH, "slots": 2, "prompt": 8, "max_new": 4})
+    plan = SweepPlan(name="t", store=str(tmp_path / "s.jsonl"),
+                     targets=[spec], reps=1)
+    plan.validate()
+    names = spec.region_names()
+    assert len(names) == 2
+    assert any("prefill" in n for n in names)
+    assert any("decode" in n for n in names)
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    again = SweepPlan.load(path)
+    assert again.targets[0].kind == "serve"
+    assert again.digest() == plan.digest()
+    assert again.grid() == plan.grid()
+
+
+def test_serve_plan_validation_rejects_bad_params(tmp_path):
+    from repro.fleet.plan import PlanError, SweepPlan, TargetSpec
+
+    with pytest.raises(PlanError, match="slots"):
+        SweepPlan(name="t", store="s", targets=[
+            TargetSpec("serve", ("fp_add32",), {"arch": ARCH, "slots": 0})
+        ]).validate()
+    with pytest.raises(PlanError, match="arch"):
+        SweepPlan(name="t", store="s", targets=[
+            TargetSpec("serve", ("fp_add32",), {})   # arch missing
+        ]).validate()
+
+
+def test_serve_campaign_classifies_and_replays(tmp_path):
+    """The acceptance path: a fleet run over a "serve" plan classifies
+    prefill and decode as separate regions into a resumable store, and a
+    completed campaign replays with ZERO new measurements."""
+    from repro.fleet.executor import run_worker
+    from repro.fleet.plan import SweepPlan, TargetSpec
+
+    plan = SweepPlan(
+        name="serve-test", store=str(tmp_path / "serve.jsonl"),
+        targets=[TargetSpec("serve", ("fp_add32",),
+                            {"arch": "gemma_2b", "slots": 2, "prompt": 8,
+                             "max_new": 4})],
+        reps=1)
+    plan.validate()
+    reports, stats = run_worker(plan, fresh=True)
+    assert stats.measured > 0
+    names = sorted(reports)
+    assert len(names) == 2
+    assert any("prefill" in n for n in names)
+    assert any("decode" in n for n in names)
+    for rep in reports.values():
+        assert rep.bottleneck.label            # classified, not empty
+
+    reports2, stats2 = run_worker(plan, expect_no_measure=True)
+    assert stats2.measured == 0 and stats2.cached > 0
+    assert sorted(reports2) == names
