@@ -145,7 +145,9 @@ class TargetSpec:
             from repro.serve.load import serve_region_names
             return serve_region_names(p["arch"],
                                       slots=int(p.get("slots", 4)),
-                                      prompt=int(p.get("prompt", 32)))
+                                      prompt=int(p.get("prompt", 32)),
+                                      max_new=int(p.get("max_new", 8)),
+                                      page_size=int(p.get("page_size", 16)))
         from repro.configs import get_smoke_config   # a dataclass, no jax
         return [f"{get_smoke_config(p['arch']).name}_{p.get('kind', 'train')}"
                 f"_s{int(p.get('seq', 128))}_b{int(p.get('batch', 4))}"]

@@ -169,18 +169,21 @@ class ServeEngine:
         """Re-activate slots that stalled on an empty free list once pages
         are available again (their whole state — pages, pos, cur — is
         intact, so generation just continues)."""
+        resumed = False
         for slot in range(self.n_slots):
             if not self._stalled[slot]:
                 continue
-            pp = len(self._slot_pages[slot])
             if not self._free:
-                return
+                break       # NOT return: already-resumed slots need the sync
+            pp = len(self._slot_pages[slot])
             pid = self._free.pop()
             self._slot_pages[slot].append(pid)
             self._table_np[slot, pp] = pid
             self._stalled[slot] = False
             self._set_active(slot, True)
-        self.page_table = jnp.asarray(self._table_np)
+            resumed = True
+        if resumed:
+            self.page_table = jnp.asarray(self._table_np)
 
     def _admit_wave(self) -> bool:
         """Admit up to ``n_slots`` queued requests in ONE batched prefill:

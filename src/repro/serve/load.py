@@ -136,14 +136,16 @@ def _admissible(spec: LoadSpec, item: dict, engine, tick: int) -> bool:
 # Probe integration: the "serve" TargetSpec kind's region builder
 # ---------------------------------------------------------------------------
 
-def serve_region_names(arch: str, *, slots: int = 4, prompt: int = 32
-                       ) -> list[str]:
+def serve_region_names(arch: str, *, slots: int = 4, prompt: int = 32,
+                       max_new: int = 8, page_size: int = 16) -> list[str]:
     """The names ``build_serve_regions`` will produce, WITHOUT building a
-    model (plan grid queries must stay cheap)."""
+    model (plan grid queries must stay cheap). Every engine parameter the
+    builder varies over is encoded — campaigns differing only in ``max_new``
+    or ``page_size`` must NOT collide in the store."""
     from repro.configs import get_smoke_config
     base = f"{get_smoke_config(arch).name}_serve"
-    return [f"{base}_prefill_s{prompt}_b{slots}",
-            f"{base}_decode_s{prompt}_b{slots}"]
+    tag = f"s{prompt}_n{max_new}_p{page_size}_b{slots}"
+    return [f"{base}_prefill_{tag}", f"{base}_decode_{tag}"]
 
 
 def _build_engine_for_probe(arch: str, *, slots: int, prompt: int,
@@ -194,7 +196,9 @@ def build_serve_regions(arch: str, modes: Sequence[str], *, slots: int = 4,
     eng = _build_engine_for_probe(arch, slots=slots, prompt=prompt,
                                   max_new=max_new, page_size=page_size)
     pf_fn, pf_args, tk_fn, tk_args = eng.probe_cells()
-    pf_name, tk_name = serve_region_names(arch, slots=slots, prompt=prompt)
+    pf_name, tk_name = serve_region_names(arch, slots=slots, prompt=prompt,
+                                          max_new=max_new,
+                                          page_size=page_size)
     reg = {m: registry[m] for m in modes}
     return [step_region(pf_name, pf_fn, pf_args, reg),
             step_region(tk_name, tk_fn, tk_args, reg)]

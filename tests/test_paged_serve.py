@@ -194,6 +194,39 @@ def test_stall_and_resume(smoke):
     assert r.done and r.out == r_ref.out
 
 
+def test_partial_resume_syncs_page_table(smoke):
+    """Fewer free pages than stalled slots: the slots that DO resume must
+    have their new page pushed to the device table before the next tick
+    (regression: an early return skipped the sync, so the resumed slot's
+    KV scattered into the trash page — silent corruption). Tokens must
+    match the dense engine exactly."""
+    api, params = smoke
+    prompts = [[5, 6, 7], [9, 2, 4]]
+    ref = ServeEngine(api, params, n_slots=2, max_seq=32, paged=False)
+    refs = [ref.submit(p, max_new=8) for p in prompts]
+    ref.run()
+
+    eng = ServeEngine(api, params, n_slots=2, max_seq=32, paged=True,
+                      page_size=4)
+    reqs = [eng.submit(p, max_new=8) for p in prompts]
+    eng.step()                    # admit wave + tick 1 (grows to 2 pages)
+    stolen, eng._free = eng._free, []            # pool "exhausted"
+    for _ in range(10):                          # both outgrow page 2
+        if eng._stalled.all():
+            break
+        eng.step()
+    assert eng._stalled.all() and not any(r.done for r in reqs)
+    eng._free = [stolen.pop()]                   # 1 page for 2 stalled slots
+    eng.step()
+    assert eng.active[0] and eng._stalled[1]     # partial resume
+    # the resumed slot's new page must be on DEVICE, not just in the host
+    # mirror — a stale device row scatters its KV into the trash page
+    np.testing.assert_array_equal(np.asarray(eng.page_table), eng._table_np)
+    eng.run()                # slot 0 retires -> its pages resume slot 1
+    assert all(r.done for r in reqs)
+    assert [r.out for r in reqs] == [r.out for r in refs]
+
+
 def test_pool_exhaustion_raises(smoke):
     """Every in-flight request stalled with nothing retirable is a
     deadlock: the engine must fail loudly, not spin."""
