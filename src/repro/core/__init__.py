@@ -37,6 +37,12 @@ from repro.core.segments import (SegmentStore, io_tally, is_segmented,  # noqa: 
 from repro.core.classifier import (BottleneckReport, apply_audit_evidence,  # noqa: F401
                                    apply_quality_evidence, classify,
                                    cross_check_with_decan)
+from repro.core.calibration import (CALIB_MODES, EXPECTED, REGIMES,  # noqa: F401
+                                    CalibrationResult, calibrate_targets,
+                                    fit_thresholds, forced_regime, hw_name,
+                                    resolve_thresholds, run_calibration)
+from repro.core.strategy import (StrategyError, StrategyTree, default_tree,  # noqa: F401
+                                 load_tree, strategies_dir)
 from repro.core.quality import (QualityPolicy, RemeasureBudget,  # noqa: F401
                                 measure_quality, quality_from_dict)
 from repro.core.controller import Controller, RegionReport, RegionTarget, loop_region  # noqa: F401

@@ -82,10 +82,40 @@ def _synth_k(args: tuple) -> int:
     return k
 
 
+@dataclasses.dataclass(frozen=True)
+class SynthShape:
+    """Marker that reshapes the synthetic clock for ONE measured callable.
+
+    The default synthetic t(k) has a single knee at k=6 — every region and
+    mode look alike, which is exactly wrong for calibration campaigns that
+    need known-REGIME kernels (a compute-shaped target must saturate its fp
+    mode immediately while absorbing l1 noise deep). A region appends a
+    SynthShape to its runtime args (``args_for_rt``); the clock scans the
+    argument tuple for it and moves the knee/slope accordingly. Regions
+    must strip the marker before calling the real kernel (it is not an
+    array), and absent a marker the clock is byte-identical to before."""
+    knee: float = 6.0            # absorption Abs^raw the fit will recover
+    slope: float = 0.05          # fractional slowdown per pattern past knee
+    base_scale: float = 1.0      # scales the region's base time
+
+
+def _synth_shape(args: tuple) -> "SynthShape | None":
+    for a in args:
+        if isinstance(a, SynthShape):
+            return a
+    return None
+
+
 def _synth_time(args: tuple, base: float) -> float:
     """t(k) with a knee at k=6 — flat absorption then a linear ramp, enough
-    structure for the fit/classifier to produce stable, non-trivial output."""
-    return base * (1.0 + 0.05 * max(0, _synth_k(args) - 6))
+    structure for the fit/classifier to produce stable, non-trivial output.
+    A ``SynthShape`` marker among the args overrides knee/slope/base (known-
+    regime calibration kernels); without one the shape is unchanged."""
+    shape = _synth_shape(args)
+    if shape is None:
+        return base * (1.0 + 0.05 * max(0, _synth_k(args) - 6))
+    return base * shape.base_scale * (
+        1.0 + shape.slope * max(0.0, _synth_k(args) - shape.knee))
 
 
 def _synth_u(k: int, r: int) -> float:

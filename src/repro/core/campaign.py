@@ -47,6 +47,9 @@ Store schema (one JSON object per line):
    |"quarantine", "reason": null|"timer_floor"|"spread"|"drift_span"
    |"timeout", "spread": f|null, "reps": n, "detail": s|null}
                                                 # runtime measurement quality
+  {"kind": "calib",  "hw": backend, "low": f, "high": f, "fitted": b,
+   "reps": n, "samples": [{"region": r, "mode": m, "role": s, "k1": f}, ...]}
+                                                # fitted classifier thresholds
 
 Points measured under a quality policy also carry their sample's relative
 "spread", and their "done" marker an optional "sentinels" list (the
@@ -57,7 +60,8 @@ Supersede rules (they define both in-file appends and ``merge_stores``):
   * later records supersede earlier ones for the same key — (region, mode)
     for meta/sens/done/pred/audit, (region, mode, k) for points and quality
     records, (region,) for region records, (region, variant) for decan
-    records — so a settings change appends fresh data without rewriting the
+    records, (hw,) for calib records — so a settings change appends fresh
+    data without rewriting the
     file (and a re-measured point's fresh "valid" quality record clears its
     old quarantine);
   * a "meta" record whose measurement settings differ from the pair's
@@ -112,7 +116,7 @@ from repro.core.absorption import (DEFAULT_KS, STOP_CONSECUTIVE,
                                    assemble_curve, floor_time, measure,
                                    measure_sample)
 from repro.core.analytic import StepTerms, predict_absorption, predict_curve
-from repro.core.classifier import BottleneckReport, classify
+from repro.core.classifier import HIGH, LOW, BottleneckReport, classify
 from repro.core.controller import (Controller, ModeResult, RegionReport,
                                    RegionTarget, derive_body_size)
 from repro.core import decan as decan_mod
@@ -202,6 +206,10 @@ class CampaignStore:
         self.decan: dict[tuple[str, str], dict] = {}
         self.audits: dict[tuple[str, str], dict] = {}
         self.quality: dict[tuple[str, str], dict[int, dict]] = {}
+        # fitted classifier thresholds, keyed by hardware config (like
+        # preds, calib records carry their own settings and survive
+        # per-pair meta conflicts)
+        self.calib: dict[str, dict] = {}
         self.body_sizes: dict[str, int] = {}
         self._lock = threading.Lock()
         self._f = None
@@ -286,6 +294,8 @@ class CampaignStore:
             self.audits[key] = rec
         elif kind == "quality":
             self.quality.setdefault(key, {})[int(rec["k"])] = rec
+        elif kind == "calib":
+            self.calib[str(rec.get("hw", ""))] = rec
 
     def append(self, rec: dict) -> None:
         """Ingest one record and flush it to disk (locked; readonly stores
@@ -371,7 +381,7 @@ class CampaignStore:
 # ---------------------------------------------------------------------------
 
 _KIND_ORDER = {"meta": 0, "sens": 1, "point": 2, "done": 3, "region": 4,
-               "decan": 5, "pred": 6, "audit": 7, "quality": 8}
+               "decan": 5, "pred": 6, "audit": 7, "quality": 8, "calib": 9}
 
 
 def _canon_line(rec: dict) -> str:
@@ -432,6 +442,7 @@ class _MergeView:
         self.decan: dict[tuple, dict] = {}
         self.audits: dict[tuple, dict] = {}
         self.quality: dict[tuple, dict[int, dict]] = {}
+        self.calib: dict[str, dict] = {}
         self.other: dict[str, dict] = {}
         self.stats = stats
 
@@ -469,6 +480,8 @@ class _MergeView:
             self.audits[key] = rec
         elif kind == "quality":
             self.quality.setdefault(key, {})[int(rec["k"])] = rec
+        elif kind == "calib":
+            self.calib[str(rec.get("hw", ""))] = rec
         else:
             self.other[_canon_line(rec)] = rec   # unknown: keep, dedup exact
 
@@ -485,6 +498,7 @@ class _MergeView:
         out.extend(self.audits.values())
         for per_k in self.quality.values():
             out.extend(per_k.values())
+        out.extend(self.calib.values())
         out.extend(self.other.values())
         return sorted(out, key=_canon_sort_key)
 
@@ -655,7 +669,8 @@ class Campaign:
                  workers: int = 1,
                  quality: Optional[QualityPolicy] = None,
                  remeasure: Optional[RemeasureBudget] = None,
-                 heal_quarantined: bool = True):
+                 heal_quarantined: bool = True,
+                 thresholds: Optional[tuple[float, float]] = None):
         self.store = store if isinstance(store, CampaignStore) \
             else CampaignStore(store)
         self.ctl = controller if controller is not None else Controller()
@@ -671,6 +686,11 @@ class Campaign:
         self.remeasure = remeasure if remeasure is not None \
             else (RemeasureBudget() if quality is not None else None)
         self.heal_quarantined = bool(heal_quarantined)
+        # the effective (low, high) classification thresholds — a fleet
+        # executor resolves a store's calib record into this (see
+        # repro.core.calibration.resolve_thresholds); None keeps the
+        # paper defaults, byte-identical to pre-calibration reports
+        self.thresholds = thresholds
         self.stats = CampaignStats()
         self._measure_lock = threading.Lock()
         self._stats_lock = threading.Lock()
@@ -943,7 +963,10 @@ class Campaign:
 
     def _assemble_region(self, target: RegionTarget,
                          results: dict[str, ModeResult]) -> RegionReport:
-        report = classify({m: r.fit.k1 for m, r in results.items()})
+        low, high = self.thresholds if self.thresholds is not None \
+            else (LOW, HIGH)
+        report = classify({m: r.fit.k1 for m, r in results.items()},
+                          low=low, high=high)
         return RegionReport(region=target.name, results=results,
                             bottleneck=report,
                             body_size=self._body_size(target))
@@ -1029,7 +1052,8 @@ class AnalyticCampaign:
 
     def __init__(self, store: CampaignStore | str, *, hw, tol: float = 0.05,
                  alpha: float = 1.0, ks: Optional[Sequence[int]] = None,
-                 k_max: int = 1 << 20):
+                 k_max: int = 1 << 20,
+                 thresholds: Optional[tuple[float, float]] = None):
         self.store = store if isinstance(store, CampaignStore) \
             else CampaignStore(store)
         self.hw = hw
@@ -1037,6 +1061,8 @@ class AnalyticCampaign:
         self.alpha = alpha
         self.ks = [int(k) for k in (ks if ks is not None else DEFAULT_KS)]
         self.k_max = k_max
+        # effective classification thresholds, like Campaign.thresholds
+        self.thresholds = thresholds
         self.stats = CampaignStats()
 
     def _settings(self, terms: StepTerms) -> dict:
@@ -1079,7 +1105,10 @@ class AnalyticCampaign:
         if classify_fn is not None:
             report = classify_fn(results)
         else:
-            report = classify({m: r.fit.k1 for m, r in results.items()})
+            low, high = self.thresholds if self.thresholds is not None \
+                else (LOW, HIGH)
+            report = classify({m: r.fit.k1 for m, r in results.items()},
+                              low=low, high=high)
         return RegionReport(region=region, results=results, bottleneck=report,
                             body_size=0)
 
@@ -1166,6 +1195,11 @@ def _cli(argv: Optional[Sequence[str]] = None) -> int:
     for (region, variant), rec in sorted(st.decan.items()):
         print(f"  decan    {region}/{variant}: t={rec['t']:.6f}s "
               f"(reps={rec.get('reps')}, inner={rec.get('inner')})")
+    for hw, rec in sorted(st.calib.items()):
+        tag = "fitted" if rec.get("fitted") else "FALLBACK (paper defaults)"
+        print(f"  calib    hw={hw}: low={rec.get('low'):g} "
+              f"high={rec.get('high'):g} [{tag}] from "
+              f"{len(rec.get('samples', []))} sample(s)")
     for key, rec in sorted(st.audits.items()):
         surv = max(0.0, min(1.0, float(rec.get("survival", 0.0))))
         agrees = rec.get("agrees")

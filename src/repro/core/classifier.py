@@ -14,12 +14,22 @@ Encodes the paper's decision logic (§4.2 validation + Table 3):
 
 Thresholds are in *patterns* and deliberately coarse — the paper reads the
 signature shape, not exact values; §3.2 suggests ~20–30 instructions as the
-tipping point between "core-level" and "data-access" codes.
+tipping point between "core-level" and "data-access" codes. ``LOW``/``HIGH``
+below are the paper DEFAULTS; a calibration campaign
+(``repro.core.calibration``) fits per-hardware replacements from
+known-regime sweeps and threads them through every ``classify`` call site.
+
+The decision logic itself lives in a declarative strategy tree
+(``strategies/default.yaml`` via ``repro.core.strategy``) — ``classify``
+resolves the tree, and the report carries the evaluated decision path for
+``fleet doctor --explain``.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Mapping, Optional
+
+from repro.core import strategy as strategy_mod
 
 LOW = 4.0       # <= LOW patterns: the targeted resource is saturated
 HIGH = 20.0     # >= HIGH patterns: clearly unsaturated (paper §3.2: 20-30)
@@ -37,6 +47,11 @@ class BottleneckReport:
     # runtime measurement-quality evidence per mode (apply_quality_evidence);
     # None = no quality guard ran
     quality: Optional[list] = None
+    # the strategy tree's evaluated decision path (which nodes were tried,
+    # which fired, under which thresholds) — NOT serialized into report
+    # JSON / __str__ (byte-identity with pre-tree reports); rendered by
+    # fleet doctor --explain
+    path: Optional[dict] = None
 
     def __str__(self) -> str:
         abss = ", ".join(f"{m}={a:.1f}" for m, a in self.absorptions.items())
@@ -52,95 +67,28 @@ class BottleneckReport:
         return s
 
 
-def _get(absorptions: Mapping[str, float], *names: str,
-         default: Optional[float] = None) -> Optional[float]:
-    for n in names:
-        if n in absorptions:
-            return absorptions[n]
-    return default
-
-
 def classify(absorptions: Mapping[str, float], *, low: float = LOW,
-             high: float = HIGH) -> BottleneckReport:
+             high: float = HIGH,
+             tree: Optional["strategy_mod.StrategyTree"] = None,
+             ) -> BottleneckReport:
     """Map {mode: absorption} to a bottleneck class.
 
     Mode names accept loop-level (fp_add/l1_ld/mem_ld/chase), graph-level
     (fp_add32/mxu_fma128/vmem_ld/hbm_stream/hbm_latency/ici_*) and Pallas
     kernel-level (fp/mxu/vmem — repro.kernels.noise_slots) vocabularies,
     plus the paper aliases.
+
+    The decision is delegated to a strategy tree (``tree``, defaulting to
+    ``strategies/default.yaml``); ``low``/``high`` are the effective
+    thresholds — pass a calibration's fitted values to classify under them
+    (confidence is normalized by the *effective* ``high``, never the module
+    default). The returned report's ``path`` records the evaluated
+    decision path.
     """
-    fp = _get(absorptions, "fp_add", "fp_add32", "fp_fma", "mxu_fma128",
-              "fp_add64", "fp", "mxu")
-    l1 = _get(absorptions, "l1_ld", "vmem_ld", "l1_ld64", "vmem")
-    mem = _get(absorptions, "mem_ld", "hbm_stream", "memory_ld64")
-    chase = _get(absorptions, "chase", "hbm_latency", "memory_chase")
-    icis = {m: a for m, a in absorptions.items() if m.startswith("ici")}
-
-    known = {k: v for k, v in dict(fp=fp, l1=l1, mem=mem, chase=chase).items()
-             if v is not None}
-
-    def conf(sep: float) -> float:
-        return max(0.0, min(1.0, sep / high))
-
-    # ICI first: a saturated interconnect masks everything else.
-    if icis and min(icis.values()) <= low:
-        others = [v for v in known.values() if v is not None]
-        if not others or min(others) >= high / 2:
-            worst = min(icis, key=icis.get)
-            return BottleneckReport(
-                "ici", conf((min(others) if others else high) - icis[worst]),
-                dict(absorptions),
-                f"collective noise ({worst}) not absorbed while core "
-                "resources have slack -> interconnect-bound")
-
-    # compute-bound: fp degrades immediately while L1 noise is absorbed.
-    # Separation is relative — the paper's x86 HACCmk row is 0/13/0, so the
-    # data-access side need not clear the absolute HIGH bar (mem noise is
-    # rarely absorbed by anything but latency-bound codes, Table 1).
-    if fp is not None and fp <= low and (
-            (l1 is not None and l1 >= max(high / 2, 3.0 * max(fp, 1.0)))
-            or (mem is not None and mem >= high)):
-        return BottleneckReport(
-            "compute", conf((l1 if l1 is not None else mem) - fp),
-            dict(absorptions),
-            "fp noise degrades immediately while data-access noise is "
-            "absorbed -> compute-bound (HACCmk signature)")
-
-    # bandwidth: the STREAM signature also absorbs L1 noise (l1 > low) —
-    # if L1 noise degrades too, the LSU itself is the bottleneck (Fig. 4a),
-    # handled below.
-    if mem is not None and mem <= low and (fp is None or fp >= high) \
-            and (l1 is None or l1 > low):
-        return BottleneckReport(
-            "bandwidth", conf((fp or high) - mem), dict(absorptions),
-            "memory-stream noise not absorbed while fp noise is -> "
-            "bandwidth-saturated (parallel-STREAM signature)")
-
-    if (mem is not None and mem > low) and (fp is None or fp >= high):
-        return BottleneckReport(
-            "latency", conf(mem - low), dict(absorptions),
-            "substantial memory noise absorbed (stalls come from load "
-            "dependencies, not bandwidth) -> latency-bound "
-            "(lat_mem_rd signature)")
-
-    if known and max(known.values()) <= low:
-        return BottleneckReport(
-            "overlap", conf(low - max(known.values()) + high / 2),
-            dict(absorptions),
-            "no mode is absorbed: either full resource overlap (Table 3 "
-            "case 3) or a shared upstream bottleneck (case 4) — run the "
-            "DECAN cross-check to distinguish")
-
-    if l1 is not None and l1 <= low and (fp is None or fp > low):
-        return BottleneckReport(
-            "l1", conf((fp or high) - l1), dict(absorptions),
-            "L1/LSU noise degrades first -> load/store-unit bound "
-            "(the -O0 matmul signature, Fig. 4a)")
-
-    return BottleneckReport(
-        "mixed", 0.3, dict(absorptions),
-        "ambiguous absorption levels (moderate everywhere) indicating "
-        "strong interdependencies (Table 3 case 4)")
+    t = tree if tree is not None else strategy_mod.default_tree()
+    d = t.decide(absorptions, low=low, high=high)
+    return BottleneckReport(d.label, d.confidence, dict(absorptions),
+                            d.explanation, path=d.path)
 
 
 def apply_audit_evidence(report: BottleneckReport,

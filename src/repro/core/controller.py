@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core.absorption import (AbsorptionCurve, AbsorptionFit, absorption,
                                    floor_time, measure, sweep)
-from repro.core.classifier import BottleneckReport, classify
+from repro.core.classifier import HIGH, LOW, BottleneckReport, classify
 from repro.core.loopnoise import LoopNoise, make_loop_modes
 from repro.core import payload as payload_mod
 
@@ -256,12 +256,17 @@ class Controller:
 
     def characterize(self, target: RegionTarget,
                      modes: Sequence[str] = ("fp_add", "l1_ld", "mem_ld"),
-                     ) -> RegionReport:
+                     *, low: float = LOW, high: float = HIGH) -> RegionReport:
+        """Sweep every mode and classify the region; ``low``/``high`` are
+        the effective classification thresholds (pass a calibration's
+        fitted values — ``repro.core.calibration`` — to classify under
+        them; the defaults reproduce the paper constants)."""
         results = {m: self.run_mode(target, m) for m in modes}
         body = target.body_size
         if not body:
             body = derive_body_size(target)
-        report = classify({m: r.fit.k1 for m, r in results.items()})
+        report = classify({m: r.fit.k1 for m, r in results.items()},
+                          low=low, high=high)
         return RegionReport(region=target.name, results=results,
                             bottleneck=report, body_size=body)
 

@@ -292,11 +292,87 @@ def _cmd_doctor(args) -> int:
 
     try:
         plan = SweepPlan.load(args.plan)
-        code, report = fleet_doctor(plan)
+        code, report = fleet_doctor(plan, explain=args.explain)
     except (OSError, PlanError, FleetError) as e:
         raise SystemExit(f"doctor: {e}")
     print(report)
     return code
+
+
+def _cmd_calibrate(args) -> int:
+    """Run, inspect or apply a threshold-calibration campaign (the
+    known-regime synthetic sweep that fits per-hardware LOW/HIGH —
+    ``repro.core.calibration``)."""
+    from repro.core import CampaignStore
+    from repro.core.absorption import SYNTH_MEASURE_VAR
+    from repro.core.calibration import (CALIB_MODES, EXPECTED,
+                                        run_calibration)
+
+    store = args.store or os.path.join(CAMPAIGN_DIR, "calibrate.jsonl")
+    if args.action == "run":
+        from repro.fleet.executor import finish_stats
+        from repro.fleet.plan import PlanError, SweepPlan, TargetSpec
+
+        # calibration is definitionally synthetic: the known regimes are
+        # forced clock shapes, so make sure the deterministic clock is on
+        os.environ.setdefault(SYNTH_MEASURE_VAR, args.base)
+        plan = SweepPlan(name="calibrate", store=store, shards=1,
+                         reps=args.reps,
+                         targets=[TargetSpec("calibrate",
+                                             tuple(CALIB_MODES), {})])
+        try:
+            plan.validate()
+        except PlanError as e:
+            raise SystemExit(f"calibrate: {e}")
+        plan_path = args.out or os.path.splitext(store)[0] + ".plan.json"
+        plan.save(plan_path)
+        res = run_calibration(store, reps=args.reps)
+        tag = ("fitted" if res.fitted
+               else "regimes did not separate; FALLBACK to paper defaults")
+        print(f"== calibration [{res.hw}]: low={res.low:g} "
+              f"high={res.high:g} ({tag})")
+        print(f"  plan -> {plan_path}  (doctor --explain shows each "
+              "regime's decision path)")
+        ok = True
+        for name, rep in sorted(res.reports.items()):
+            b = rep.bottleneck
+            good = b.label == EXPECTED[name]
+            ok = ok and good
+            verdict = "ok" if good else f"WRONG (expected {EXPECTED[name]})"
+            print(f"  {name}: {b.label} "
+                  f"(confidence {b.confidence:.3f}) [{verdict}]")
+        finish_stats(res.stats, args.expect_no_measure)
+        return 0 if ok else 1
+
+    try:   # inspect/apply read an existing store; never create one
+        st = CampaignStore(store, readonly=True)
+    except FileNotFoundError as e:
+        print(e)
+        return 2
+    if not st.calib:
+        print(f"{store}: no calib record — run "
+              "`python -m repro.fleet calibrate run` first")
+        return 1
+    if args.action == "inspect":
+        for hw, rec in sorted(st.calib.items()):
+            tag = "fitted" if rec.get("fitted") else "FALLBACK"
+            print(f"calib hw={hw}: low={rec.get('low'):g} "
+                  f"high={rec.get('high'):g} [{tag}] "
+                  f"(reps={rec.get('reps')})")
+            for s in rec.get("samples", []):
+                print(f"  {s['region']}/{s['mode']} [{s['role']}]: "
+                      f"Abs^raw={s['k1']:g}")
+        return 0
+    # apply: copy the calib record(s) into another store, so its future
+    # classifications resolve the fitted thresholds
+    if not args.to:
+        raise SystemExit("calibrate apply needs --to DEST_STORE")
+    dest = CampaignStore(args.to)
+    for _hw, rec in sorted(st.calib.items()):
+        dest.append(rec)
+    dest.close()
+    print(f"applied {len(st.calib)} calib record(s) -> {args.to}")
+    return 0
 
 
 def _cmd_status(args) -> int:
@@ -587,7 +663,43 @@ def build_parser() -> argparse.ArgumentParser:
                                        "exhausted (exit 1 while incomplete)")
     dp.add_argument("--plan", required=True,
                     help="the SweepPlan JSON to diagnose")
+    dp.add_argument("--explain", action="store_true",
+                    help="for a covered grid, also replay each region's "
+                         "classification (measurement-free) and print the "
+                         "strategy tree's decision path: which node fired, "
+                         "under which thresholds (calibrated or default), "
+                         "plus any audit/quality downgrades")
     dp.set_defaults(fn=_cmd_doctor)
+
+    cal = sub.add_parser("calibrate",
+                         help="threshold calibration: run the known-regime "
+                              "synthetic sweep and fit per-hardware "
+                              "LOW/HIGH, inspect the fitted record, or "
+                              "apply it to another store")
+    cal.add_argument("action", choices=("run", "inspect", "apply"),
+                     help="run: sweep the four known-regime kernels under "
+                          "the deterministic synthetic clock and persist a "
+                          "calib record; inspect: print the store's calib "
+                          "record(s); apply: copy them into --to DEST")
+    cal.add_argument("--store", default=None,
+                     help="calibration campaign store (default: "
+                          f"{CAMPAIGN_DIR}/calibrate.jsonl)")
+    cal.add_argument("--out", default=None, metavar="PLAN.json",
+                     help="where `run` writes the calibrate SweepPlan "
+                          "(default: next to the store), for doctor/status/"
+                          "inspect --plan")
+    cal.add_argument("--reps", type=int, default=2,
+                     help="timing repetitions per measured point")
+    cal.add_argument("--base", default="1e-3",
+                     help="synthetic-clock base seconds exported as "
+                          "REPRO_SYNTH_MEASURE when it is not already set")
+    cal.add_argument("--to", default=None, metavar="DEST_STORE",
+                     help="apply: the store that receives the calib "
+                          "record(s)")
+    cal.add_argument("--expect-no-measure", action="store_true",
+                     help="run: exit non-zero if the calibration had to "
+                          "measure anything (replay contract)")
+    cal.set_defaults(fn=_cmd_calibrate)
 
     sp = sub.add_parser("status", help="show fleet/shard/store completeness "
                                        "(exit 1 while incomplete)")
@@ -610,8 +722,8 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
-    """CLI entry: dispatch to the plan/run/audit/doctor/status/watch
-    subcommand."""
+    """CLI entry: dispatch to the plan/run/audit/doctor/calibrate/status/
+    watch subcommand."""
     args = build_parser().parse_args(argv)
     return args.fn(args)
 

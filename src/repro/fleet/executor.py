@@ -370,6 +370,7 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
     Returns ``(results_or_reports, CampaignStats)``.
     """
     from repro.core import Campaign, Controller, remove_store, worker_store
+    from repro.core.calibration import resolve_thresholds
 
     _check_audit_choice(audit)
     _check_quality_choice(quality)
@@ -414,6 +415,11 @@ def run_worker(plan: SweepPlan, *, index: Optional[int] = None,
         print(f"== {title} (campaign store: {store})")
         if audit != "off":
             audit_fleet_plan(plan, camp.store, gate=audit)
+        low, high, prov = resolve_thresholds(camp.store)
+        camp.thresholds = (low, high)
+        if prov != "default":
+            print(f"  [classification thresholds: {prov} "
+                  f"low={low:g} high={high:g}]")
         reports = {}
         many = sum(len(regions) for _, regions in plan.resolve()) > 1
         for spec, regions in plan.resolve():
@@ -615,14 +621,19 @@ def _classify(plan: SweepPlan, quality: str = "gate"):
     """Merge-side finalize: replay the canonical store into one RegionReport
     per region (a complete store measures nothing here — quarantined points
     are NOT healed by finalize; it must classify what the fleet measured,
-    with the quality evidence attached when ``quality`` != "off")."""
+    with the quality evidence attached when ``quality`` != "off"). A
+    ``calib`` record in the store (``repro.core.calibration``) swaps the
+    classifier's paper-default thresholds for the fitted ones."""
     from repro.core import Campaign, Controller
+    from repro.core.calibration import resolve_thresholds
 
     qpolicy, qbudget = _plan_quality(plan)
     ctl = Controller(reps=plan.reps, compile_once=plan.compile_once)
     camp = Campaign(_plan_store(plan, plan.store), ctl, workers=plan.workers,
                     quality=qpolicy, remeasure=qbudget,
                     heal_quarantined=False)
+    low, high, _prov = resolve_thresholds(camp.store)
+    camp.thresholds = (low, high)
     try:
         reports = {}
         for spec, regions in plan.resolve():
@@ -942,8 +953,8 @@ def _pair_lines(store_path: str, mine, canon_status) -> tuple[list[str], int]:
     return lines, owing
 
 
-def fleet_doctor(plan: SweepPlan,
-                 budget: Optional[RetryBudget] = None) -> tuple[int, str]:
+def fleet_doctor(plan: SweepPlan, budget: Optional[RetryBudget] = None,
+                 *, explain: bool = False) -> tuple[int, str]:
     """Explain, per shard, why a fleet is incomplete — the forensics behind
     ``_incomplete_shards``'s yes/no answer.
 
@@ -953,6 +964,12 @@ def fleet_doctor(plan: SweepPlan,
     healed, corruption), and each owing (region, mode) pair with its
     missing ks when the ``done`` marker pins them. Returns
     ``(exit_code, report)``: 0 when the grid is fully covered, 1 otherwise.
+
+    ``explain`` appends the classification forensics for a COVERED grid: a
+    measurement-free replay of every region's classification, rendering
+    the strategy tree's evaluated decision path — which node fired, under
+    which thresholds, whether those were calibrated or the paper defaults,
+    and any audit/quality downgrades.
     """
     from repro.core import CampaignStore, store_exists
 
@@ -1072,4 +1089,66 @@ def fleet_doctor(plan: SweepPlan,
     else:
         out.append("== verdict: COMPLETE — every pair is covered; a resume "
                    "replays with zero new measurements")
+    if explain:
+        out.extend(_explain_lines(plan, covered=not total_owing))
     return (1 if total_owing else 0), "\n".join(out)
+
+
+def _explain_lines(plan: SweepPlan, *, covered: bool) -> list[str]:
+    """The ``doctor --explain`` section: replay the covered store's
+    classification (readonly, measurement-free) and render each region's
+    evaluated decision path."""
+    from repro.core import Campaign, CampaignStore, Controller, store_exists
+    from repro.core.calibration import resolve_thresholds
+
+    out = ["== explain: decision path per region"]
+    if not store_exists(plan.store):
+        out.append("  canonical store absent — run the fleet (or merge the "
+                   "worker stores) first")
+        return out
+    if not covered:
+        out.append("  grid incomplete — explain replays the store without "
+                   "measuring, so it needs full coverage first")
+        return out
+    store = CampaignStore(plan.store, readonly=True)
+    low, high, prov = resolve_thresholds(store)
+    out.append(f"  thresholds: {prov} (low={low:g}, high={high:g})")
+    qpolicy, qbudget = _plan_quality(plan)
+    ctl = Controller(reps=plan.reps, compile_once=plan.compile_once)
+    camp = Campaign(store, ctl, workers=plan.workers, quality=qpolicy,
+                    remeasure=qbudget, heal_quarantined=False,
+                    thresholds=(low, high))
+    reports = {}
+    try:
+        for spec, regions in plan.resolve():
+            for region in regions:
+                rep = _attach_audit_evidence(
+                    camp.characterize(region, list(spec.modes)), store)
+                reports[region.name] = _attach_quality_evidence(rep, store)
+    except Exception as e:                  # noqa: BLE001 — forensics only
+        out.append(f"  explain failed to replay the store: {e}")
+        return out
+    for name, rep in sorted(reports.items()):
+        b = rep.bottleneck
+        out.append(f"  {name}: {b.label} (confidence {b.confidence:.2f})")
+        out.append("    absorptions: " + ", ".join(
+            f"{m}={r.fit.k1:.1f}" for m, r in sorted(rep.results.items())))
+        path = b.path or {}
+        nodes = path.get("nodes", [])
+        if nodes:
+            chain = " -> ".join(f"{n['node']}{'*' if n['fired'] else ''}"
+                                for n in nodes)
+            out.append(f"    path [{path.get('strategy')}]: {chain} "
+                       "(* = fired)")
+        out.append(f"    why: {b.explanation}")
+        if b.evidence is not None:
+            bad = [e["mode"] for e in b.evidence if not e["supports"]]
+            if bad:
+                out.append("    audit downgrade: conflicting mode(s) "
+                           + ", ".join(sorted(bad)))
+        if b.quality is not None:
+            quar = [q["mode"] for q in b.quality if q["quarantined"]]
+            if quar:
+                out.append("    quality downgrade: quarantined point(s) in "
+                           + ", ".join(sorted(quar)))
+    return out

@@ -57,7 +57,10 @@ class TargetSpec:
       * "serve"  — params {arch[, slots, prompt, max_new, page_size]};
         resolves via ``repro.serve.load.build_serve_regions`` to TWO regions
         of one paged serving workload: the engine's batched prefill and its
-        decode tick, probed (and classified) separately.
+        decode tick, probed (and classified) separately;
+      * "calibrate" — params {[n, chunk]}; resolves via
+        ``repro.core.calibration.calibrate_targets`` to the four
+        known-regime threshold-calibration regions (synthetic-clock only).
     """
     kind: str
     modes: tuple[str, ...]
@@ -103,9 +106,24 @@ class TargetSpec:
                     if v is not None and (not isinstance(v, int) or v < 1):
                         raise PlanError(f"serve target {key}={v!r}: want a "
                                         "positive int")
+        elif self.kind == "calibrate":
+            from repro.core.calibration import CALIB_MODES
+            bad = [m for m in self.modes if m not in CALIB_MODES]
+            if bad:
+                raise PlanError(f"calibrate targets sweep the loop modes "
+                                f"{list(CALIB_MODES)}, not {bad}")
+            unknown = sorted(set(self.params) - {"n", "chunk"})
+            if unknown:
+                raise PlanError(f"unknown calibrate param(s) {unknown}")
+            for key in ("n", "chunk"):
+                v = self.params.get(key)
+                if v is not None and (not isinstance(v, int) or v < 1):
+                    raise PlanError(f"calibrate target {key}={v!r}: want a "
+                                    "positive int")
         else:
             raise PlanError(f"unknown target kind {self.kind!r}; "
-                            "one of ['pallas', 'step', 'serve']")
+                            "one of ['calibrate', 'pallas', 'step', "
+                            "'serve']")
 
     def _extra_params(self) -> dict:
         return {k: v for k, v in self.params.items()
@@ -119,6 +137,10 @@ class TargetSpec:
                                  qs=self.params.get("qs"), backend=backend,
                                  **self._extra_params())
         p = self.params
+        if self.kind == "calibrate":
+            from repro.core.calibration import calibrate_targets
+            return calibrate_targets(n=int(p.get("n", 4096)),
+                                     chunk=int(p.get("chunk", 512)))
         if self.kind == "serve":
             from repro.serve.load import build_serve_regions
             return build_serve_regions(
@@ -141,6 +163,9 @@ class TargetSpec:
                                 qs=self.params.get("qs"),
                                 **self._extra_params())
         p = self.params
+        if self.kind == "calibrate":
+            from repro.core.calibration import REGIME_NAMES
+            return list(REGIME_NAMES)
         if self.kind == "serve":
             from repro.serve.load import serve_region_names
             return serve_region_names(p["arch"],

@@ -54,6 +54,12 @@ the same grid as a plan through ``repro.fleet``, which merges for you).
 ``--expect-no-measure`` turns "the store fully covers this probe" into an
 exit code, so scripts and CI can assert the round-trip measured nothing.
 
+Every measured path classifies under the store's calibrated thresholds when
+a ``calib`` record is present (``python -m repro.fleet calibrate run`` fits
+one; ``... calibrate apply --to STORE`` copies it into a probe's store) and
+falls back to the paper defaults otherwise — the worker banner prints the
+threshold provenance whenever it is not the default.
+
 Analytic mode (full config, TPU v5e target, reads the dry-run artifact) runs
 through the SAME campaign machinery — predictions persist as ``pred``
 records (curve + fit + HardwareConfig/terms/settings) and replay on re-run:

@@ -20,9 +20,15 @@ change to the census, the corruption detectors, or the resource tagging
 fails loudly instead of silently re-verdicting. Compiled-HLO fixtures are
 pin-dependent only at REGEN time; the replay itself never compiles.
 
+Also writes ``regimes.json`` — the SPMXV regime-transition map: the
+spmv_ell swap-probability sweep under per-q forced synthetic clocks
+(``tests/test_regimes.py`` owns the sweep; this script just persists its
+output), pinning each q's label/confidence/Abs^raw and hence where the
+verdict crosses from compute through mixed into l1.
+
 Regenerate ONLY when a change to curve assembly / fitting / classification
-/ the audit pass is intentional, and say so in the commit that updates
-these files.
+/ the audit pass / the regime-transition model is intentional, and say so
+in the commit that updates these files.
 
 NOTE (measurement-integrity guard): the runtime quality guard grew the
 store schema — "quality" records, an optional "spread" on points and
@@ -156,6 +162,28 @@ def replay(store_path: str) -> dict:
 
 HLO_DIR = os.path.join(HERE, "hlo")
 AUDIT_EXPECTED = os.path.join(HERE, "audit_expected.json")
+REGIMES_JSON = os.path.join(HERE, "regimes.json")
+
+
+def build_regime_map() -> dict:
+    """Delegate to tests/test_regimes.py's sweep (the harness owns the
+    forced-shape model; regen only persists what it produces)."""
+    import tempfile
+
+    sys.path.insert(0, os.path.join(HERE, ".."))
+    import test_regimes
+
+    prior = os.environ.get("REPRO_SYNTH_MEASURE")
+    os.environ["REPRO_SYNTH_MEASURE"] = test_regimes.BASE_S
+    try:
+        with tempfile.TemporaryDirectory() as d:
+            return test_regimes.sweep_regime_map(
+                os.path.join(d, "regimes.jsonl"))
+    finally:
+        if prior is None:
+            del os.environ["REPRO_SYNTH_MEASURE"]
+        else:
+            os.environ["REPRO_SYNTH_MEASURE"] = prior
 
 
 def _audit_targets():
@@ -223,6 +251,11 @@ def main() -> None:
         f.write("\n")
     print(f"wrote {HLO_DIR}/*.txt.gz and {AUDIT_EXPECTED} "
           f"({len(audits)} audited pairs)")
+    regimes = build_regime_map()
+    with open(REGIMES_JSON, "w") as f:
+        json.dump(regimes, f, indent=1)     # sweep order matters: no sort
+        f.write("\n")
+    print(f"wrote {REGIMES_JSON} ({len(regimes)} q-cells)")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,8 @@ PUBLIC_MODULES = [
     "repro.fleet.launchers",
     "repro.fleet.cli",
     "repro.core.campaign",
+    "repro.core.calibration",
+    "repro.core.strategy",
     "repro.kernels.region",
     "repro.launch.probe",
 ]

@@ -1,0 +1,132 @@
+"""SPMXV regime-transition harness: sweep the spmv_ell swap-probability
+axis as a pallas family under the deterministic synthetic clock and pin
+where the verdict flips.
+
+Fig. 7's point is that one kernel CROSSES regimes as its fill pattern
+degrades: the band matrix (q=0) is compute-shaped, heavy swapping (q=1)
+is load/store-bound. The real crossover depends on the machine; this
+harness forces it deterministically — each family member's modes run
+under per-q ``SynthShape`` clocks (fp absorption grows with q, vmem
+absorption collapses with q) so the classifier sees a kernel marching
+from the compute corner through the mixed middle into the LSU corner:
+
+    q:        0.0       0.25     0.5      0.75     1.0
+    verdict:  compute   mixed    mixed    l1       l1
+
+The whole (q -> label, confidence, Abs^raw) map is golden-pinned in
+``tests/golden/regimes.json`` (regenerate via tests/golden/regen.py and
+say why in the commit); the transition point — the first q classified
+``l1`` — is pinned at ``TRANSITION_Q`` on top of the map, so a classifier
+or fit change that MOVES the crossover fails that assertion by name even
+if someone regenerates the map without looking.
+"""
+import json
+import os
+
+import pytest
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "regimes.json")
+
+#: the swept swap probabilities and the pinned crossover (first ``l1`` q)
+QS = (0.0, 0.25, 0.5, 0.75, 1.0)
+TRANSITION_Q = 0.75
+
+#: synthetic clock base seconds — any value works (the map stores Abs^raw,
+#: which is scale-free); pinned so regen and test agree byte-for-byte
+BASE_S = "1e-3"
+
+
+def _forced_family():
+    """The spmxv family over QS, each member's modes forced onto its per-q
+    clock shape: fp knee 1 + 30q (fp noise absorbed ever deeper as swaps
+    dilute the FLOP pressure), vmem knee max(0, 25 - 30q) (vmem slack
+    collapsing as gather traffic takes over)."""
+    from repro.core.absorption import SynthShape
+    from repro.core.calibration import forced_regime
+    from repro.kernels.region import pallas_family
+
+    members = pallas_family("spmxv", [512], qs=list(QS), backend="interpret")
+    out = []
+    for q, base in zip(QS, members):
+        shapes = {"fp": SynthShape(knee=1.0 + 30.0 * q, slope=0.2),
+                  "vmem": SynthShape(knee=max(0.0, 25.0 - 30.0 * q),
+                                     slope=0.2)}
+        out.append((q, forced_regime(base, base.name, shapes)))
+    return out
+
+
+def sweep_regime_map(store_path: str) -> dict:
+    """Run (or replay) the forced q-sweep into ``store_path`` and return
+    the ordered {region: {q, label, confidence, absorptions}} map — the
+    exact structure tests/golden/regimes.json pins. Requires the synthetic
+    clock (callers set REPRO_SYNTH_MEASURE)."""
+    from repro.core.campaign import Campaign
+    from repro.core.controller import Controller
+
+    camp = Campaign(store_path, Controller(reps=2, verify_payload=False))
+    out = {}
+    for q, target in _forced_family():
+        rep = camp.characterize(target, ["fp", "vmem"])
+        out[target.name] = {
+            "q": q,
+            "label": rep.bottleneck.label,
+            "confidence": rep.bottleneck.confidence,
+            "absorptions": {m: r.fit.k1 for m, r in rep.results.items()},
+        }
+    return out
+
+
+@pytest.fixture(scope="module")
+def regime_map(tmp_path_factory):
+    os.environ.setdefault("REPRO_SYNTH_MEASURE", BASE_S)
+    store = str(tmp_path_factory.mktemp("regimes") / "regimes.jsonl")
+    try:
+        return sweep_regime_map(store)
+    finally:
+        if os.environ.get("REPRO_SYNTH_MEASURE") == BASE_S:
+            del os.environ["REPRO_SYNTH_MEASURE"]
+
+
+def test_verdict_flips_at_the_pinned_transition(regime_map):
+    labels = [(cell["q"], cell["label"]) for cell in regime_map.values()]
+    assert [q for q, _ in labels] == list(QS)          # sweep order kept
+    flips = [q for q, label in labels if label == "l1"]
+    assert flips, "the sweep never reached the LSU regime"
+    assert flips[0] == TRANSITION_Q
+    # l1 is absorbing: once crossed, the verdict stays
+    assert flips == [q for q, _ in labels if q >= TRANSITION_Q]
+    # and the walk starts in the compute corner, through the mixed middle
+    assert labels[0][1] == "compute"
+    assert {label for q, label in labels
+            if 0.0 < q < TRANSITION_Q} == {"mixed"}
+
+
+def test_regime_map_matches_golden(regime_map):
+    if not os.path.exists(GOLDEN):
+        pytest.fail(f"{GOLDEN} missing — generate via "
+                    "PYTHONPATH=src python tests/golden/regen.py")
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert list(regime_map) == list(golden), \
+        "family names changed — regenerate regimes.json and say why"
+    for region, want in golden.items():
+        got = regime_map[region]
+        assert got["label"] == want["label"], region
+        assert got["q"] == pytest.approx(want["q"]), region
+        assert got["confidence"] == pytest.approx(want["confidence"]), region
+        assert set(got["absorptions"]) == set(want["absorptions"]), region
+        for mode, k1 in want["absorptions"].items():
+            assert got["absorptions"][mode] == pytest.approx(k1), \
+                f"{region}/{mode}"
+
+
+def test_regime_sweep_replays_deterministically(regime_map, tmp_path):
+    """The same sweep into a fresh store reproduces the map exactly — the
+    synthetic clock is a function of (mode, k, shape), nothing else."""
+    os.environ.setdefault("REPRO_SYNTH_MEASURE", BASE_S)
+    try:
+        again = sweep_regime_map(str(tmp_path / "again.jsonl"))
+    finally:
+        if os.environ.get("REPRO_SYNTH_MEASURE") == BASE_S:
+            del os.environ["REPRO_SYNTH_MEASURE"]
+    assert again == regime_map

@@ -15,7 +15,10 @@ Pinned properties:
   * QUALITY EVIDENCE — measurement-quality records ride every property
     above (same (region, mode, k) last-wins supersede as points), a meta
     conflict discards them with the rest of the pair's measured evidence,
-    and ``compact_store`` preserves the quality view in both layouts.
+    and ``compact_store`` preserves the quality view in both layouts;
+  * CALIB RECORDS — fitted-threshold records supersede last-wins by
+    hardware key, survive merge and compaction in both layouts, and are
+    NOT settings-scoped (a meta conflict never drops them).
 """
 try:
     import hypothesis
@@ -58,7 +61,16 @@ quality = st.fixed_dictionaries({
     "reps": st.sampled_from([2, 5]),
     "detail": st.just(None),
 })
-records = st.lists(st.one_of(point, sens, quality), max_size=24)
+calib = st.fixed_dictionaries({
+    "kind": st.just("calib"),
+    "hw": st.sampled_from(["cpu", "tpu"]),
+    "low": st.floats(0.5, 8.0, allow_nan=False, allow_infinity=False),
+    "high": st.floats(8.5, 64.0, allow_nan=False, allow_infinity=False),
+    "fitted": st.booleans(),
+    "reps": st.sampled_from([2, 5]),
+    "samples": st.just([]),
+})
+records = st.lists(st.one_of(point, sens, quality, calib), max_size=24)
 
 
 def _write(path, recs):
@@ -93,8 +105,11 @@ def test_merge_idempotent(recs_a, recs_b):
 @hypothesis.settings(max_examples=40, deadline=None)
 def test_merge_order_independent_for_disjoint_stores(recs_a, recs_b):
     # force key-disjointness: each store only ever sees its own region
-    recs_a = [dict(r, region="rA") for r in recs_a]
-    recs_b = [dict(r, region="rB") for r in recs_b]
+    # (and, for hw-keyed calib records, its own hardware)
+    recs_a = [dict(r, hw="cpu") if r["kind"] == "calib"
+              else dict(r, region="rA") for r in recs_a]
+    recs_b = [dict(r, hw="tpu") if r["kind"] == "calib"
+              else dict(r, region="rB") for r in recs_b]
     with tempfile.TemporaryDirectory() as d:
         a, b = os.path.join(d, "a.jsonl"), os.path.join(d, "b.jsonl")
         _write(a, recs_a)
@@ -113,8 +128,11 @@ def test_later_records_supersede_within_a_store(recs):
         _write(path, recs)
         store = _load(path)
         # the in-memory view must equal a left-to-right last-wins fold
-        want_points, want_sens, want_quality = {}, {}, {}
+        want_points, want_sens, want_quality, want_calib = {}, {}, {}, {}
         for rec in recs:
+            if rec["kind"] == "calib":      # keyed by hardware, not pair
+                want_calib[rec["hw"]] = rec
+                continue
             key = (rec["region"], rec["mode"])
             if rec["kind"] == "point":
                 want_points.setdefault(key, {})[rec["k"]] = rec["t"]
@@ -125,6 +143,7 @@ def test_later_records_supersede_within_a_store(recs):
         assert store.points == want_points
         assert store.sens == want_sens
         assert store.quality == want_quality
+        assert store.calib == want_calib
 
 
 meta = st.fixed_dictionaries({
@@ -134,7 +153,8 @@ meta = st.fixed_dictionaries({
     "reps": st.sampled_from([2, 3]),      # two settings -> real conflicts
     "compile_once": st.just(True),
 })
-mixed_records = st.lists(st.one_of(point, sens, meta, quality), max_size=24)
+mixed_records = st.lists(st.one_of(point, sens, meta, quality, calib),
+                         max_size=24)
 
 
 @hypothesis.given(mixed_records, st.lists(st.integers(0, 24), max_size=3),
@@ -195,6 +215,7 @@ def test_merge_replay_is_union_when_metas_agree(recs_a, recs_b):
         assert merged.points == want
         assert merged.sens == {**va.sens, **vb.sens}
         assert merged.quality == want_q
+        assert merged.calib == {**va.calib, **vb.calib}
 
 
 @hypothesis.given(st.lists(quality, min_size=1, max_size=12))
@@ -220,6 +241,27 @@ def test_meta_conflict_discards_quality_evidence(qrecs):
         assert _load(c).quality == {}
 
 
+@hypothesis.given(st.lists(calib, min_size=1, max_size=8), st.booleans())
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_calib_records_are_not_settings_scoped(crecs, conflict):
+    """Calibrated thresholds are per-hardware, not per-measurement-settings:
+    a meta conflict that discards a pair's points/quality must leave the
+    calib view untouched, and the last record per hw wins."""
+    meta2 = {"kind": "meta", "region": "rA", "mode": "m1", "reps": 2,
+             "compile_once": True}
+    metas = [meta2] + ([dict(meta2, reps=3)] if conflict else [])
+    want = {}
+    for rec in crecs:
+        want[rec["hw"]] = rec
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "s.jsonl")
+        _write(path, [metas[0]] + crecs + metas[1:])
+        assert _load(path).calib == want
+        m = os.path.join(d, "m.jsonl")
+        merge_stores(m, [path])
+        assert _load(m).calib == want
+
+
 @hypothesis.given(mixed_records, st.booleans())
 @hypothesis.settings(max_examples=40, deadline=None)
 def test_compaction_preserves_the_quality_view(recs, segmented):
@@ -240,3 +282,4 @@ def test_compaction_preserves_the_quality_view(recs, segmented):
         assert after.points == before.points
         assert after.sens == before.sens
         assert after.quality == before.quality
+        assert after.calib == before.calib

@@ -1,0 +1,218 @@
+"""Strategy trees: decision-table completeness against the historical
+if-chain, vocabulary equivalence, the YAML-subset parser, guarded-eval
+rejection, and the calibrated-confidence regression.
+
+The historical ``classify`` if-chain was deleted when the default strategy
+tree replaced it; ``_legacy_classify`` below is a frozen verbatim copy (the
+reference implementation, kept ONLY here) and the completeness test proves
+the shipped tree reproduces it on every cell of a boundary-exhaustive
+decision table — all four slots crossed over every threshold boundary, the
+ICI group present/saturated/slack, under default AND non-default
+thresholds.
+"""
+import glob
+import os
+
+import pytest
+
+from repro.core.classifier import HIGH, LOW, classify
+from repro.core.strategy import (StrategyError, StrategyTree,
+                                 _parse_simple_yaml, default_tree,
+                                 strategies_dir)
+
+# ---------------------------------------------------------------------------
+# The pre-strategy-tree classify if-chain, verbatim (labels, confidences and
+# explanation strings). Do NOT edit: it is the fixed point the tree must
+# reproduce.
+# ---------------------------------------------------------------------------
+
+
+def _legacy_classify(fp, l1, mem, chase, icis, *, low, high):
+    known = {k: v for k, v in dict(fp=fp, l1=l1, mem=mem, chase=chase).items()
+             if v is not None}
+
+    def conf(sep):
+        return max(0.0, min(1.0, sep / high))
+
+    if icis and min(icis.values()) <= low:
+        others = [v for v in known.values() if v is not None]
+        if not others or min(others) >= high / 2:
+            worst = min(icis, key=icis.get)
+            return ("ici",
+                    conf((min(others) if others else high) - icis[worst]),
+                    f"collective noise ({worst}) not absorbed while core "
+                    "resources have slack -> interconnect-bound")
+    if fp is not None and fp <= low and (
+            (l1 is not None and l1 >= max(high / 2, 3.0 * max(fp, 1.0)))
+            or (mem is not None and mem >= high)):
+        return ("compute", conf((l1 if l1 is not None else mem) - fp),
+                "fp noise degrades immediately while data-access noise is "
+                "absorbed -> compute-bound (HACCmk signature)")
+    if mem is not None and mem <= low and (fp is None or fp >= high) \
+            and (l1 is None or l1 > low):
+        return ("bandwidth", conf((fp or high) - mem),
+                "memory-stream noise not absorbed while fp noise is -> "
+                "bandwidth-saturated (parallel-STREAM signature)")
+    if (mem is not None and mem > low) and (fp is None or fp >= high):
+        return ("latency", conf(mem - low),
+                "substantial memory noise absorbed (stalls come from load "
+                "dependencies, not bandwidth) -> latency-bound "
+                "(lat_mem_rd signature)")
+    if known and max(known.values()) <= low:
+        return ("overlap", conf(low - max(known.values()) + high / 2),
+                "no mode is absorbed: either full resource overlap (Table 3 "
+                "case 3) or a shared upstream bottleneck (case 4) — run the "
+                "DECAN cross-check to distinguish")
+    if l1 is not None and l1 <= low and (fp is None or fp > low):
+        return ("l1", conf((fp or high) - l1),
+                "L1/LSU noise degrades first -> load/store-unit bound "
+                "(the -O0 matmul signature, Fig. 4a)")
+    return ("mixed", 0.3,
+            "ambiguous absorption levels (moderate everywhere) indicating "
+            "strong interdependencies (Table 3 case 4)")
+
+
+def _cells(low, high):
+    """Boundary-exhaustive slot values: every comparison in the chain
+    (<= low, > low, >= high/2, >= high, the 3*max(fp,1) pivot) has values
+    on both sides and exactly at the cut."""
+    vals = (None, 0.0, 3.0, low, low + 0.125, high / 2, high - 0.25, high,
+            high + 6.0)
+    ici_options = ({}, {"ici_allreduce": 0.0},
+                   {"ici_allreduce": high + 1.0},
+                   {"ici_allreduce": low, "ici_all2all": high})
+    for fp in vals:
+        for l1 in vals:
+            for mem in vals:
+                for chase in (None, 0.0, high):
+                    for icis in ici_options:
+                        yield fp, l1, mem, chase, icis
+
+
+def _signature(fp, l1, mem, chase, icis):
+    sig = {}
+    if fp is not None:
+        sig["fp_add"] = fp
+    if l1 is not None:
+        sig["l1_ld"] = l1
+    if mem is not None:
+        sig["mem_ld"] = mem
+    if chase is not None:
+        sig["chase"] = chase
+    sig.update(icis)
+    return sig
+
+
+@pytest.mark.parametrize("low,high", [(LOW, HIGH), (4.5, 16.5)])
+def test_tree_matches_legacy_chain_on_every_decision_cell(low, high):
+    checked = 0
+    for fp, l1, mem, chase, icis in _cells(low, high):
+        sig = _signature(fp, l1, mem, chase, icis)
+        want = _legacy_classify(fp, l1, mem, chase, icis, low=low, high=high)
+        got = classify(sig, low=low, high=high)
+        cell = f"cell {sig!r} low={low} high={high}"
+        assert got.label == want[0], cell
+        assert got.confidence == pytest.approx(want[1]), cell
+        assert got.explanation == want[2], cell
+        checked += 1
+    assert checked == 9 * 9 * 9 * 3 * 4      # nobody shrank the table
+
+
+def test_vocabulary_equivalence():
+    """The same signature expressed in the loop-level, graph-level and
+    Pallas vocabularies binds the same slots and classifies identically."""
+    loop = {"fp_add": 0.0, "l1_ld": 25.0, "mem_ld": 25.0}
+    graph = {"fp_add32": 0.0, "vmem_ld": 25.0, "hbm_stream": 25.0}
+    pallas = {"fp": 0.0, "vmem": 25.0, "mem_ld": 25.0}
+    want = classify(loop)
+    for sig in (graph, pallas):
+        got = classify(sig)
+        assert (got.label, got.confidence) == (want.label, want.confidence)
+    # chase aliases too
+    assert classify({"chase": 1.0, "fp_add": 21.0}).label \
+        == classify({"hbm_latency": 1.0, "fp_add32": 21.0}).label \
+        == classify({"memory_chase": 1.0, "fp": 21.0}).label
+
+
+def test_classify_reports_the_decision_path():
+    rep = classify({"fp_add": 0.0, "l1_ld": 25.0, "mem_ld": 25.0})
+    assert rep.path is not None
+    assert rep.path["strategy"] == "default"
+    assert rep.path["fired"] == "compute"
+    assert rep.path["nodes"][-1] == {"node": "compute", "fired": True}
+    assert all(not n["fired"] for n in rep.path["nodes"][:-1])
+    assert rep.path["low"] == LOW and rep.path["high"] == HIGH
+    assert rep.path["slots"]["fp"] == 0.0
+
+
+def test_confidence_uses_the_effective_high_threshold():
+    """Regression: confidence is separation / EFFECTIVE high, so calibrated
+    thresholds change the saturation point, not just the label cuts."""
+    sig = {"fp_add": 25.0, "l1_ld": 25.0, "mem_ld": 8.0}   # latency signature
+    default = classify(sig)
+    calibrated = classify(sig, low=4.5, high=16.5)
+    assert default.label == calibrated.label == "latency"
+    assert default.confidence == pytest.approx((8.0 - LOW) / HIGH)
+    assert calibrated.confidence == pytest.approx((8.0 - 4.5) / 16.5)
+    assert calibrated.confidence > default.confidence
+
+
+# ---------------------------------------------------------------------------
+# parser + loader
+# ---------------------------------------------------------------------------
+
+def test_subset_parser_agrees_with_pyyaml_on_every_shipped_tree():
+    yaml = pytest.importorskip("yaml")
+    paths = sorted(glob.glob(os.path.join(strategies_dir(), "*.yaml")))
+    assert paths, "no shipped strategy trees found"
+    for path in paths:
+        with open(path) as f:
+            text = f.read()
+        assert _parse_simple_yaml(text) == yaml.safe_load(text), path
+
+
+def test_default_tree_loads_and_is_cached():
+    t1 = default_tree()
+    assert t1 is default_tree()
+    assert [n.name for n in t1.nodes][-1] == "mixed"     # catch-all last
+    assert t1.name == "default"
+
+
+def _spec(**over):
+    base = {
+        "strategy": 1,
+        "name": "t",
+        "slots": {"fp": ["fp_add"]},
+        "nodes": [{"name": "n", "label": "x", "when": "True",
+                   "fixed": 0.5, "explanation": "e"}],
+    }
+    base.update(over)
+    return base
+
+
+def test_loader_rejects_unknown_names_lambdas_and_bad_nodes():
+    with pytest.raises(StrategyError, match="unknown name"):
+        StrategyTree(_spec(nodes=[{"name": "n", "label": "x",
+                                   "when": "__import__('os')",
+                                   "fixed": 0.5, "explanation": "e"}]))
+    with pytest.raises(StrategyError, match="not allowed"):
+        StrategyTree(_spec(nodes=[{"name": "n", "label": "x",
+                                   "when": "min([v for v in known])",
+                                   "fixed": 0.5, "explanation": "e"}]))
+    with pytest.raises(StrategyError, match="exactly one"):
+        StrategyTree(_spec(nodes=[{"name": "n", "label": "x", "when": "True",
+                                   "sep": "fp", "fixed": 0.5,
+                                   "explanation": "e"}]))
+    with pytest.raises(StrategyError, match="missing 'label'"):
+        StrategyTree(_spec(nodes=[{"name": "n", "when": "True",
+                                   "fixed": 0.5, "explanation": "e"}]))
+    with pytest.raises(StrategyError, match="schema"):
+        StrategyTree(_spec(strategy=2))
+
+
+def test_tree_without_a_firing_node_raises():
+    t = StrategyTree(_spec(nodes=[{"name": "never", "label": "x",
+                                   "when": "False", "fixed": 0.5,
+                                   "explanation": "e"}]))
+    with pytest.raises(StrategyError, match="no node fired"):
+        t.decide({"fp_add": 1.0}, low=LOW, high=HIGH)
